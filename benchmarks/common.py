@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: synthetic activation generators that mimic the
+paper's observation (Fig. 2) that K/V vectors cluster, an attention-quality
+metric, and a timing helper."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq_attention as pqa
+
+
+def clustered_activations(rng, n: int, d: int, n_modes: int = 24,
+                          noise: float = 0.15, heavy_frac: float = 0.05
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+  """KV-like activations: tight clusters (paper Fig. 2) + heavy-hitter tokens.
+
+  Returns (keys, values, attention_weights) where attention_weights mimics the
+  Eq. 1 importance distribution (a few tokens soak up most attention mass).
+  """
+  centers = rng.normal(size=(n_modes, d)) * 2.0
+  ids = rng.integers(0, n_modes, n)
+  k = centers[ids] + rng.normal(size=(n, d)) * noise
+  v = centers[(ids * 7 + 3) % n_modes] + rng.normal(size=(n, d)) * noise
+  w = rng.gamma(0.3, 1.0, size=n)
+  heavy = rng.choice(n, max(int(n * heavy_frac), 1), replace=False)
+  w[heavy] *= 50
+  return (jnp.asarray(k, jnp.float32), jnp.asarray(v, jnp.float32),
+          jnp.asarray(w / w.sum() * n, jnp.float32))
+
+
+def attention_quality(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      out_approx: jnp.ndarray, scale: float) -> dict:
+  """Quality of an approximate attention output vs the exact one."""
+  n = k.shape[0]
+  exact = pqa.exact_decode_attention(q, k, v, jnp.ones((n,), bool), scale)
+  err = jnp.linalg.norm(out_approx - exact, axis=-1)
+  base = jnp.linalg.norm(exact, axis=-1)
+  rel = float(jnp.mean(err / jnp.maximum(base, 1e-9)))
+  cos = float(jnp.mean(jnp.sum(out_approx * exact, -1)
+                       / jnp.maximum(jnp.linalg.norm(out_approx, axis=-1)
+                                     * base, 1e-9)))
+  return {"rel_err": rel, "cosine": cos,
+          "score_proxy": max(0.0, 100.0 * cos)}
+
+
+def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+  for _ in range(warmup):
+    jax.block_until_ready(fn(*args))
+  t0 = time.perf_counter()
+  for _ in range(iters):
+    jax.block_until_ready(fn(*args))
+  return (time.perf_counter() - t0) / iters * 1e6
+
+
+def csv_line(name: str, us: float, derived: str) -> str:
+  return f"{name},{us:.1f},{derived}"

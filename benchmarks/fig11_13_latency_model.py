@@ -1,0 +1,102 @@
+"""Paper Fig. 11-13: decode-latency decomposition via a bandwidth model.
+
+The paper's speedups decompose as (Fig. 13):
+  gpu+cpu -> gpu-inf : offload elimination  ~ HBM/PCIe bandwidth ratio (11.39x)
+  gpu-inf -> gpu+pq  : PQ compression       ~ KV byte-reduction   (5.52x)
+  gpu+pq  -> aqpim   : in-memory execution  ~ internal-BW / co-design (3.85x)
+
+We reproduce the same decomposition for the TPU adaptation with measured bytes:
+decode-attention bytes from our cache accounting (exact vs PQ), hardware
+constants (PCIe 64 GB/s host link, HBM 819 GB/s v5e, GPU HBM 3.35 TB/s for the
+paper-faithful row), and report each ratio next to the paper's claim."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+# bandwidth constants (bytes/s)
+PCIE = 256e9 / 8          # paper: H100 ~26x gap; PCIe gen5 x16 eff. ~32 GB/s/dir
+PCIE_PAPER = 256e9        # the paper's aggregate PCIe figure
+GPU_HBM = 3.35e12         # H100
+TPU_HBM = 819e9           # v5e per chip
+TPU_VMEM = 20e12          # ~VMEM bandwidth per core (internal-BW analogue)
+PIM_INTERNAL_X = 7.2      # paper: AttAcc! internal bandwidth vs GPU HBM
+
+
+def decode_attention_bytes(n, d, kv_heads, layers, m=32, idx_bytes=2,
+                           k_cent=512, pq=False):
+  """Bytes read per decode step for attention (one batch element)."""
+  if not pq:
+    return layers * kv_heads * n * d * 2 * 2          # exact bf16 K+V
+  idx = layers * kv_heads * n * m * idx_bytes * 2     # indices K+V
+  cb = layers * kv_heads * 2 * m * k_cent * (d // m) * 2
+  return idx + cb
+
+
+def run(n: int = 32768, d: int = 128, kv_heads: int = 8, layers: int = 32
+        ) -> list:
+  """Defaults: mistral-7b-like (the paper's model) at 32k context."""
+  lines = []
+  exact = decode_attention_bytes(n, d, kv_heads, layers, pq=False)
+  pq = decode_attention_bytes(n, d, kv_heads, layers, pq=True)
+  pq8 = decode_attention_bytes(n, d, kv_heads, layers, pq=True, idx_bytes=1,
+                               k_cent=256)
+
+  # Fig. 13 decomposition (paper-faithful constants)
+  t_gpu_cpu = exact / PCIE_PAPER          # KV overflows -> streams over PCIe
+  t_gpu_inf = exact / GPU_HBM             # imaginary infinite GPU memory
+  t_gpu_pq = pq / GPU_HBM                 # PQ on GPU (idealized, as the paper)
+  t_aqpim = pq / (GPU_HBM * PIM_INTERNAL_X)
+
+  lines.append(common.csv_line(
+      "fig13_offload_elimination", 0.0,
+      f"speedup={t_gpu_cpu / t_gpu_inf:.2f}x;paper=11.39x"))
+  lines.append(common.csv_line(
+      "fig13_pq_compression", 0.0,
+      f"speedup={t_gpu_inf / t_gpu_pq:.2f}x;paper=5.52x;"
+      f"kv_reduction={exact / pq:.2f}x;paper_kv=6.53x"))
+  lines.append(common.csv_line(
+      "fig13_pim_internal", 0.0,
+      f"speedup={t_gpu_pq / t_aqpim:.2f}x;paper=3.85x"))
+  lines.append(common.csv_line(
+      "fig13_uint8_indices", 0.0,
+      f"kv_reduction={exact / pq8:.2f}x (K=256, uint8 packing)"))
+
+  # TPU adaptation rows: same decomposition on v5e constants
+  t_tpu_exact = exact / TPU_HBM
+  t_tpu_pq = pq / TPU_HBM
+  t_tpu_pq_vmem = pq / TPU_VMEM   # table resident in VMEM (our kernel)
+  lines.append(common.csv_line(
+      "fig13_tpu_pq_vs_exact", 0.0,
+      f"speedup={t_tpu_exact / t_tpu_pq:.2f}x (HBM-bytes ratio on v5e)"))
+  lines.append(common.csv_line(
+      "fig13_tpu_host_offload_penalty", 0.0,
+      f"penalty={ (exact / PCIE) / t_tpu_exact:.1f}x if KV overflowed to host"))
+
+  # Fig. 12: per-step decode scaling with input length
+  for nn in (4096, 16384, 65536, 262144, 524288):
+    e = decode_attention_bytes(nn, d, kv_heads, layers, pq=False)
+    p = decode_attention_bytes(nn, d, kv_heads, layers, pq=True)
+    lines.append(common.csv_line(
+        f"fig12_n{nn}", 0.0,
+        f"exact_ms={e / TPU_HBM * 1e3:.3f};pq_ms={p / TPU_HBM * 1e3:.3f};"
+        f"speedup={e / p:.2f}x"))
+
+  # Fig. 11: total time with growing output length (matmul part fixed by PQ)
+  for out_len in (512, 2048, 8192):
+    # per-step attention bytes grow with n; FFN/proj bytes constant
+    ffn_bytes = 12 * 4096 * 14336 / 8 * 2 / 64   # per-chip slice, bf16
+    t_exact = sum((decode_attention_bytes(n + i, d, kv_heads, layers)
+                   / TPU_HBM) for i in range(0, out_len, max(out_len // 8, 1)))
+    t_pq = sum((decode_attention_bytes(n + i, d, kv_heads, layers, pq=True)
+                / TPU_HBM) for i in range(0, out_len, max(out_len // 8, 1)))
+    lines.append(common.csv_line(
+        f"fig11_outlen{out_len}", 0.0,
+        f"attn_speedup={t_exact / t_pq:.2f}x;paper_total_up_to=2.33x"))
+  return lines
+
+
+if __name__ == "__main__":
+  for line in run():
+    print(line)

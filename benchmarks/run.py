@@ -1,0 +1,39 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  Roofline rows require the dry-run
+JSONs (python -m repro.launch.dryrun); other benches are self-contained."""
+import sys
+
+
+def main() -> None:
+  from benchmarks import (
+      fig10_tradeoff,
+      fig11_13_latency_model,
+      table2_table3_sweeps,
+      table4_ablation,
+      table5_indirection,
+  )
+  from benchmarks import roofline
+
+  print("name,us_per_call,derived")
+  modules = [
+      ("table2/3", table2_table3_sweeps),
+      ("table4", table4_ablation),
+      ("fig10", fig10_tradeoff),
+      ("fig11-13", fig11_13_latency_model),
+      ("table5", table5_indirection),
+      ("roofline", roofline),
+  ]
+  failures = 0
+  for name, mod in modules:
+    try:
+      for line in mod.run():
+        print(line)
+    except Exception as e:  # noqa: BLE001
+      failures += 1
+      print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}")
+  if failures:
+    sys.exit(1)
+
+
+if __name__ == '__main__':
+  main()

@@ -1,0 +1,47 @@
+"""Quickstart: AQPIM end to end on one host in ~2 minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. builds a reduced tinyllama, trains it briefly on the synthetic pipeline,
+2. prefises a prompt — which runs the paper's importance-weighted windowed
+   clustering and builds the PQ-compressed KV cache,
+3. decodes tokens directly on the compressed cache (lookup+sum attention),
+4. compares against the exact-KV path.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.train import TrainRun
+from repro.launch.serve import ServeRun
+
+
+def main():
+  print("=== 1. train a reduced tinyllama on the synthetic pipeline ===")
+  run = TrainRun(arch="tinyllama-1.1b", reduced=True, steps=40,
+                 batch=4, seq=128, lr=1e-3, log_every=10)
+  _, losses, _ = run.run()
+  print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}\n")
+
+  print("=== 2./3. serve with the PQ-compressed KV cache (AQPIM) ===")
+  pq = ServeRun(arch="tinyllama-1.1b", reduced=True, batch=2,
+                prompt_len=96, gen=12, pq=True).run()
+  print(f"PQ cache: prefill {pq['prefill_s']:.2f}s, "
+        f"decode {pq['tok_per_s']:.1f} tok/s")
+  print("tokens:", pq["tokens"][0].tolist())
+
+  print("\n=== 4. exact-KV reference path ===")
+  ex = ServeRun(arch="tinyllama-1.1b", reduced=True, batch=2,
+                prompt_len=96, gen=12, pq=False).run()
+  print(f"exact KV: decode {ex['tok_per_s']:.1f} tok/s")
+  print("tokens:", ex["tokens"][0].tolist())
+  agree = float(np.mean(np.asarray(pq["tokens"]) == np.asarray(ex["tokens"])))
+  print(f"\ntoken agreement PQ vs exact (untrained-model proxy): {agree:.2f}")
+
+
+if __name__ == "__main__":
+  main()

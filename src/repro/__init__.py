@@ -1,0 +1,2 @@
+"""repro: AQPIM (PIM-aware KV-cache Product Quantization) on TPU, in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Sharded async elastic checkpointing."""
+from repro.checkpoint import ckpt
+
+__all__ = ["ckpt"]

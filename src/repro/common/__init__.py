@@ -1,0 +1,29 @@
+from repro.common.types import (
+    Array,
+    DType,
+    HardwareSpec,
+    Params,
+    PRNGKey,
+    PyTree,
+    Shape,
+    V5E,
+    cdiv,
+    pytree_param_count,
+    pytree_size_bytes,
+    round_up,
+)
+
+__all__ = [
+    "Array",
+    "DType",
+    "HardwareSpec",
+    "Params",
+    "PRNGKey",
+    "PyTree",
+    "Shape",
+    "V5E",
+    "cdiv",
+    "pytree_param_count",
+    "pytree_size_bytes",
+    "round_up",
+]

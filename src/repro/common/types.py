@@ -1,0 +1,62 @@
+"""Shared type aliases and small utilities used across the repro framework."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+Params = Mapping[str, Any]
+PRNGKey = jax.Array
+Shape = Sequence[int]
+DType = Any
+
+
+def pytree_size_bytes(tree: PyTree) -> int:
+  """Total bytes of all array leaves (ShapeDtypeStructs included)."""
+  leaves = jax.tree_util.tree_leaves(tree)
+  total = 0
+  for leaf in leaves:
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+      n = 1
+      for s in leaf.shape:
+        n *= int(s)
+      total += n * jnp.dtype(leaf.dtype).itemsize
+  return total
+
+
+def pytree_param_count(tree: PyTree) -> int:
+  leaves = jax.tree_util.tree_leaves(tree)
+  total = 0
+  for leaf in leaves:
+    if hasattr(leaf, "shape"):
+      n = 1
+      for s in leaf.shape:
+        n *= int(s)
+      total += n
+  return total
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+  """Roofline constants for the target accelerator (TPU v5e-like)."""
+  name: str = "tpu-v5e"
+  peak_flops_bf16: float = 197e12   # per chip, FLOP/s
+  hbm_bw: float = 819e9             # bytes/s per chip
+  ici_bw: float = 50e9              # bytes/s per link
+  hbm_capacity: float = 16e9        # bytes per chip
+  vmem_capacity: float = 128e6      # bytes per core
+
+
+V5E = HardwareSpec()
+
+
+def cdiv(a: int, b: int) -> int:
+  return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+  return cdiv(a, b) * b

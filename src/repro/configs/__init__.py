@@ -1,0 +1,4 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+from repro.configs.registry import ARCHS, get_arch
+
+__all__ = ["ARCHS", "get_arch"]

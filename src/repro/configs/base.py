@@ -1,0 +1,167 @@
+"""Config schema: architecture, shapes, PQ/runtime settings.
+
+Every assigned architecture is a ModelConfig instance in its own module
+(src/repro/configs/<id>.py) with the exact published hyperparameters, plus a
+`reduced()` smoke-scale variant of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import kv_cache as kvc
+from repro.core import pq as pqlib
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+  name: str
+  family: str                  # dense | moe | ssm | hybrid | audio | vlm
+  n_layers: int
+  d_model: int
+  n_heads: int
+  n_kv_heads: int
+  d_ff: int
+  vocab_size: int
+  head_dim: int = 0            # 0 -> d_model // n_heads
+
+  # MoE
+  n_experts: int = 0
+  top_k: int = 0
+  moe_d_ff: int = 0
+  n_shared_experts: int = 0
+  capacity_factor: float = 1.25
+
+  # SSM / hybrid
+  attn_free: bool = False      # rwkv6: no attention, no KV cache
+  hybrid: bool = False         # hymba: parallel attn + SSM heads
+  ssm_state: int = 0
+  ssm_d_inner: int = 0
+
+  # multimodal
+  cross_attn_period: int = 0   # every k-th layer is cross-attn (vlm)
+  n_modal_tokens: int = 0      # precomputed patch/frame embeddings (stub frontend)
+  frontend: str = "none"       # none | audio_frames | vision_patches
+
+  rope_theta: float = 500000.0
+  norm_eps: float = 1e-5
+  dtype_str: str = "bfloat16"
+
+  # runtime knobs (overridden per run via dataclasses.replace)
+  attn_block: int = 512
+  decode_cache_len: int = 4096     # exact-cache capacity for decode
+  pq_enabled: bool = True          # AQPIM on attention KV (if family supports it)
+  pq_m: int = 32                   # paper Table II optimum
+  pq_k: int = 512                  # paper Table III optimum
+  pq_sink: int = 8                 # paper §IV-A
+  pq_recent: int = 32              # paper §IV-A (= t of Eq. 1)
+  pq_windows: int = 1              # paper §III-B: one page suffices
+  remat: bool = True
+  unroll_layers: bool = False      # python-loop layers (cost-model validation:
+                                   # XLA cost_analysis counts while bodies once)
+  # beyond-paper performance features (§Perf hillclimbs)
+  weight_quant: str = "none"       # "int8": serve weights stored int8+scale
+  parallel_block: bool = False     # PaLM-style fused attn+FFN residual: halves
+                                   # the TP all-reduce count per layer
+  context_parallel: bool = False   # prefill: sequence on the model axis,
+                                   # weights replicated, per-layer KV all-gather
+                                   # (small-model prefill collective fix)
+  moe_a2a_quant: bool = False      # int8 rows across the EP all-to-alls
+  microbatches: int = 1            # gradient-accumulation chunks per step
+  fsdp: bool = False               # 2D weight sharding (model x data): params/
+                                   # optimizer fully sharded, weight all-gather
+                                   # on use (required: 405B does not fit 16 GB
+                                   # HBM with TP-only sharding)
+
+  # provenance
+  source: str = ""
+  verified: str = ""
+
+  def __post_init__(self):
+    if self.head_dim == 0:
+      object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+  @property
+  def dtype(self):
+    return jnp.dtype(self.dtype_str)
+
+  @property
+  def supports_pq(self) -> bool:
+    return not self.attn_free
+
+  def pq_cache_config(self, context_len: int) -> Optional[kvc.PQCacheConfig]:
+    """PQ cache geometry for a given max context (None if PQ off/unsupported)."""
+    if not (self.pq_enabled and self.supports_pq):
+      return None
+    body = max(context_len - self.pq_sink - self.pq_recent, self.pq_windows)
+    # round body capacity to a multiple of windows AND the kernel block (512)
+    blk = 512 if context_len >= 4096 else 64
+    mult = self.pq_windows * blk
+    body = -(-body // mult) * mult
+    m = self.pq_m
+    while self.head_dim % m != 0:
+      m //= 2
+    return kvc.PQCacheConfig(
+        sink=self.pq_sink, recent=self.pq_recent, body_capacity=body,
+        n_windows=self.pq_windows,
+        pq=pqlib.PQConfig(m=m, k=self.pq_k))
+
+  def active_params(self) -> int:
+    """Approx active parameter count (MoE counts top_k + shared experts)."""
+    d, v, l = self.d_model, self.vocab_size, self.n_layers
+    attn = d * self.head_dim * (self.n_heads * 2 + self.n_kv_heads * 2)
+    if self.n_experts > 0:
+      ffn = 3 * d * self.moe_d_ff * (self.top_k + self.n_shared_experts)
+      ffn += d * self.n_experts  # router
+    elif self.attn_free:
+      attn = 5 * d * d + d * d   # r/k/v/g/o + loras approx
+      ffn = 2 * d * self.d_ff + d * d
+    else:
+      ffn = 3 * d * self.d_ff
+    if self.hybrid:
+      attn += 2 * d * self.ssm_d_inner + self.ssm_d_inner * d
+    core = l * (attn + ffn)
+    if self.cross_attn_period:
+      n_cross = l // self.cross_attn_period
+      core += n_cross * (attn + 3 * d * self.d_ff)
+    return core + 2 * v * d
+
+  def total_params(self) -> int:
+    if self.n_experts > 0:
+      d, l = self.d_model, self.n_layers
+      attn = d * self.head_dim * (self.n_heads * 2 + self.n_kv_heads * 2)
+      ffn = 3 * d * self.moe_d_ff * (self.n_experts + self.n_shared_experts)
+      return l * (attn + ffn + d * self.n_experts) + 2 * self.vocab_size * d
+    return self.active_params()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+  """One assigned input-shape cell."""
+  name: str
+  seq_len: int
+  global_batch: int
+  kind: str        # train | prefill | decode
+
+  @property
+  def is_decode(self) -> bool:
+    return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def smoke_shape(kind: str = "train") -> ShapeConfig:
+  if kind == "train":
+    return ShapeConfig("smoke_train", 128, 2, "train")
+  if kind == "prefill":
+    return ShapeConfig("smoke_prefill", 128, 2, "prefill")
+  return ShapeConfig("smoke_decode", 128, 2, "decode")

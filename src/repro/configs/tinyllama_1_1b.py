@@ -1,0 +1,16 @@
+"""tinyllama-1.1b [dense] — llama2-arch small. [arXiv:2401.02385; hf]"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b", family="dense",
+    n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=64,
+    d_ff=5632, vocab_size=32000, rope_theta=10000.0,
+    microbatches=4,
+    source="arXiv:2401.02385", verified="hf",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, pq_m=4, pq_k=16, pq_sink=4, pq_recent=8,
+    attn_block=64, dtype_str="float32")

@@ -1,0 +1,32 @@
+"""AQPIM core: the paper's contribution as composable JAX modules.
+
+- kmeans         importance-weighted k-means (Eq. 2), fixed-iteration
+- channel_sort   cosine-similarity channel grouping absorbed into projections
+- pq             Product Quantization codec (split/encode/decode/build)
+- windowed       page-aware windowed clustering (warm-started codebook pages)
+- pq_attention   attention directly on compressed data (Fig. 5 flow)
+- importance     attention-score importance weights (Eq. 1)
+- kv_cache       exact + PQ-compressed KV caches (sink | body | recent)
+- baselines      SKVQ/SnapKV/StreamingLLM/PQCache-like comparison methods
+"""
+from repro.core import (
+    baselines,
+    channel_sort,
+    importance,
+    kmeans,
+    kv_cache,
+    pq,
+    pq_attention,
+    windowed,
+)
+
+__all__ = [
+    "baselines",
+    "channel_sort",
+    "importance",
+    "kmeans",
+    "kv_cache",
+    "pq",
+    "pq_attention",
+    "windowed",
+]

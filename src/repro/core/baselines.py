@@ -1,0 +1,145 @@
+"""Baseline KV-cache mitigation methods the paper compares against (§IV-A/B).
+
+- SKVQ-like   : sliding-window uniform quantization with channel reordering
+                (asymmetric per-group int4/int8; sink + recent kept exact).
+- SnapKV-like : eviction — keep top-k tokens by attention importance observed from
+                a recent query window.
+- StreamingLLM: static sink + sliding window (eviction of everything else).
+- PQCache-like: PQ used only to *identify* top-k tokens (approx. inner-product
+                search); exact KV for selected tokens is "fetched from CPU" — we
+                model the fetch bytes for the Fig. 11/13 bandwidth analysis.
+
+All are implemented as drop-in decode-attention transforms so the benchmark harness
+can sweep method x compression-ratio on identical inputs (Fig. 10 analogue).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.core import pq, pq_attention
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# SKVQ-like: group-wise uniform quantization with channel reorder
+# ---------------------------------------------------------------------------
+
+class UniformQuantized(NamedTuple):
+  q: Array        # (N, d) int8 storage
+  scale: Array    # (N, groups) f32
+  zero: Array     # (N, groups) f32
+  perm: Array     # (d,) channel reorder
+  bits: int
+
+
+def channel_reorder_by_range(x: Array) -> Array:
+  """SKVQ reorders channels so similar dynamic ranges share a quant group."""
+  rng = jnp.max(x, axis=0) - jnp.min(x, axis=0)
+  return jnp.argsort(rng)
+
+
+def uniform_quantize(x: Array, bits: int, group: int, perm: Array) -> UniformQuantized:
+  """Asymmetric per-(token, channel-group) uniform quantization."""
+  n, d = x.shape
+  xp = x[:, perm].astype(jnp.float32)
+  g = d // group
+  xg = xp.reshape(n, g, group)
+  lo = jnp.min(xg, axis=-1)
+  hi = jnp.max(xg, axis=-1)
+  qmax = float(2 ** bits - 1)
+  scale = jnp.maximum(hi - lo, 1e-8) / qmax
+  q = jnp.clip(jnp.round((xg - lo[..., None]) / scale[..., None]), 0, qmax)
+  return UniformQuantized(
+      q=q.reshape(n, d).astype(jnp.uint8 if bits <= 8 else jnp.int32),
+      scale=scale, zero=lo, perm=perm, bits=bits)
+
+
+def uniform_dequantize(uq: UniformQuantized, group: int) -> Array:
+  n, d = uq.q.shape
+  g = d // group
+  xg = uq.q.astype(jnp.float32).reshape(n, g, group)
+  xp = xg * uq.scale[..., None] + uq.zero[..., None]
+  inv = jnp.argsort(uq.perm)
+  return xp.reshape(n, d)[:, inv]
+
+
+def skvq_decode_attention(
+    q: Array, k: Array, v: Array, mask: Array, scale: float,
+    bits: int = 4, group: int = 32,
+) -> Array:
+  """Quantize-dequantize KV then exact attention (GPUs must upcast — §IV-E)."""
+  perm_k = channel_reorder_by_range(k)
+  perm_v = channel_reorder_by_range(v)
+  k_hat = uniform_dequantize(uniform_quantize(k, bits, group, perm_k), group)
+  v_hat = uniform_dequantize(uniform_quantize(v, bits, group, perm_v), group)
+  return pq_attention.exact_decode_attention(q, k_hat, v_hat, mask, scale)
+
+
+# ---------------------------------------------------------------------------
+# SnapKV-like: importance top-k eviction
+# ---------------------------------------------------------------------------
+
+def snapkv_select(weights: Array, keep: int, sink: int, recent: int,
+                  length: int) -> Array:
+  """Token keep-mask: sinks + recents always kept; top-(keep) body by weight."""
+  n = weights.shape[0]
+  pos = jnp.arange(n)
+  always = (pos < sink) | ((pos >= length - recent) & (pos < length))
+  body_w = jnp.where(always | (pos >= length), -jnp.inf, weights)
+  thresh_idx = jnp.argsort(-body_w)[:keep]
+  kept = jnp.zeros((n,), bool).at[thresh_idx].set(True)
+  return (kept & (pos < length)) | (always & (pos < length))
+
+
+def snapkv_decode_attention(
+    q: Array, k: Array, v: Array, weights: Array, length: int, scale: float,
+    keep: int, sink: int = 8, recent: int = 32,
+) -> Array:
+  mask = snapkv_select(weights, keep, sink, recent, length)
+  return pq_attention.exact_decode_attention(q, k, v, mask, scale)
+
+
+def streaming_llm_decode_attention(
+    q: Array, k: Array, v: Array, length: int, scale: float,
+    sink: int = 8, window: int = 512,
+) -> Array:
+  n = k.shape[0]
+  pos = jnp.arange(n)
+  mask = ((pos < sink) | (pos >= length - window)) & (pos < length)
+  return pq_attention.exact_decode_attention(q, k, v, mask, scale)
+
+
+# ---------------------------------------------------------------------------
+# PQCache-like: PQ as ANN index, exact KV fetched for selected tokens
+# ---------------------------------------------------------------------------
+
+def pqcache_decode_attention(
+    q: Array, k: Array, v: Array, mask: Array, scale: float,
+    cfg: pq.PQConfig, keep: int,
+) -> Tuple[Array, dict]:
+  """Approximate MIPS via PQ scores -> exact attention over top-k fetched KV.
+
+  Returns (out, traffic) where traffic counts the exact-KV bytes that would cross
+  PCIe in the real system (the cost AQPIM eliminates — Fig. 13 `gpu+cpu`).
+  """
+  g, d = q.shape
+  n = k.shape[0]
+  w = jnp.ones((n,), jnp.float32)
+  codebook, idx = pq.build_codebook(k, w, cfg, mask=mask)
+  table = pq_attention.inner_product_table(q, codebook)
+  approx = pq_attention.lookup_scores(table, idx)             # (g, N)
+  approx = jnp.where(mask[None], approx, NEG_INF)
+  score = jnp.max(approx, axis=0)                             # group max (GQA union)
+  top = jnp.argsort(-score)[:keep]
+  sel = jnp.zeros((n,), bool).at[top].set(True) & mask
+  out = pq_attention.exact_decode_attention(q, k, v, sel, scale)
+  traffic = dict(
+      fetched_bytes=int(keep) * d * 2 * 2,    # k+v bf16 over PCIe per step
+      index_bytes=n * cfg.m * cfg.index_bytes(),
+  )
+  return out, traffic

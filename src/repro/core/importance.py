@@ -1,0 +1,102 @@
+"""Importance weights from attention scores (AQPIM §III-C, Eq. 1).
+
+    w = sum( S[-t:, :], axis=0 )
+
+where S is the (softmaxed, causal) attention-score matrix of the prefill and t is a
+small window (paper: t = 32, shared with the sliding-window size).  Tokens that the
+most recent queries attend to strongly get larger weights and therefore smaller
+quantization error in the weighted k-means.
+
+The paper computes w on the GPU during prefill "aligned with FlashAttention": only
+the last t query rows are needed, so the cost is O(t*N*d) — negligible next to the
+O(N^2*d) prefill.  We implement exactly that: a standalone chunked pass over keys
+for the t most recent queries (numerically stable two-pass softmax).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+
+
+@functools.partial(jax.jit, static_argnames=("t", "chunk"))
+def attention_importance_weights(
+    q: Array,
+    k: Array,
+    scale: float,
+    t: int = 32,
+    chunk: int = 2048,
+    length: Array | None = None,
+) -> Array:
+  """Per-token importance weights for one (batch, head).
+
+  Args:
+    q: (N, d) queries of the prefill (post-RoPE).
+    k: (N, d) keys.
+    scale: softmax scale (1/sqrt(d)).
+    t: number of trailing queries to aggregate (Eq. 1 window).
+    chunk: key-chunk size for the streaming pass.
+    length: optional dynamic valid length (<= N); defaults to N.
+
+  Returns:
+    w: (N,) f32 weights; positions >= length get weight 0.
+  """
+  n, d = q.shape
+  if length is None:
+    length = jnp.asarray(n, jnp.int32)
+  # the last t valid queries: positions length-t .. length-1
+  q_start = jnp.maximum(length - t, 0)
+  q_idx = q_start + jnp.arange(t)                      # (t,) may exceed; masked below
+  q_valid = q_idx < length
+  q_t = jnp.take(q, jnp.clip(q_idx, 0, n - 1), axis=0).astype(jnp.float32)
+
+  n_chunks = (n + chunk - 1) // chunk
+  n_pad = n_chunks * chunk
+
+  def scores_for_chunk(c):
+    k_start = c * chunk
+    k_blk = jax.lax.dynamic_slice_in_dim(
+        jnp.pad(k, ((0, n_pad - n), (0, 0))), k_start, chunk, axis=0
+    ).astype(jnp.float32)
+    s = (q_t @ k_blk.T) * scale                        # (t, chunk)
+    kpos = k_start + jnp.arange(chunk)
+    causal = kpos[None, :] <= q_idx[:, None]
+    valid = (kpos[None, :] < length) & causal & q_valid[:, None]
+    return jnp.where(valid, s, -jnp.inf)
+
+  # pass 1: row max & denom
+  def pass1(c, carry):
+    row_max, denom = carry
+    s = scores_for_chunk(c)
+    new_max = jnp.maximum(row_max, jnp.max(s, axis=-1))
+    denom = denom * jnp.exp(row_max - new_max) + jnp.sum(
+        jnp.exp(s - new_max[:, None]), axis=-1)
+    return new_max, denom
+
+  row_max0 = jnp.full((t,), -jnp.inf, jnp.float32)
+  denom0 = jnp.zeros((t,), jnp.float32)
+  row_max, denom = jax.lax.fori_loop(0, n_chunks, pass1, (row_max0, denom0))
+  denom = jnp.maximum(denom, 1e-30)
+
+  # pass 2: accumulate column sums of softmax probabilities
+  def pass2(c, w_acc):
+    s = scores_for_chunk(c)
+    p = jnp.exp(s - row_max[:, None]) / denom[:, None]   # (t, chunk)
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    col = jnp.sum(p, axis=0)                              # (chunk,)
+    return jax.lax.dynamic_update_slice_in_dim(
+        w_acc, jax.lax.dynamic_slice_in_dim(w_acc, c * chunk, chunk) + col,
+        c * chunk, axis=0)
+
+  w = jax.lax.fori_loop(0, n_chunks, pass2, jnp.zeros((n_pad,), jnp.float32))
+  w = w[:n]
+  pos = jnp.arange(n)
+  return jnp.where(pos < length, w, 0.0)
+
+
+def uniform_weights(n: int) -> Array:
+  """Unweighted PQ baseline (ablation 'w/o weighting')."""
+  return jnp.ones((n,), jnp.float32)

@@ -1,0 +1,143 @@
+"""Importance-weighted k-means clustering (AQPIM §III-C, Eq. (2)).
+
+The paper's key algorithmic component: k-means over activation (sub)vectors where
+each token carries an importance weight derived from attention scores.  Centroids
+are updated as weighted averages (Eq. 2):
+
+    mu_k = sum_{n in C_k} w_n x_n / sum_{n in C_k} w_n
+
+Per AQPIM §III-B, a *fixed* number of iterations (4) converges to a stable state,
+which lets the PIM hide clustering behind prefill.  We keep the iteration count a
+static Python int so the loop unrolls/scans into a fixed-depth HLO — essential for
+`jax.jit`/`pjit` and for the dry-run cost model.
+
+All accumulation is f32 regardless of input dtype (bf16-safe).  Empty clusters keep
+their previous centroid (mirrors standard k-means practice; the paper's PIM dataflow
+computes numerator on BankPE, 1/denominator on BufferPE — a zero denominator never
+reaches the divider because assignment retains at least the seeding token unless a
+centroid loses all members, in which case we freeze it).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+
+DEFAULT_ITERS = 4  # paper §III-B: "just four iterations converge to a stable state"
+
+
+def pairwise_sq_dists(x: Array, centroids: Array) -> Array:
+  """Squared Euclidean distances, matmul-dominant form (MXU friendly).
+
+  ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2.  Shapes: x (N, d), centroids (K, d)
+  -> (N, K).  f32 accumulation.
+  """
+  x = x.astype(jnp.float32)
+  centroids = centroids.astype(jnp.float32)
+  x_sq = jnp.sum(x * x, axis=-1, keepdims=True)            # (N, 1)
+  c_sq = jnp.sum(centroids * centroids, axis=-1)           # (K,)
+  cross = x @ centroids.T                                  # (N, K)  MXU
+  return x_sq - 2.0 * cross + c_sq[None, :]
+
+
+def assign_clusters(x: Array, centroids: Array) -> Array:
+  """Nearest-centroid assignment (paper: Distance Calculation + Cluster Assignment)."""
+  return jnp.argmin(pairwise_sq_dists(x, centroids), axis=-1).astype(jnp.int32)
+
+
+def _weighted_update(
+    x: Array, w: Array, assign: Array, centroids: Array
+) -> Array:
+  """One weighted centroid update (Eq. 2), one-hot-matmul (scatter-free) form.
+
+  The one-hot matmul is the TPU-native analogue of the paper's BankPE
+  scatter-accumulate: it is a dense (K, N) @ (N, d) matmul that maps onto the MXU.
+  """
+  n, d = x.shape
+  k = centroids.shape[0]
+  x32 = x.astype(jnp.float32)
+  w32 = w.astype(jnp.float32)
+  onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)     # (N, K)
+  wo = onehot * w32[:, None]                                # (N, K)
+  num = wo.T @ x32                                          # (K, d) weighted sums
+  den = jnp.sum(wo, axis=0)                                 # (K,)  weight mass
+  safe_den = jnp.maximum(den, 1e-12)
+  new_centroids = num / safe_den[:, None]
+  # freeze empty clusters
+  empty = (den <= 1e-12)[:, None]
+  return jnp.where(empty, centroids.astype(jnp.float32), new_centroids)
+
+
+def init_centroids(x: Array, k: int, key: Array | None = None) -> Array:
+  """Deterministic strided init (default) or random-choice init.
+
+  Strided init picks every (N//K)-th token: cheap, deterministic across hosts
+  (important for SPMD — every data shard must agree on the centroid seed when the
+  sequence axis is sharded), and empirically as good as random init at 4 iterations.
+  """
+  n = x.shape[0]
+  if key is None:
+    stride = max(n // k, 1)
+    idx = (jnp.arange(k) * stride) % n
+  else:
+    idx = jax.random.choice(key, n, shape=(k,), replace=n < k)
+  return x[idx].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def weighted_kmeans(
+    x: Array,
+    w: Array,
+    k: int,
+    iters: int = DEFAULT_ITERS,
+    key: Array | None = None,
+    mask: Array | None = None,
+) -> Tuple[Array, Array]:
+  """Importance-weighted k-means.
+
+  Args:
+    x: (N, d) points (tokens' subvectors).
+    w: (N,) non-negative importance weights (Eq. 1).
+    k: number of centroids (paper default 512).
+    iters: fixed iteration count (paper default 4).
+    key: optional PRNG key for random init; None -> deterministic strided init.
+    mask: optional (N,) bool; False entries are padding and are excluded by
+      zeroing their weight AND pushing their distance to +inf-equivalent so they
+      never seed/claim a centroid by assignment weight.
+
+  Returns:
+    (centroids (k, d) f32, assignments (N,) int32)
+  """
+  x_init = x
+  if mask is not None:
+    w = jnp.where(mask, w, 0.0)
+    # padding must never seed a centroid: collapse masked rows onto row 0
+    # (duplicate seeds become empty clusters and freeze near real data)
+    x_init = jnp.where(mask[:, None], x, x[0])
+  # guard: if all weights vanish (e.g. fully-padded window) fall back to uniform.
+  total = jnp.sum(w.astype(jnp.float32))
+  w = jnp.where(total > 0, w, jnp.ones_like(w))
+
+  centroids0 = init_centroids(x_init, k, key)
+
+  def body(_, carry):
+    centroids = carry
+    assign = assign_clusters(x, centroids)
+    return _weighted_update(x, w, assign, centroids)
+
+  centroids = jax.lax.fori_loop(0, iters, body, centroids0)
+  assign = assign_clusters(x, centroids)
+  return centroids, assign
+
+
+def weighted_quantization_error(
+    x: Array, w: Array, centroids: Array, assign: Array
+) -> Array:
+  """Weighted objective the paper minimizes: sum_n w_n ||x_n - mu_{a_n}||^2."""
+  recon = centroids[assign]
+  err = jnp.sum((x.astype(jnp.float32) - recon) ** 2, axis=-1)
+  return jnp.sum(w.astype(jnp.float32) * err)

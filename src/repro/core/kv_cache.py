@@ -1,0 +1,302 @@
+"""KV-cache structures: exact and PQ-compressed (AQPIM §III-A/H layout).
+
+PQ cache layout per layer (paper §IV-A hyperparameters):
+
+  [ sink (8 tokens, exact) | PQ body (windowed codebooks + indices) | recent (32, exact) ]
+
+- the first `sink` tokens are kept full precision (attention sinks),
+- the most recent `recent` tokens are kept full precision in a ring buffer (also
+  the importance window t of Eq. 1),
+- everything in between lives as per-(head, window) codebooks plus per-token
+  m-subvector indices.
+
+During decode (paper Fig. 3a): the new token's k/v enter the recent ring; the token
+evicted from the ring is *encoded* (index append — paper step 3) against its
+window's codebook page.  Codebooks themselves stay fixed after prefill (the paper
+evaluated OnlinePQ and dropped it).  All shapes are static: every op here is
+jit/pjit-safe and lowers into the multi-pod serve_step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.core import pq, pq_attention, windowed
+
+
+class PQCacheConfig(NamedTuple):
+  """Static geometry of a PQ cache."""
+  sink: int = 8            # exact sink tokens (paper §IV-A)
+  recent: int = 32         # exact sliding-window tokens (= t of Eq. 1)
+  body_capacity: int = 0   # max PQ-compressed tokens (multiple of n_windows)
+  n_windows: int = 1       # codebook pages (paper: 1 suffices for long context)
+  pq: pq.PQConfig = pq.PQConfig()
+
+  @property
+  def window_len(self) -> int:
+    return self.body_capacity // self.n_windows
+
+  def capacity(self) -> int:
+    return self.sink + self.recent + self.body_capacity
+
+
+class PQLayerCache(NamedTuple):
+  """One layer's compressed KV state.  Leading dims (B, H_kv)."""
+  sink_k: Array          # (B, H, S0, D)
+  sink_v: Array
+  recent_k: Array        # (B, H, R, D) ring buffer
+  recent_v: Array
+  key_codebooks: Array   # (B, H, nW, m, K, dsub) f32
+  value_codebooks: Array
+  key_indices: Array     # (B, H, Nb, m) int32
+  value_indices: Array
+
+
+class ExactLayerCache(NamedTuple):
+  k: Array               # (B, H, N_max, D)
+  v: Array
+
+
+# ---------------------------------------------------------------------------
+# Exact cache
+# ---------------------------------------------------------------------------
+
+def exact_cache_init(b: int, h: int, n_max: int, d: int, dtype) -> ExactLayerCache:
+  z = jnp.zeros((b, h, n_max, d), dtype)
+  return ExactLayerCache(k=z, v=z)
+
+
+def exact_cache_prefill(k: Array, v: Array, n_max: int) -> ExactLayerCache:
+  """k/v (B, H, N, D) -> cache padded to n_max."""
+  b, h, n, d = k.shape
+  pad = ((0, 0), (0, 0), (0, n_max - n), (0, 0))
+  return ExactLayerCache(k=jnp.pad(k, pad), v=jnp.pad(v, pad))
+
+
+def exact_cache_append_and_attend(
+    cache: ExactLayerCache,
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,       # scalar int32: tokens already cached
+    scale: float,
+) -> Tuple[Array, ExactLayerCache]:
+  b, hq, d = q.shape
+  h = cache.k.shape[1]
+  g = hq // h
+  k_c = jax.lax.dynamic_update_slice(
+      cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, length, 0))
+  v_c = jax.lax.dynamic_update_slice(
+      cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, length, 0))
+  n_max = k_c.shape[2]
+  mask = jnp.arange(n_max) < (length + 1)
+
+  qg = q.reshape(b, h, g, d)
+  out = jax.vmap(jax.vmap(
+      lambda qq, kk, vv: pq_attention.exact_decode_attention(qq, kk, vv, mask, scale)
+  ))(qg, k_c, v_c)                                    # (B, H, g, D)
+  return out.reshape(b, hq, d), ExactLayerCache(k=k_c, v=v_c)
+
+
+# ---------------------------------------------------------------------------
+# PQ cache
+# ---------------------------------------------------------------------------
+
+def index_storage_dtype(cfg: PQCacheConfig):
+  """Target-hardware index width (beyond-paper: uint8 at K<=256 halves the
+  dominant decode-memory term vs int16 — EXPERIMENTS.md §Perf)."""
+  return jnp.uint8 if cfg.pq.k <= 256 else jnp.int16
+
+
+def pq_cache_init(
+    b: int, h: int, d: int, cfg: PQCacheConfig, dtype=jnp.bfloat16
+) -> PQLayerCache:
+  m, k = cfg.pq.m, cfg.pq.k
+  dsub = d // m
+  idt = index_storage_dtype(cfg)
+  return PQLayerCache(
+      sink_k=jnp.zeros((b, h, cfg.sink, d), dtype),
+      sink_v=jnp.zeros((b, h, cfg.sink, d), dtype),
+      recent_k=jnp.zeros((b, h, cfg.recent, d), dtype),
+      recent_v=jnp.zeros((b, h, cfg.recent, d), dtype),
+      # bf16 codebook storage (paper: fp16 row buffers); f32 at compute sites
+      key_codebooks=jnp.zeros((b, h, cfg.n_windows, m, k, dsub), jnp.bfloat16),
+      value_codebooks=jnp.zeros((b, h, cfg.n_windows, m, k, dsub), jnp.bfloat16),
+      # target-hardware index width: uint8 when K<=256 else int16; cast to
+      # int32 only at gather sites.
+      key_indices=jnp.zeros((b, h, cfg.body_capacity, m), idt),
+      value_indices=jnp.zeros((b, h, cfg.body_capacity, m), idt),
+  )
+
+
+def pq_cache_prefill(
+    k: Array,            # (B, H, N, D)
+    v: Array,
+    weights: Array,      # (B, H, N) importance weights (Eq. 1)
+    cfg: PQCacheConfig,
+    length: Optional[Array] = None,
+) -> PQLayerCache:
+  """Compress a prefilled KV into the PQ cache (paper Fig. 3a prefill step 3).
+
+  Body tokens are positions [sink, N - recent); they are placed at body offsets
+  [0, N - sink - recent).  The windowed clustering runs per (batch, head) — this is
+  the computation the paper hides behind GPU prefill on the PIM side, and that we
+  fuse into the prefill step.
+  """
+  b, h, n, d = k.shape
+  s0, r, nb = cfg.sink, cfg.recent, cfg.body_capacity
+  assert n >= s0 + r, f"prefill length {n} < sink+recent {s0 + r}"
+  body_n = n - s0 - r
+  assert body_n <= nb, f"body {body_n} exceeds capacity {nb}"
+
+  sink_k, sink_v = k[:, :, :s0], v[:, :, :s0]
+  # ring layout: token (s0 + i) lives at slot i % r; after prefill the last r
+  # tokens occupy slots ((n - r - s0) + j) % r for j in [0, r)
+  rec_tok_k, rec_tok_v = k[:, :, n - r:], v[:, :, n - r:]
+  slots = (jnp.arange(r) + (n - r - s0)) % r
+  recent_k = jnp.zeros((b, h, r, d), k.dtype).at[:, :, slots].set(rec_tok_k)
+  recent_v = jnp.zeros((b, h, r, d), v.dtype).at[:, :, slots].set(rec_tok_v)
+
+  body_k = k[:, :, s0:n - r]
+  body_v = v[:, :, s0:n - r]
+  body_w = weights[:, :, s0:n - r]
+
+  # pad body to full capacity so window boundaries are static
+  pad = nb - body_n
+  body_k = jnp.pad(body_k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+  body_v = jnp.pad(body_v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+  body_w = jnp.pad(body_w, ((0, 0), (0, 0), (0, pad)))
+  mask = jnp.arange(nb) < body_n
+
+  def per_head(kk, vv, ww):
+    k_cb, k_idx = windowed.windowed_build_codebooks(
+        kk, ww, cfg.pq, cfg.n_windows, mask=mask)
+    v_cb, v_idx = windowed.windowed_build_codebooks(
+        vv, ww, cfg.pq, cfg.n_windows, mask=mask)
+    return k_cb, k_idx, v_cb, v_idx
+
+  k_cb, k_idx, v_cb, v_idx = jax.vmap(jax.vmap(per_head))(
+      body_k, body_v, body_w)
+
+  idt = index_storage_dtype(cfg)
+  return PQLayerCache(
+      sink_k=sink_k, sink_v=sink_v,
+      recent_k=recent_k, recent_v=recent_v,
+      key_codebooks=k_cb.astype(jnp.bfloat16),
+      value_codebooks=v_cb.astype(jnp.bfloat16),
+      key_indices=k_idx.astype(idt),
+      value_indices=v_idx.astype(idt),
+  )
+
+
+def pq_cache_append_and_attend(
+    cache: PQLayerCache,
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,       # scalar int32 tokens already cached (incl. prefill)
+    cfg: PQCacheConfig,
+    scale: float,
+) -> Tuple[Array, PQLayerCache]:
+  """One decode step: insert token, evict->encode, attend on compressed context.
+
+  Mirrors paper Fig. 3a decode: (3) append indices, (4) PQ attention.
+  """
+  b, hq, d = q.shape
+  h = cache.recent_k.shape[1]
+  g = hq // h
+  s0, r, nb = cfg.sink, cfg.recent, cfg.body_capacity
+  pos = length                                     # position of the new token
+
+  in_sink = pos < s0
+  slot = jnp.clip((pos - s0) % r, 0, r - 1)
+  evict_pos = pos - s0 - r                          # body offset being filled
+
+  # --- 1. encode the evicted ring entry into the PQ body -------------------
+  do_evict = evict_pos >= 0
+  ev = jnp.clip(evict_pos, 0, nb - 1)
+  win_id = jnp.clip(ev // max(cfg.window_len, 1), 0, cfg.n_windows - 1)
+
+  old_k = jax.lax.dynamic_slice(
+      cache.recent_k, (0, 0, slot, 0), (b, h, 1, d))[:, :, 0]   # (B,H,D)
+  old_v = jax.lax.dynamic_slice(
+      cache.recent_v, (0, 0, slot, 0), (b, h, 1, d))[:, :, 0]
+
+  def encode_one(x, cbs):
+    # x (D,), cbs (nW, m, K, dsub)
+    return windowed.windowed_encode(x[None], cbs, win_id[None])[0]  # (m,)
+  k_idx_new = jax.vmap(jax.vmap(encode_one))(
+      old_k.astype(jnp.float32), cache.key_codebooks)          # (B,H,m)
+  v_idx_new = jax.vmap(jax.vmap(encode_one))(
+      old_v.astype(jnp.float32), cache.value_codebooks)
+
+  def maybe_scatter(idx_store, idx_new):
+    upd = jax.lax.dynamic_update_slice(
+        idx_store, idx_new[:, :, None, :].astype(idx_store.dtype), (0, 0, ev, 0))
+    return jnp.where(do_evict, upd, idx_store)
+  key_indices = maybe_scatter(cache.key_indices, k_idx_new)
+  value_indices = maybe_scatter(cache.value_indices, v_idx_new)
+
+  # --- 2. insert the new token (sink while warming up, else ring) ----------
+  write_slot = jnp.where(in_sink, jnp.clip(pos, 0, s0 - 1), slot)
+
+  def insert(buf_sink, buf_rec, val):
+    val = val[:, :, None, :]
+    new_sink = jax.lax.dynamic_update_slice(
+        buf_sink, val.astype(buf_sink.dtype), (0, 0, jnp.clip(pos, 0, s0 - 1), 0))
+    new_rec = jax.lax.dynamic_update_slice(
+        buf_rec, val.astype(buf_rec.dtype), (0, 0, write_slot, 0))
+    return (jnp.where(in_sink, new_sink, buf_sink),
+            jnp.where(in_sink, buf_rec, new_rec))
+  sink_k, recent_k = insert(cache.sink_k, cache.recent_k, k_new)
+  sink_v, recent_v = insert(cache.sink_v, cache.recent_v, v_new)
+
+  # --- 3. masks after insertion --------------------------------------------
+  n_tok = pos + 1
+  sink_mask = jnp.arange(s0) < jnp.minimum(n_tok, s0)
+  rec_count = jnp.clip(n_tok - s0, 0, r)
+  rec_mask = jnp.arange(r) < rec_count          # ring fills sequentially pre-wrap
+  body_len = jnp.clip(n_tok - s0 - r, 0, nb)
+  body_mask = jnp.arange(nb) < body_len
+
+  # --- 4. PQ attention on compressed context -------------------------------
+  qg = q.reshape(b, h, g, d)
+
+  def attend(qq, sk, sv, rk, rv, kcb, vcb, kix, vix):
+    seg = pq_attention.PQAttnSegments(
+        sink_k=sk, sink_v=sv, sink_mask=sink_mask,
+        key_codebook=kcb if cfg.n_windows > 1 else kcb[0],
+        value_codebook=vcb if cfg.n_windows > 1 else vcb[0],
+        key_indices=kix, value_indices=vix, body_mask=body_mask,
+        recent_k=rk, recent_v=rv, recent_mask=rec_mask)
+    return pq_attention.pq_decode_attention(qq, seg, scale)
+
+  out = jax.vmap(jax.vmap(attend))(
+      qg, sink_k, sink_v, recent_k, recent_v,
+      cache.key_codebooks, cache.value_codebooks,
+      key_indices, value_indices)                  # (B, H, g, D)
+
+  new_cache = PQLayerCache(
+      sink_k=sink_k, sink_v=sink_v, recent_k=recent_k, recent_v=recent_v,
+      key_codebooks=cache.key_codebooks, value_codebooks=cache.value_codebooks,
+      key_indices=key_indices, value_indices=value_indices)
+  return out.reshape(b, hq, d), new_cache
+
+
+def pq_cache_bytes(cfg: PQCacheConfig, b: int, h: int, d: int) -> dict:
+  """Target-hardware byte accounting (bf16 exact, fp16 codebooks, packed indices)."""
+  fp = 2
+  exact = (cfg.sink + cfg.recent) * d * fp * 2
+  cb = cfg.n_windows * cfg.pq.m * cfg.pq.k * (d // cfg.pq.m) * fp * 2
+  idx = cfg.body_capacity * cfg.pq.m * cfg.pq.index_bytes() * 2
+  per_head = exact + cb + idx
+  equivalent_exact = cfg.capacity() * d * fp * 2
+  return dict(
+      per_head_bytes=per_head,
+      total_bytes=per_head * b * h,
+      equivalent_exact_bytes=equivalent_exact * b * h,
+      reduction_ratio=equivalent_exact / per_head,
+  )

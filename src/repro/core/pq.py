@@ -1,0 +1,140 @@
+"""Product Quantization codec for activation (KV) compression (AQPIM §III-B).
+
+A head-dim vector x in R^d is split into m subvectors of size dsub = d/m.  Each
+subvector space has its own codebook of K centroids learned by (importance-weighted)
+k-means.  A token is stored as m small integers (its per-subvector centroid ids),
+giving a compression ratio of
+
+    d * bytes(fp16) / (m * bytes(index))         e.g. 128*2 / (32*2)  = 4x (int16)
+                                                  or  128*2 / (32*1)  = 8x (uint8, K<=256)
+
+plus the (amortized, tiny) codebook itself.  The paper's defaults are m=32, K=512.
+
+Codebooks here are *per attention head* (paper §III-G maps each head to its own HBM
+stack); batching over heads/batch is done with vmap at the call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.core import kmeans
+
+
+@dataclasses.dataclass(frozen=True)
+class PQConfig:
+  """Static PQ hyperparameters (paper Table II/III defaults)."""
+  m: int = 32                 # number of subvectors
+  k: int = 512                # centroids per subvector codebook
+  iters: int = 4              # k-means iterations (fixed; paper §III-B)
+  index_dtype: jnp.dtype = jnp.int32  # storage dtype for indices (int32 in JAX;
+                              # int16/uint8 on real HW — bytes accounted in benches)
+
+  def dsub(self, head_dim: int) -> int:
+    assert head_dim % self.m == 0, f"head_dim={head_dim} % m={self.m} != 0"
+    return head_dim // self.m
+
+  def index_bytes(self) -> int:
+    """Bytes/index on target hardware (uint8 if K<=256 else int16)."""
+    return 1 if self.k <= 256 else 2
+
+  def compressed_token_bytes(self, head_dim: int, fp_bytes: int = 2) -> int:
+    del head_dim, fp_bytes
+    return self.m * self.index_bytes()
+
+  def exact_token_bytes(self, head_dim: int, fp_bytes: int = 2) -> int:
+    return head_dim * fp_bytes
+
+  def compression_ratio(self, head_dim: int) -> float:
+    return self.exact_token_bytes(head_dim) / self.compressed_token_bytes(head_dim)
+
+
+def split(x: Array, m: int) -> Array:
+  """(..., N, d) -> (..., N, m, dsub)."""
+  *lead, n, d = x.shape
+  return x.reshape(*lead, n, m, d // m)
+
+
+def merge(x: Array) -> Array:
+  """(..., N, m, dsub) -> (..., N, d)."""
+  *lead, n, m, dsub = x.shape
+  return x.reshape(*lead, n, m * dsub)
+
+
+def encode(x: Array, codebook: Array) -> Array:
+  """Assign each subvector to its nearest centroid.
+
+  x: (N, d); codebook: (m, K, dsub) -> indices (N, m) int32.
+  """
+  m = codebook.shape[0]
+  xs = split(x, m)                                    # (N, m, dsub)
+  xs = jnp.swapaxes(xs, 0, 1)                         # (m, N, dsub)
+  idx = jax.vmap(kmeans.assign_clusters)(xs, codebook)  # (m, N)
+  return jnp.swapaxes(idx, 0, 1).astype(jnp.int32)    # (N, m)
+
+
+def decode(indices: Array, codebook: Array) -> Array:
+  """Reconstruct vectors from indices.  indices (N, m), codebook (m,K,dsub) -> (N,d)."""
+  n, m = indices.shape
+  gathered = jax.vmap(lambda cb, ix: cb[ix], in_axes=(0, 1), out_axes=1)(
+      codebook, indices
+  )                                                   # (N, m, dsub)
+  return merge(gathered)
+
+
+def build_codebook(
+    x: Array,
+    weights: Array,
+    cfg: PQConfig,
+    key: Optional[Array] = None,
+    mask: Optional[Array] = None,
+    init_codebook: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+  """Learn a per-subvector weighted-kmeans codebook and encode x.
+
+  Args:
+    x: (N, d) tokens for one head.
+    weights: (N,) importance weights (Eq. 1); pass ones for unweighted PQ.
+    cfg: PQConfig.
+    key: optional PRNG key (None -> deterministic strided init).
+    mask: optional (N,) validity mask.
+    init_codebook: optional (m, K, dsub) warm start (page-aware windowed
+      clustering copies the previous window's centroids — paper Fig. 6 step 1).
+
+  Returns:
+    codebook (m, K, dsub) f32, indices (N, m) int32.
+  """
+  m = cfg.m
+  xs = jnp.swapaxes(split(x, m), 0, 1)                # (m, N, dsub)
+
+  if init_codebook is None:
+    def fit(sub):
+      return kmeans.weighted_kmeans(
+          sub, weights, k=cfg.k, iters=cfg.iters, key=key, mask=mask
+      )
+    codebook, idx = jax.vmap(fit)(xs)
+  else:
+    def refine(sub, cb0):
+      def body(_, cb):
+        a = kmeans.assign_clusters(sub, cb)
+        return kmeans._weighted_update(
+            sub,
+            jnp.where(mask, weights, 0.0) if mask is not None else weights,
+            a,
+            cb,
+        )
+      cb = jax.lax.fori_loop(0, cfg.iters, body, cb0.astype(jnp.float32))
+      return cb, kmeans.assign_clusters(sub, cb)
+    codebook, idx = jax.vmap(refine)(xs, init_codebook)
+
+  return codebook, jnp.swapaxes(idx, 0, 1).astype(jnp.int32)
+
+
+def quantization_mse(x: Array, codebook: Array, indices: Array) -> Array:
+  """Mean squared reconstruction error (accuracy proxy for Tables II/III)."""
+  recon = decode(indices, codebook)
+  return jnp.mean((x.astype(jnp.float32) - recon) ** 2)

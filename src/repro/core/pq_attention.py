@@ -1,0 +1,197 @@
+"""PQ-based attention computed directly on compressed KV (AQPIM Fig. 5).
+
+Decode attention for one new query against a PQ-compressed context:
+
+  1. split q into m subvectors                                  (paper step 1)
+  2. inner-product table  T[j,k] = <q_j, C_key[j,k]>            (paper step 2)
+  3. score lookup         s_n = sum_j T[j, key_idx[n,j]]        (paper step 3-4)
+  4. softmax over (sink | PQ body | recent window)              (paper step 5)
+  5. value bucket-sum     B[j,k] = sum_{n: val_idx[n,j]=k} p_n  (paper step 6, no
+     reconstruction: out_j = sum_k B[j,k] * C_val[j,k])         (paper step 7)
+
+Step 3's "intra-row indirection" (random lookups guaranteed to hit one DRAM row)
+maps to: T lives in VMEM inside the Pallas kernel (kernels/pq_decode.py); this module
+is the mathematically identical pure-JAX implementation used for (a) the oracle,
+(b) CPU-hosted paths, (c) the lowered multi-pod graphs (XLA fuses the gathers).
+
+Step 5's bucket accumulation replaces the O(N*d) score@V GEMV with an O(N*m)
+scatter + O(m*K*dsub) = O(K*d) matmul — the FLOP and byte savings that the paper's
+Fig. 12/13 measure.
+
+Everything here is per-(batch, kv-head); call sites vmap.  GQA queries arrive as a
+group (g, d) sharing one compressed KV head.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.core import pq
+
+NEG_INF = -1e30
+
+
+def inner_product_table(q: Array, codebook: Array) -> Array:
+  """q (..., d), codebook (m, K, dsub) -> T (..., m, K).  f32."""
+  m, _, dsub = codebook.shape
+  qs = q.reshape(*q.shape[:-1], m, dsub).astype(jnp.float32)
+  return jnp.einsum("...md,mkd->...mk", qs, codebook.astype(jnp.float32))
+
+
+def lookup_scores(table: Array, key_indices: Array) -> Array:
+  """T (..., m, K), key_indices (N, m) -> scores (..., N).
+
+  sum over subvectors of table values selected by each token's centroid ids.
+  """
+  def one_sub(t_j: Array, idx_j: Array) -> Array:
+    return jnp.take(t_j, idx_j, axis=-1)              # (..., N)
+  per_sub = jax.vmap(one_sub, in_axes=(-2, -1), out_axes=0)(table, key_indices)
+  return jnp.sum(per_sub, axis=0)
+
+
+def bucket_accumulate(probs: Array, value_indices: Array, k: int) -> Array:
+  """probs (..., N), value_indices (N, m) -> buckets (..., m, K).
+
+  Scatter-add of attention probabilities into per-(subvector, centroid) buckets.
+  The MXU-friendly formulation (one-hot matmul) is used by the perf path; this
+  scatter form is the reference semantics (identical result).
+  """
+  def one_sub(idx_j: Array) -> Array:
+    onehot = jax.nn.one_hot(idx_j, k, dtype=probs.dtype)   # (N, K)
+    return probs @ onehot                                  # (..., K)
+  buckets = jax.vmap(one_sub, in_axes=1, out_axes=-2)(value_indices)
+  return buckets                                           # (..., m, K)
+
+
+def output_from_buckets(buckets: Array, value_codebook: Array) -> Array:
+  """buckets (..., m, K), codebook (m, K, dsub) -> out (..., d)."""
+  out_sub = jnp.einsum(
+      "...mk,mkd->...md", buckets.astype(jnp.float32),
+      value_codebook.astype(jnp.float32))
+  return out_sub.reshape(*out_sub.shape[:-2], -1)
+
+
+class PQAttnSegments(NamedTuple):
+  """One kv-head's compressed context (paper §IV-A layout).
+
+  sink: first tokens kept exact (8 by default); recent: sliding window kept exact
+  (32 by default, also the importance window t); body: PQ-compressed middle.
+  """
+  sink_k: Array          # (S0, d)
+  sink_v: Array          # (S0, d)
+  sink_mask: Array       # (S0,) bool
+  key_codebook: Array    # (m, K, dsub)  (or (nW, m, K, dsub) windowed)
+  value_codebook: Array  # (m, K, dsub)
+  key_indices: Array     # (N, m) int32
+  value_indices: Array   # (N, m) int32
+  body_mask: Array       # (N,) bool
+  recent_k: Array        # (R, d)
+  recent_v: Array        # (R, d)
+  recent_mask: Array     # (R,) bool
+
+
+def pq_decode_attention(
+    q: Array,
+    seg: PQAttnSegments,
+    scale: float,
+) -> Array:
+  """Single-step decode attention over compressed context, jointly softmaxed.
+
+  q: (g, d) — GQA query group sharing this kv head (g=1 for MHA).
+  Returns (g, d) attention outputs, f32.
+  """
+  q32 = q.astype(jnp.float32)
+
+  windowed = seg.key_codebook.ndim == 4
+  if windowed:
+    s_body = windowed_lookup_scores(
+        q32, seg.key_codebook, seg.key_indices) * scale
+  else:
+    table_k = inner_product_table(q32, seg.key_codebook)      # (g, m, K)
+    s_body = lookup_scores(table_k, seg.key_indices) * scale  # (g, N)
+  s_body = jnp.where(seg.body_mask[None, :], s_body, NEG_INF)
+
+  s_sink = (q32 @ seg.sink_k.astype(jnp.float32).T) * scale   # (g, S0)
+  s_sink = jnp.where(seg.sink_mask[None, :], s_sink, NEG_INF)
+  s_rec = (q32 @ seg.recent_k.astype(jnp.float32).T) * scale  # (g, R)
+  s_rec = jnp.where(seg.recent_mask[None, :], s_rec, NEG_INF)
+
+  # `initial` handles zero-size segments (e.g. sink-less configs)
+  m_all = jnp.maximum(
+      jnp.max(s_body, axis=-1, initial=NEG_INF),
+      jnp.maximum(jnp.max(s_sink, axis=-1, initial=NEG_INF),
+                  jnp.max(s_rec, axis=-1, initial=NEG_INF)),
+  )                                                            # (g,)
+  e_body = jnp.exp(s_body - m_all[:, None])
+  e_sink = jnp.exp(s_sink - m_all[:, None])
+  e_rec = jnp.exp(s_rec - m_all[:, None])
+  denom = (jnp.sum(e_body, -1) + jnp.sum(e_sink, -1) + jnp.sum(e_rec, -1))
+
+  if windowed:
+    out_body = windowed_output(e_body, seg.value_indices, seg.value_codebook)
+  else:
+    k_cent = seg.value_codebook.shape[1]
+    buckets = bucket_accumulate(e_body, seg.value_indices, k_cent)  # (g, m, K)
+    out_body = output_from_buckets(buckets, seg.value_codebook)     # (g, d)
+  out_sink = e_sink @ seg.sink_v.astype(jnp.float32)
+  out_rec = e_rec @ seg.recent_v.astype(jnp.float32)
+  return (out_body + out_sink + out_rec) / denom[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Page-aware windowed variant (paper §III-B Fig. 6, §III-F)
+# ---------------------------------------------------------------------------
+
+def windowed_lookup_scores(
+    q: Array, codebooks: Array, key_indices: Array
+) -> Array:
+  """q (g, d), codebooks (nW, m, K, dsub), key_indices (N, m), N = nW*W.
+
+  Each window has its own codebook page (one DRAM row on PIM; one VMEM tile on
+  TPU).  Tables are computed per window, lookups never cross a window boundary —
+  the TPU analogue of "indirection only happens within a page".
+  """
+  n_w = codebooks.shape[0]
+  n, m = key_indices.shape
+  w = n // n_w
+  idx_w = key_indices.reshape(n_w, w, m)
+
+  def per_window(cb, idx):
+    table = inner_product_table(q, cb)          # (g, m, K)
+    return lookup_scores(table, idx)            # (g, W)
+  scores = jax.vmap(per_window)(codebooks, idx_w)   # (nW, g, W)
+  return jnp.moveaxis(scores, 0, 1).reshape(q.shape[0], n)
+
+
+def windowed_output(
+    probs: Array, value_indices: Array, codebooks: Array
+) -> Array:
+  """probs (g, N), value_indices (N, m), codebooks (nW, m, K, dsub) -> (g, d)."""
+  n_w, m, k, dsub = codebooks.shape
+  g, n = probs.shape
+  w = n // n_w
+  p_w = probs.reshape(g, n_w, w)
+  idx_w = value_indices.reshape(n_w, w, m)
+
+  def per_window(p, cb, idx):
+    buckets = bucket_accumulate(p, idx, k)       # (g, m, K)
+    return output_from_buckets(buckets, cb)      # (g, d)
+  outs = jax.vmap(per_window, in_axes=(1, 0, 0))(p_w, codebooks, idx_w)
+  return jnp.sum(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Reference exact attention for error measurement
+# ---------------------------------------------------------------------------
+
+def exact_decode_attention(
+    q: Array, k: Array, v: Array, mask: Array, scale: float
+) -> Array:
+  """q (g, d), k/v (N, d), mask (N,) -> (g, d).  f32 oracle."""
+  s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+  s = jnp.where(mask[None, :], s, NEG_INF)
+  p = jax.nn.softmax(s, axis=-1)
+  return p @ v.astype(jnp.float32)

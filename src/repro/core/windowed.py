@@ -1,0 +1,106 @@
+"""Page-aware windowed clustering (AQPIM §III-B Fig. 6 + §III-F co-design).
+
+The sequence is divided into context windows; each window gets its own codebook
+"page" sized so all K centroids' inner products fit one DRAM row (PIM) / one VMEM
+tile (TPU).  When a window advances, the previous window's centroids are *copied to
+the new page and refined* on the new window's tokens (warm start) — Fig. 6 step (1).
+
+A single window over the whole sequence (the paper's default: 512 centroids for the
+entire context) is the degenerate case n_windows=1.
+
+Implemented as a `lax.scan` over windows, carrying the centroid state: this makes
+the whole compression step one fixed-shape jitted program that pjit can shard
+(windows are sequential by construction — the warm-start chain — but everything
+inside a window is data-parallel over subvectors/heads).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.core import kmeans, pq
+
+
+def windowed_build_codebooks(
+    x: Array,
+    weights: Array,
+    cfg: pq.PQConfig,
+    n_windows: int,
+    mask: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+  """Cluster a (N, d) token stream into n_windows warm-started codebook pages.
+
+  Returns:
+    codebooks: (n_windows, m, K, dsub) f32
+    indices:   (N, m) int32
+  """
+  n, d = x.shape
+  assert n % n_windows == 0, f"N={n} must divide into n_windows={n_windows}"
+  w_len = n // n_windows
+  m = cfg.m
+  xs = x.reshape(n_windows, w_len, d)
+  ws = weights.reshape(n_windows, w_len)
+  if mask is None:
+    mask = jnp.ones((n,), bool)
+  ms = mask.reshape(n_windows, w_len)
+
+  # subvector view per window: (nW, m, W, dsub)
+  xs_sub = jnp.swapaxes(pq.split(xs, m), 1, 2)
+
+  def first_window():
+    cb, idx = pq.build_codebook(xs[0], ws[0], cfg, mask=ms[0])
+    return cb, idx
+
+  cb0, idx0 = first_window()
+
+  def step(carry, inp):
+    prev_cb = carry                                   # (m, K, dsub)
+    x_w, w_w, m_w = inp                               # (W, d), (W,), (W,)
+    cb, idx = pq.build_codebook(
+        x_w, w_w, cfg, mask=m_w, init_codebook=prev_cb)
+    return cb, (cb, idx)
+
+  if n_windows == 1:
+    codebooks = cb0[None]
+    indices = idx0
+  else:
+    _, (cbs, idxs) = jax.lax.scan(
+        step, cb0, (xs[1:], ws[1:], ms[1:]))
+    codebooks = jnp.concatenate([cb0[None], cbs], axis=0)
+    indices = jnp.concatenate([idx0[None], idxs], axis=0).reshape(n, m)
+  return codebooks, indices
+
+
+def windowed_encode(
+    x: Array, codebooks: Array, window_ids: Array
+) -> Array:
+  """Encode tokens against their window's codebook page.
+
+  x: (N, d); codebooks: (nW, m, K, dsub); window_ids: (N,) int32 -> (N, m).
+  Used during decode to append a new token's indices (paper Fig. 3a decode step 3).
+  """
+  cb_tok = codebooks[window_ids]                      # (N, m, K, dsub)
+  m = codebooks.shape[1]
+  xs = pq.split(x, m)                                 # (N, m, dsub)
+
+  def assign_token(sub_tok, cb):
+    # sub_tok (m, dsub), cb (m, K, dsub)
+    d2 = jnp.sum((cb - sub_tok[:, None, :]) ** 2, axis=-1)  # (m, K)
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+  return jax.vmap(assign_token)(xs.astype(jnp.float32), cb_tok.astype(jnp.float32))
+
+
+def windowed_decode(
+    indices: Array, codebooks: Array
+) -> Array:
+  """Reconstruct (N, d) from windowed pages (testing/debug only — the attention
+  path never reconstructs; that is the point of the paper)."""
+  n_w, m, k, dsub = codebooks.shape
+  n = indices.shape[0]
+  w_len = n // n_w
+  idx_w = indices.reshape(n_w, w_len, m)
+  out = jax.vmap(pq.decode)(idx_w, codebooks)         # (nW, W, d)
+  return out.reshape(n, m * dsub)

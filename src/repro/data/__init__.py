@@ -1,0 +1,4 @@
+"""Deterministic sharded synthetic data pipeline."""
+from repro.data import pipeline
+
+__all__ = ["pipeline"]

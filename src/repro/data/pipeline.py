@@ -1,0 +1,85 @@
+"""Deterministic sharded synthetic LM data pipeline.
+
+Properties a real cluster needs and that the fault-tolerance layer relies on:
+
+  - *Deterministic by (step, position)*: batch contents are a pure function of the
+    global step, so a restarted job regenerates exactly the skipped batches —
+    no data-loader state in checkpoints.
+  - *Host-sharded*: each host materializes only its addressable shard
+    (jax.make_array_from_callback), so the pipeline scales to multi-pod meshes.
+  - *Structured tokens*: a mixture of copy/induction patterns and Zipfian noise so
+    small models show a real learning signal in the end-to-end example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+  vocab_size: int
+  seq_len: int
+  global_batch: int
+  seed: int = 0
+  induction_period: int = 64     # repeated-segment period (learnable structure)
+
+
+def _batch_numpy(cfg: DataConfig, step: int, lo: int, hi: int) -> np.ndarray:
+  """Rows [lo, hi) of the global batch for `step` — pure function of indices."""
+  rows = []
+  for r in range(lo, hi):
+    rng = np.random.default_rng(
+        np.uint64(cfg.seed * 1_000_003 + step * 65_537 + r))
+    zipf = rng.zipf(1.3, size=cfg.seq_len).astype(np.int64)
+    base = np.minimum(zipf, cfg.vocab_size - 1)
+    # induction structure: second half of each period repeats the first half
+    p = cfg.induction_period
+    seq = base.copy()
+    for start in range(0, cfg.seq_len - p, p):
+      half = p // 2
+      seq[start + half:start + p] = seq[start:start + half]
+    rows.append(seq)
+  return np.stack(rows).astype(np.int32)
+
+
+def make_batch(cfg: DataConfig, step: int, mesh: Optional[Mesh] = None,
+               batch_spec: Optional[P] = None) -> Dict[str, jax.Array]:
+  """Build the global batch for `step`, sharded over the mesh if given."""
+  shape = (cfg.global_batch, cfg.seq_len)
+  if mesh is None:
+    tokens = jnp.asarray(_batch_numpy(cfg, step, 0, cfg.global_batch))
+  else:
+    sharding = NamedSharding(mesh, batch_spec or P())
+    def cb(index):
+      rows = index[0]
+      lo = rows.start or 0
+      hi = rows.stop if rows.stop is not None else cfg.global_batch
+      return _batch_numpy(cfg, step, lo, hi)
+    tokens = jax.make_array_from_callback(shape, sharding, cb)
+  targets = jnp.concatenate(
+      [tokens[:, 1:], jnp.full((cfg.global_batch, 1), -1, jnp.int32)], axis=1)
+  return {"tokens": tokens, "targets": targets}
+
+
+def iterator(cfg: DataConfig, start_step: int = 0,
+             mesh: Optional[Mesh] = None,
+             batch_spec: Optional[P] = None) -> Iterator[Dict[str, jax.Array]]:
+  """Infinite deterministic stream; restart-safe via start_step skip-ahead."""
+  step = start_step
+  while True:
+    yield make_batch(cfg, step, mesh, batch_spec)
+    step += 1
+
+
+def from_shape(shape: ShapeConfig, vocab_size: int, seed: int = 0
+               ) -> DataConfig:
+  return DataConfig(vocab_size=vocab_size, seq_len=shape.seq_len,
+                    global_batch=shape.global_batch, seed=seed)

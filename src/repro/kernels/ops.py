@@ -1,0 +1,105 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+`interpret=None` auto-selects: Pallas interpret mode on CPU (this container),
+compiled Mosaic on real TPU.  The model code can also bypass kernels entirely
+(pure-JAX path) — see models/model.py `use_pallas` — which is what the multi-pod
+dry-run lowers (XLA-fused HLO is what cost_analysis reads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _flash
+from repro.kernels import kmeans_assign as _assign
+from repro.kernels import pq_decode as _pqd
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+  if interpret is None:
+    return jax.default_backend() != "tpu"
+  return interpret
+
+
+def pq_decode_attention(
+    q: jax.Array,               # (B, H_kv, g, d)
+    key_codebook: jax.Array,    # (B, H_kv, m, K, dsub)
+    value_codebook: jax.Array,  # (B, H_kv, m, K, dsub)
+    key_indices: jax.Array,     # (B, H_kv, N, m)
+    value_indices: jax.Array,   # (B, H_kv, N, m)
+    length: jax.Array,          # scalar or (B, H_kv)
+    scale: float,
+    blk: int = 512,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+  """PQ body attention. Returns (out (B,H,g,d) f32, max (B,H,g), denom (B,H,g))."""
+  b, h, g, d = q.shape
+  bh = b * h
+  m, k_cent, dsub = key_codebook.shape[2:]
+  n = key_indices.shape[2]
+  if jnp.ndim(length) == 0:
+    length = jnp.full((bh,), length, jnp.int32)
+  else:
+    length = length.reshape(bh).astype(jnp.int32)
+  vcbt = jnp.swapaxes(value_codebook, -1, -2)          # (B,H,m,dsub,K)
+  out, stats = _pqd.pq_decode_attention_kernel(
+      q.reshape(bh, g, d),
+      key_codebook.reshape(bh, m, k_cent, dsub).astype(jnp.float32),
+      vcbt.reshape(bh, m, dsub, k_cent).astype(jnp.float32),
+      key_indices.reshape(bh, n, m),
+      value_indices.reshape(bh, n, m),
+      length,
+      scale=scale, blk=blk, interpret=_auto_interpret(interpret))
+  out = out.reshape(b, h, g, d)
+  stats = stats.reshape(b, h, 2, g)
+  return out, stats[:, :, 0], stats[:, :, 1]
+
+
+def kmeans_assign(
+    x: jax.Array,          # (m, N, dsub)
+    centroids: jax.Array,  # (m, K, dsub)
+    blk: int = 1024,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+  m, n, dsub = x.shape
+  pad = (-n) % blk
+  if pad:
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+  out = _assign.kmeans_assign_kernel(
+      x, centroids, blk=blk, interpret=_auto_interpret(interpret))
+  return out[:, :n]
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    scale: float, causal: bool = True,
+    blk_q: int = 512, blk_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+  n = q.shape[2]
+  blk_q = min(blk_q, n)
+  blk_k = min(blk_k, n)
+  return _flash.flash_attention_kernel(
+      q, k, v, scale=scale, causal=causal, blk_q=blk_q, blk_k=blk_k,
+      interpret=_auto_interpret(interpret))
+
+
+def combine_attention_segments(outs, maxes, denoms) -> jax.Array:
+  """Exact flash-decoding combine of per-segment partial attentions.
+
+  Each segment supplies a *normalized* output plus its (running max, denom);
+  combining is numerically exact: softmax over the union of segments.
+  Shapes: out (..., g, d); max/denom (..., g).
+  """
+  m_all = functools.reduce(jnp.maximum, maxes)
+  num = None
+  den = None
+  for o, mm, l in zip(outs, maxes, denoms):
+    w = l * jnp.exp(mm - m_all)
+    term = o * w[..., None]
+    num = term if num is None else num + term
+    den = w if den is None else den + w
+  return num / jnp.maximum(den, 1e-30)[..., None]

@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: PQ decode attention on compressed KV (AQPIM Fig. 5 + §III-F).
+
+TPU adaptation of the paper's intra-row indirection: the inner-product table
+T[g, j, k] = <q_subvec, C_key[j, k]> is computed once per decode step and *pinned in
+VMEM scratch* — the analogue of the paper's "lookup table resides within a single
+DRAM row".  Per-token centroid-id lookups are then VMEM-local lane gathers
+(jnp.take_along_axis over the K lane axis), never re-touching HBM: every index block
+is streamed HBM->VMEM exactly once, like the paper's "one row activation per window".
+
+The value path adapts the paper's bucket-sum: instead of a scatter (TPU-hostile),
+each sequence block's value subvectors are gathered *block-locally in VMEM* from the
+value codebook (stored (m, dsub, K), gathers along lanes) and contracted against the
+attention probabilities on the MXU.  HBM traffic is identical to the paper's scheme
+(indices + codebook once); the reconstruction exists only inside VMEM — the paper
+avoids it because BankPEs cannot afford the buffer, which VMEM provides for free.
+
+Softmax is fused flash-decoding style: running (max, denom) carried across sequence
+blocks in VMEM scratch; the kernel emits the *body segment's* normalized output plus
+(max, denom) so the wrapper can exactly combine it with the full-precision sink and
+recent segments (paper §IV-A layout).
+
+Grid: (batch*kv_heads, sequence_blocks) — both sequential ("arbitrary") so scratch
+accumulators carry across the sequence axis; the batch*head axis revisits scratch
+from a clean @pl.when(j == 0) init.
+
+VMEM budget per grid cell (defaults g<=16, m=32, K=512, d=128, blk=512):
+  T (g, m, K) f32          <= 1.0 MiB
+  codebooks 2 * m*K*dsub   =  0.5 MiB (f32, in + transposed value layout)
+  index blocks 2*(blk, m)  =  0.128 MiB int32
+  acc/vrec/p blocks        <= 0.6 MiB
+  total                    ~  2.3 MiB  << VMEM
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pq_decode_kernel(
+    # scalar prefetch
+    length_ref,            # (BH,) int32 in SMEM — valid body tokens per row
+    # inputs
+    q_ref,                 # (1, g, d)
+    kcb_ref,               # (1, m, K, dsub)
+    vcbt_ref,              # (1, m, dsub, K)   value codebook, lane-gather layout
+    kidx_ref,              # (1, blk, m) int32
+    vidx_ref,              # (1, blk, m) int32
+    # outputs
+    out_ref,               # (1, g, d) f32
+    stats_ref,             # (1, 2, g) f32  [0]=running max, [1]=denom
+    # scratch
+    t_ref,                 # VMEM (g, m, K) f32
+    acc_ref,               # VMEM (g, d) f32
+    m_ref,                 # VMEM (g, 1) f32
+    l_ref,                 # VMEM (g, 1) f32
+    *,
+    scale: float,
+    blk: int,
+    n_blocks: int,
+):
+  bh = pl.program_id(0)
+  j = pl.program_id(1)
+  g, d = q_ref.shape[1], q_ref.shape[2]
+  m, k_cent, dsub = kcb_ref.shape[1], kcb_ref.shape[2], kcb_ref.shape[3]
+
+  @pl.when(j == 0)
+  def _init():
+    # Step 1-2 (paper): subvector split + inner-product table, once per step.
+    q = q_ref[0].astype(jnp.float32)                    # (g, d)
+    qs = q.reshape(g, m, dsub)
+    cb = kcb_ref[0].astype(jnp.float32)                 # (m, K, dsub)
+    # (g, m, K) = sum_dsub qs[g,m,:] * cb[m,K,:] — MXU contraction per subvector
+    t_ref[...] = jax.lax.dot_general(
+        qs.transpose(1, 0, 2), cb.transpose(0, 2, 1),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2) * scale                        # (m,g,K)->(g,m,K)
+    acc_ref[...] = jnp.zeros((g, d), jnp.float32)
+    m_ref[...] = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l_ref[...] = jnp.zeros((g, 1), jnp.float32)
+
+  length = length_ref[bh]
+  pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)[0]
+  valid = pos < length
+
+  @pl.when(j * blk < length)
+  def _block():
+    # Step 3-4 (paper): score lookup from the VMEM-resident table.
+    kidx = kidx_ref[0]                                  # (blk, m)
+    kidx_t = kidx.T                                     # (m, blk) lane-dim gather
+    def score_one(gi):
+      gath = jnp.take_along_axis(t_ref[gi], kidx_t, axis=1)   # (m, blk)
+      return jnp.sum(gath, axis=0)                            # (blk,)
+    s = jnp.stack([score_one(gi) for gi in range(g)])         # (g, blk)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    # Step 5 (paper): fused online softmax.
+    m_prev = m_ref[...]                                 # (g, 1)
+    mu = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, mu)
+    alpha = jnp.exp(m_prev - m_new)                     # (g, 1)
+    p = jnp.exp(s - m_new)                              # (g, blk)
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+
+    # Step 6-7 (paper): block-local VMEM gather of value subvectors + MXU contract.
+    vidx_t = vidx_ref[0].T                              # (m, blk)
+    def gather_v(mi):
+      idx = jnp.broadcast_to(vidx_t[mi][None, :], (dsub, blk))
+      return jnp.take_along_axis(vcbt_ref[0, mi], idx, axis=1)  # (dsub, blk)
+    vrec = jnp.concatenate([gather_v(mi) for mi in range(m)], axis=0)  # (d, blk)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, vrec, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (g, d)
+
+  @pl.when(j == n_blocks - 1)
+  def _finalize():
+    l = l_ref[...]
+    safe = jnp.maximum(l, 1e-30)
+    out_ref[0] = (acc_ref[...] / safe).astype(out_ref.dtype)
+    stats_ref[0, 0, :] = m_ref[...][:, 0]
+    stats_ref[0, 1, :] = l[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "blk", "interpret"),
+)
+def pq_decode_attention_kernel(
+    q: jax.Array,        # (BH, g, d)
+    key_codebook: jax.Array,    # (BH, m, K, dsub) f32
+    value_codebook_t: jax.Array,  # (BH, m, dsub, K) f32
+    key_indices: jax.Array,     # (BH, N, m) int32
+    value_indices: jax.Array,   # (BH, N, m) int32
+    length: jax.Array,          # (BH,) int32
+    scale: float,
+    blk: int = 512,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+  """Returns (body_out (BH, g, d) f32, stats (BH, 2, g) f32 = [max, denom])."""
+  bhn, g, d = q.shape
+  _, m, k_cent, dsub = key_codebook.shape
+  n = key_indices.shape[1]
+  assert n % blk == 0, f"body capacity {n} must be a multiple of blk={blk}"
+  n_blocks = n // blk
+
+  grid = (bhn, n_blocks)
+  kernel = functools.partial(
+      _pq_decode_kernel, scale=scale, blk=blk, n_blocks=n_blocks)
+
+  out, stats = pl.pallas_call(
+      kernel,
+      grid_spec=pltpu.PrefetchScalarGridSpec(
+          num_scalar_prefetch=1,
+          grid=grid,
+          in_specs=[
+              pl.BlockSpec((1, g, d), lambda bh, j, L: (bh, 0, 0)),
+              pl.BlockSpec((1, m, k_cent, dsub), lambda bh, j, L: (bh, 0, 0, 0)),
+              pl.BlockSpec((1, m, dsub, k_cent), lambda bh, j, L: (bh, 0, 0, 0)),
+              pl.BlockSpec((1, blk, m), lambda bh, j, L: (bh, j, 0)),
+              pl.BlockSpec((1, blk, m), lambda bh, j, L: (bh, j, 0)),
+          ],
+          out_specs=[
+              pl.BlockSpec((1, g, d), lambda bh, j, L: (bh, 0, 0)),
+              pl.BlockSpec((1, 2, g), lambda bh, j, L: (bh, 0, 0)),
+          ],
+          scratch_shapes=[
+              pltpu.VMEM((g, m, k_cent), jnp.float32),
+              pltpu.VMEM((g, d), jnp.float32),
+              pltpu.VMEM((g, 1), jnp.float32),
+              pltpu.VMEM((g, 1), jnp.float32),
+          ],
+      ),
+      out_shape=[
+          jax.ShapeDtypeStruct((bhn, g, d), jnp.float32),
+          jax.ShapeDtypeStruct((bhn, 2, g), jnp.float32),
+      ],
+      compiler_params=pltpu.CompilerParams(
+          dimension_semantics=("arbitrary", "arbitrary"),
+      ),
+      interpret=interpret,
+      name="pq_decode_attention",
+  )(length, q, key_codebook, value_codebook_t, key_indices, value_indices)
+  return out, stats

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as _kmeans
+from repro.core import pq_attention as _pqa
+
+NEG_INF = -1e30
+
+
+def pq_decode_attention_ref(
+    q: jax.Array,               # (BH, g, d)
+    key_codebook: jax.Array,    # (BH, m, K, dsub)
+    value_codebook: jax.Array,  # (BH, m, K, dsub)  (natural layout)
+    key_indices: jax.Array,     # (BH, N, m)
+    value_indices: jax.Array,   # (BH, N, m)
+    length: jax.Array,          # (BH,)
+    scale: float,
+) -> Tuple[jax.Array, jax.Array]:
+  """Oracle for kernels/pq_decode.py: (out (BH,g,d), stats (BH,2,g))."""
+  n = key_indices.shape[1]
+
+  def one(qh, kcb, vcb, kix, vix, ln):
+    mask = jnp.arange(n) < ln
+    table = _pqa.inner_product_table(qh.astype(jnp.float32), kcb)
+    s = _pqa.lookup_scores(table, kix) * scale            # (g, N)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    mrow = jnp.max(s, axis=-1)                            # (g,)
+    p = jnp.exp(s - mrow[:, None])
+    p = jnp.where(mask[None, :], p, 0.0)
+    denom = jnp.sum(p, axis=-1)
+    buckets = _pqa.bucket_accumulate(p, vix, vcb.shape[1])
+    out = _pqa.output_from_buckets(buckets, vcb) / jnp.maximum(
+        denom, 1e-30)[:, None]
+    stats = jnp.stack([mrow, denom])
+    return out, stats
+
+  return jax.vmap(one)(q, key_codebook, value_codebook,
+                       key_indices, value_indices, length)
+
+
+def kmeans_assign_ref(x: jax.Array, centroids: jax.Array) -> jax.Array:
+  """Oracle for kernels/kmeans_assign.py: (m, N) int32."""
+  return jax.vmap(_kmeans.assign_clusters)(x, centroids)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, scale: float, causal: bool = True,
+) -> jax.Array:
+  """Oracle for kernels/flash_attention.py: dense causal softmax attention."""
+  b, hq, n, d = q.shape
+  hkv = k.shape[1]
+  g = hq // hkv
+  k = jnp.repeat(k, g, axis=1)
+  v = jnp.repeat(v, g, axis=1)
+  s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                 k.astype(jnp.float32)) * scale
+  if causal:
+    mask = jnp.tril(jnp.ones((n, n), bool))
+    s = jnp.where(mask[None, None], s, NEG_INF)
+  p = jax.nn.softmax(s, axis=-1)
+  return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def combine_segments_ref(
+    outs: list, maxes: list, denoms: list
+) -> jax.Array:
+  """Flash-decoding combine of per-segment (normalized out, max, denom)."""
+  m_all = jnp.max(jnp.stack(maxes), axis=0)
+  num = 0.0
+  den = 0.0
+  for o, mm, l in zip(outs, maxes, denoms):
+    w = l * jnp.exp(mm - m_all)
+    num = num + o * w[..., None]
+    den = den + w
+  return num / jnp.maximum(den, 1e-30)[..., None]

@@ -1,0 +1,23 @@
+"""Production mesh construction (spec: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant — importing this module never touches jax
+device state.  Callers (dryrun.py) are responsible for setting
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+  shape = (2, 16, 16) if multi_pod else (16, 16)
+  axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+  return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: int | None = None):
+  """Mesh over whatever devices exist (tests / CPU smoke)."""
+  n = len(jax.devices())
+  if data is None:
+    data = n // model
+  return jax.make_mesh((data, model), ("data", "model"))

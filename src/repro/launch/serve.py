@@ -1,0 +1,125 @@
+"""End-to-end serving driver: batched prefill -> PQ compression -> decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+      --prompt-len 128 --gen 32 --batch 4
+
+This exercises the full AQPIM inference path (paper Fig. 3a): prefill computes
+exact attention AND builds the compressed cache (importance-weighted windowed
+clustering, hidden behind prefill); the decode loop appends tokens by PQ-encoding
+ring-buffer evictions and attends directly on compressed data.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_local_mesh
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass
+class ServeRun:
+  arch: str
+  reduced: bool = True
+  batch: int = 4
+  prompt_len: int = 128
+  gen: int = 32
+  pq: bool = True
+  seed: int = 0
+  greedy: bool = True
+  mesh: Any = None
+
+  def run(self):
+    cfg = get_arch(self.arch, reduced=self.reduced)
+    if not self.pq:
+      cfg = dataclasses.replace(cfg, pq_enabled=False)
+    context = self.prompt_len + self.gen
+    mesh = self.mesh or make_local_mesh()
+    shape = ShapeConfig("serve", context, self.batch, "decode")
+    progs = steps_lib.build_programs(cfg, shape, mesh, donate=False)
+    model = progs.model
+
+    key = jax.random.PRNGKey(self.seed)
+    params = jax.jit(
+        model.init,
+        out_shardings=shd.make_shardings(progs.param_specs, mesh))(key)
+    prompts = jax.random.randint(
+        key, (self.batch, self.prompt_len), 0, cfg.vocab_size)
+    modal = None
+    if cfg.frontend == "audio_frames":
+      modal = jnp.zeros((self.batch, context, cfg.d_model), cfg.dtype)
+    elif cfg.frontend == "vision_patches":
+      modal = jnp.zeros((self.batch, cfg.n_modal_tokens, cfg.d_model),
+                        cfg.dtype)
+
+    with mesh:
+      t0 = time.monotonic()
+      prefill = jax.jit(model.prefill)
+      m_pref = modal[:, :self.prompt_len] if (
+          modal is not None and cfg.frontend == "audio_frames") else modal
+      logits, cache = prefill(params, prompts, m_pref)
+      logits.block_until_ready()
+      t_prefill = time.monotonic() - t0
+
+      # pad recurrent/kv caches built at prompt_len up to full context capacity
+      cache = _pad_cache_to(model, cache, self.batch)
+
+      step = jax.jit(model.decode_step)
+      tokens = [jnp.argmax(logits, -1).astype(jnp.int32)]
+      t1 = time.monotonic()
+      for i in range(self.gen):
+        length = jnp.asarray(self.prompt_len + i, jnp.int32)
+        m_step = (modal[:, self.prompt_len + i:self.prompt_len + i + 1]
+                  if modal is not None and cfg.frontend == "audio_frames"
+                  else modal)
+        logits, cache = step(params, tokens[-1], cache, length, m_step)
+        tokens.append(jnp.argmax(logits, -1).astype(jnp.int32))
+      jax.block_until_ready(tokens[-1])
+      t_decode = time.monotonic() - t1
+
+    out = jnp.stack(tokens[:-1], axis=1)
+    return {
+        "tokens": out,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "tok_per_s": self.batch * self.gen / max(t_decode, 1e-9),
+        "pq": cfg.pq_enabled and cfg.supports_pq,
+    }
+
+
+def _pad_cache_to(model, cache, batch):
+  """Prefill builds caches at context capacity already (PQ) — exact caches are
+  padded to the model's context_len by exact_cache_prefill; recurrent states
+  carry no length.  Nothing to do today; hook kept for ring-resize variants."""
+  return cache
+
+
+def main():
+  ap = argparse.ArgumentParser(description=__doc__)
+  ap.add_argument("--arch", default="tinyllama-1.1b")
+  ap.add_argument("--reduced", action="store_true")
+  ap.add_argument("--batch", type=int, default=4)
+  ap.add_argument("--prompt-len", type=int, default=128)
+  ap.add_argument("--gen", type=int, default=32)
+  ap.add_argument("--no-pq", action="store_true")
+  args = ap.parse_args()
+
+  run = ServeRun(arch=args.arch, reduced=args.reduced, batch=args.batch,
+                 prompt_len=args.prompt_len, gen=args.gen, pq=not args.no_pq)
+  res = run.run()
+  print(f"arch={args.arch} pq={res['pq']} "
+        f"prefill={res['prefill_s']:.2f}s decode={res['decode_s']:.2f}s "
+        f"({res['tok_per_s']:.1f} tok/s)")
+  print("sample tokens:", res["tokens"][0, :16].tolist())
+
+
+if __name__ == "__main__":
+  main()

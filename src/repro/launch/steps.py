@@ -1,0 +1,253 @@
+"""Step builders: jitted/shardable train_step, prefill_step, serve_step per
+(architecture x shape x mesh), plus ShapeDtypeStruct input specs for the dry-run.
+
+These are the programs the multi-pod dry-run lowers and the launchers execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Model
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                model: Optional[Model] = None) -> Dict[str, Any]:
+  """Every model input for the given shape, as ShapeDtypeStructs.
+
+  train:   {tokens (B,S) i32, targets (B,S) i32[, modal]}
+  prefill: {tokens (B,S) i32[, modal]}
+  decode:  {token (B,) i32, cache <tree>, length () i32[, modal]}
+  """
+  b, s = shape.global_batch, shape.seq_len
+  i32 = jnp.int32
+  sds = jax.ShapeDtypeStruct
+
+  def modal_spec(seq: int):
+    if cfg.frontend == "audio_frames":
+      return sds((b, seq, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "vision_patches":
+      return sds((b, cfg.n_modal_tokens, cfg.d_model), cfg.dtype)
+    return None
+
+  if shape.kind == "train":
+    specs = {"tokens": sds((b, s), i32), "targets": sds((b, s), i32)}
+    m = modal_spec(s)
+    if m is not None:
+      specs["modal"] = m
+    return specs
+
+  if shape.kind == "prefill":
+    specs = {"tokens": sds((b, s), i32)}
+    m = modal_spec(s)
+    if m is not None:
+      specs["modal"] = m
+    return specs
+
+  # decode: one new token against a cache of seq_len
+  model = model or Model(cfg, context_len=s)
+  cache = jax.eval_shape(lambda: model.init_cache(b))
+  specs = {"token": sds((b,), i32), "cache": cache,
+           "length": sds((), i32)}
+  m = modal_spec(1)
+  if m is not None:
+    specs["modal"] = m
+  return specs
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, opt_cfg: adamw.OptConfig):
+  """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+  cfg.microbatches > 1: gradient accumulation — the global batch is processed
+  in chunks under lax.scan, bounding live activation memory (how a 1M-token
+  llama-405b batch fits 16 GB/chip); grads are averaged before the update.
+  """
+  n_micro_cfg = max(model.cfg.microbatches, 1)
+
+  def grad_of(params, batch):
+    return jax.value_and_grad(model.train_loss, has_aux=True)(params, batch)
+
+  def train_step(params, opt_state, batch):
+    b = batch["tokens"].shape[0]
+    n_micro = n_micro_cfg if (b >= n_micro_cfg and b % n_micro_cfg == 0) else 1
+    if n_micro == 1:
+      (loss, metrics), grads = grad_of(params, batch)
+    else:
+      def split(x):
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+      micro = jax.tree_util.tree_map(split, batch)
+
+      def body(acc, mb):
+        (l, m), g = grad_of(params, mb)
+        acc_g, acc_l = acc
+        acc_g = jax.tree_util.tree_map(
+            lambda a, b_: a + b_.astype(jnp.float32) / n_micro, acc_g, g)
+        return (acc_g, acc_l + l / n_micro), None
+
+      zero = jax.tree_util.tree_map(
+          lambda p_: jnp.zeros(p_.shape, jnp.float32), params)
+      (grads, loss), _ = jax.lax.scan(body, (zero, jnp.float32(0)), micro)
+      metrics = {"tokens": jnp.float32(
+          batch["tokens"].shape[0] * batch["tokens"].shape[1])}
+    new_params, new_opt, opt_metrics = adamw.update(
+        opt_cfg, opt_state, params, grads)
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    return new_params, new_opt, metrics
+  return train_step
+
+
+def make_prefill_step(model: Model):
+  def prefill_step(params, batch):
+    return model.prefill(params, batch["tokens"], batch.get("modal"))
+  return prefill_step
+
+
+def make_serve_step(model: Model):
+  def serve_step(params, batch):
+    return model.decode_step(params, batch["token"], batch["cache"],
+                             batch["length"], batch.get("modal"))
+  return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharded (pjit) builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedPrograms:
+  """Everything needed to lower/execute one (arch, shape, mesh) cell."""
+  model: Model
+  mesh: Mesh
+  param_specs: Any
+  fn: Any                 # the jitted function
+  in_specs: Any           # pspecs matching fn's args
+  out_specs: Any
+  abstract_inputs: Tuple  # SDS tree matching fn's args
+
+
+def _batch_specs_tree(cfg: ModelConfig, mesh: Mesh, specs: Dict[str, Any],
+                      seq_shard: bool, model_obj: Model) -> Dict[str, Any]:
+  da = shd.data_axes(mesh)
+  n_data = 1
+  for a in da:
+    n_data *= mesh.shape[a]
+
+  def batch_ax(b: int):
+    return da if b % n_data == 0 and b >= n_data else None
+
+  out = {}
+  for k, v in specs.items():
+    if k in ("tokens", "targets"):
+      out[k] = P(batch_ax(v.shape[0]), None)
+    elif k == "modal":
+      out[k] = P(batch_ax(v.shape[0]), None, None)
+    elif k == "token":
+      out[k] = P(batch_ax(v.shape[0]))
+    elif k == "length":
+      out[k] = P()
+    elif k == "cache":
+      batch = jax.tree_util.tree_leaves(v)[0].shape[1]
+      out[k] = shd.cache_pspecs(v, mesh, batch, shard_sequence=seq_shard)
+    else:
+      out[k] = P()
+  return out
+
+
+def build_programs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   opt_cfg: Optional[adamw.OptConfig] = None,
+                   donate: bool = True) -> ShardedPrograms:
+  """Construct the jitted program + shardings for one cell."""
+  model = Model(cfg, context_len=shape.seq_len)
+  model_axis = mesh.shape["model"]
+
+  abstract_params = jax.eval_shape(
+      functools.partial(model.init), jax.random.PRNGKey(0))
+  context_par = cfg.context_parallel and shape.kind == "prefill"
+  if context_par:
+    # context parallelism: weights replicated, sequence over the model axis
+    pspecs = jax.tree_util.tree_map(
+        lambda leaf: P(*([None] * leaf.ndim)), abstract_params)
+  else:
+    pspecs = shd.param_pspecs(abstract_params, cfg, model_axis,
+                              mesh_axes=dict(mesh.shape))
+  specs = input_specs(cfg, shape, model)
+  # long-context batch=1 decode: sequence-parallel PQ body
+  seq_shard = (shape.is_decode and shape.global_batch == 1) or context_par
+  bspecs = _batch_specs_tree(cfg, mesh, specs, seq_shard, model)
+  if context_par:
+    bspecs["tokens"] = P(shd.data_axes(mesh), "model")
+
+  if shape.kind == "train":
+    opt_cfg = opt_cfg or adamw.OptConfig()
+    abstract_opt = jax.eval_shape(
+        functools.partial(adamw.init, opt_cfg), abstract_params)
+    # ZeRO-1: master/moments are FSDP-sharded over the data axes even when the
+    # weights themselves are TP-only (f32 optimizer state is 6x the bf16
+    # weights — it must never be data-replicated at scale)
+    zero1 = shd.param_pspecs(
+        abstract_params, dataclasses.replace(cfg, fsdp=True), model_axis,
+        mesh_axes=dict(mesh.shape))
+    opt_specs = adamw.OptState(
+        step=P(),
+        mu=zero1, nu=jax.tree_util.tree_map(lambda s: s, zero1),
+        master=zero1 if abstract_opt.master is not None else None,
+        error=zero1 if abstract_opt.error is not None else None)
+    fn = jax.jit(
+        make_train_step(model, opt_cfg),
+        in_shardings=(shd.make_shardings(pspecs, mesh),
+                      shd.make_shardings(opt_specs, mesh),
+                      shd.make_shardings(bspecs, mesh)),
+        out_shardings=(shd.make_shardings(pspecs, mesh),
+                       shd.make_shardings(opt_specs, mesh),
+                       None),
+        donate_argnums=(0, 1) if donate else ())
+    return ShardedPrograms(
+        model=model, mesh=mesh, param_specs=pspecs, fn=fn,
+        in_specs=(pspecs, opt_specs, bspecs),
+        out_specs=(pspecs, opt_specs, None),
+        abstract_inputs=(abstract_params, abstract_opt, specs))
+
+  if shape.kind == "prefill":
+    cache_shape = jax.eval_shape(
+        lambda p, b: model.prefill(p, b["tokens"], b.get("modal")),
+        abstract_params, specs)[1]
+    cache_specs = shd.cache_pspecs(
+        cache_shape, mesh, shape.global_batch, shard_sequence=context_par)
+    fn = jax.jit(
+        make_prefill_step(model),
+        in_shardings=(shd.make_shardings(pspecs, mesh),
+                      shd.make_shardings(bspecs, mesh)),
+        out_shardings=(None, shd.make_shardings(cache_specs, mesh)))
+    return ShardedPrograms(
+        model=model, mesh=mesh, param_specs=pspecs, fn=fn,
+        in_specs=(pspecs, bspecs), out_specs=(None, cache_specs),
+        abstract_inputs=(abstract_params, specs))
+
+  # decode
+  cache_specs = bspecs["cache"]
+  fn = jax.jit(
+      make_serve_step(model),
+      in_shardings=(shd.make_shardings(pspecs, mesh),
+                    shd.make_shardings(bspecs, mesh)),
+      out_shardings=(None, shd.make_shardings(cache_specs, mesh)),
+      donate_argnums=(1,) if donate else ())
+  return ShardedPrograms(
+      model=model, mesh=mesh, param_specs=pspecs, fn=fn,
+      in_specs=(pspecs, bspecs), out_specs=(None, cache_specs),
+      abstract_inputs=(abstract_params, specs))

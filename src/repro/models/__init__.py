@@ -1,0 +1,4 @@
+"""Model zoo: composable decoder blocks for all assigned architecture families."""
+from repro.models.model import Model
+
+__all__ = ["Model"]

@@ -1,0 +1,285 @@
+"""Composable transformer layers: norms, RoPE, chunked (flash-style) attention,
+SwiGLU MLP.  Everything is functional: `init_*` builds param dicts, `apply`-style
+functions consume them.  Compute dtype is the config dtype (bf16 by default) with
+f32 for softmax/norm statistics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+
+NEG_INF = -1e30
+
+
+def activation_constraint(x: Array) -> Array:
+  """Best-effort sequence-over-model sharding of the (B, S, D) residual stream
+  (Megatron-SP style): bounds remat-saved activation memory at 405B scale.
+  No-op outside a mesh context (eager tests) or on unsuitable shapes."""
+  try:
+    from jax.sharding import PartitionSpec as _P
+    if x.ndim == 3 and x.shape[1] % 16 == 0:
+      return jax.lax.with_sharding_constraint(
+          x, _P(None, "model", None))
+    return x
+  except Exception:   # noqa: BLE001 — no mesh / axis absent: leave unsharded
+    return x
+
+
+# ---------------------------------------------------------------------------
+# int8 weight storage (beyond-paper serving optimization, §Perf cell C)
+#
+# Weights live in HBM as int8 + per-output-channel f32 scale; dequantization
+# happens in-registers at use (XLA fuses `q.astype(bf16) * scale` into the
+# consuming dot).  Halves the parameter term of the decode memory roofline.
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: Array, contract_axes) -> dict:
+  """Symmetric per-output-channel int8 quantization."""
+  w32 = w.astype(jnp.float32)
+  amax = jnp.max(jnp.abs(w32), axis=contract_axes, keepdims=True)
+  scale = jnp.maximum(amax, 1e-12) / 127.0
+  q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+  return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def wv(w, dtype=jnp.bfloat16) -> Array:
+  """Weight view: dequantize int8-stored weights, pass plain arrays through."""
+  if isinstance(w, dict) and "q" in w:
+    return (w["q"].astype(jnp.float32) * w["scale"]).astype(dtype)
+  return w
+
+
+def embed_lookup(embed, tokens: Array) -> Array:
+  """Embedding gather that dequantizes only the gathered rows."""
+  if isinstance(embed, dict) and "q" in embed:
+    rows = embed["q"][tokens].astype(jnp.float32)
+    return (rows * embed["scale"][tokens]).astype(jnp.bfloat16)
+  return embed[tokens]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> Array:
+  """Truncated-normal fan-in init."""
+  shape = (in_dim,) + tuple(out_shape)
+  scale = 1.0 / jnp.sqrt(in_dim)
+  return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+          * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Array:
+  return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+  return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+  x32 = x.astype(jnp.float32)
+  var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+  out = x32 * jax.lax.rsqrt(var + eps)
+  return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+  half = head_dim // 2
+  return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+  """x (..., S, H, hd), positions (..., S) or (S,)."""
+  hd = x.shape[-1]
+  freqs = rope_freqs(hd, theta)                        # (hd/2,)
+  angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+  cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, hd/2)
+  sin = jnp.sin(angles)[..., None, :]
+  x32 = x.astype(jnp.float32)
+  x1, x2 = jnp.split(x32, 2, axis=-1)
+  out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+  return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (pure-JAX flash) — differentiable, O(blk^2) memory
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: Array,            # (B, Hq, S, d)
+    k: Array,            # (B, Hkv, S, d)
+    v: Array,            # (B, Hkv, S, d)
+    scale: float,
+    causal: bool = True,
+    blk_q: int = 512,
+    blk_k: int = 512,
+) -> Array:
+  """Blockwise online-softmax attention; the lowered-HLO twin of the Pallas kernel.
+
+  Structured as scan(q blocks) x scan(kv blocks) so XLA never materializes the
+  (S, S) score matrix — essential for the 32k prefill and 4k x 256 train shapes.
+  GQA via reshaping q to (B, Hkv, g, S, d).
+  """
+  b, hq, sq, d = q.shape
+  hkv, sk = k.shape[1], k.shape[2]
+  g = hq // hkv
+  blk_q = min(blk_q, sq)
+  blk_k = min(blk_k, sk)
+  sq_real, sk_real = sq, sk
+  pad_q = (-sq) % blk_q
+  pad_k = (-sk) % blk_k
+  if pad_q:
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    sq += pad_q
+  if pad_k:
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sk += pad_k
+  nq, nk = sq // blk_q, sk // blk_k
+
+  qg = q.reshape(b, hkv, g, sq, d)
+  q_blocks = qg.reshape(b, hkv, g, nq, blk_q, d)
+  k_blocks = k.reshape(b, hkv, nk, blk_k, d)
+  v_blocks = v.reshape(b, hkv, nk, blk_k, d)
+
+  def q_block_body(qi, q_blk):
+    # q_blk (b, hkv, g, blk_q, d)
+    def kv_body(carry, inputs):
+      acc, m_i, l_i = carry
+      kj, k_blk, v_blk = inputs
+      s_blk = jnp.einsum(
+          "bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+          k_blk.astype(jnp.float32)) * scale
+      kpos = kj * blk_k + jnp.arange(blk_k)
+      if causal:
+        qpos = qi * blk_q + jnp.arange(blk_q)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < sk_real)
+        s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+      elif pad_k:
+        s_blk = jnp.where((kpos < sk_real)[None, None, None, None],
+                          s_blk, NEG_INF)
+      mu = jnp.max(s_blk, axis=-1)
+      m_new = jnp.maximum(m_i, mu)
+      alpha = jnp.exp(m_i - m_new)
+      p = jnp.exp(s_blk - m_new[..., None])
+      l_new = alpha * l_i + jnp.sum(p, axis=-1)
+      acc = alpha[..., None] * acc + jnp.einsum(
+          "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+      return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hkv, g, blk_q, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, blk_q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, blk_q), jnp.float32)
+    kjs = jnp.arange(nk)
+    (acc, m_i, l_i), _ = jax.lax.scan(
+        kv_body, (acc0, m0, l0),
+        (kjs, jnp.moveaxis(k_blocks, 2, 0), jnp.moveaxis(v_blocks, 2, 0)))
+    return acc / jnp.maximum(l_i, 1e-30)[..., None]
+
+  outs = jax.lax.map(
+      lambda args: q_block_body(*args),
+      (jnp.arange(nq), jnp.moveaxis(q_blocks, 3, 0)))
+  # outs (nq, b, hkv, g, blk_q, d) -> (b, hq, sq_real, d)
+  out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq, d)
+  return out.reshape(b, hq, sq, d)[:, :, :sq_real].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype) -> dict:
+  ks = jax.random.split(key, 4)
+  return {
+      "wq": dense_init(ks[0], d_model, (n_heads, head_dim), dtype),
+      "wk": dense_init(ks[1], d_model, (n_kv_heads, head_dim), dtype),
+      "wv": dense_init(ks[2], d_model, (n_kv_heads, head_dim), dtype),
+      "wo": dense_init(ks[3], n_heads * head_dim, (d_model,), dtype).reshape(
+          n_heads, head_dim, d_model),
+  }
+
+
+def attention_qkv(params: dict, x: Array, positions: Array,
+                  rope_theta: float) -> Tuple[Array, Array, Array]:
+  """x (B, S, D) -> q (B, H, S, hd), k/v (B, Hkv, S, hd), RoPE applied."""
+  q = jnp.einsum("bsd,dhk->bshk", x, wv(params["wq"], x.dtype))
+  k = jnp.einsum("bsd,dhk->bshk", x, wv(params["wk"], x.dtype))
+  v = jnp.einsum("bsd,dhk->bshk", x, wv(params["wv"], x.dtype))
+  q = apply_rope(q, positions, rope_theta)
+  k = apply_rope(k, positions, rope_theta)
+  return (jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2))
+
+
+def attention_out(params: dict, attn: Array) -> Array:
+  """attn (B, H, S, hd) -> (B, S, D)."""
+  return jnp.einsum("bhsk,hkd->bsd", attn, wv(params["wo"], attn.dtype))
+
+
+def self_attention(params: dict, x: Array, positions: Array, scale: float,
+                   rope_theta: float, blk: int = 512) -> Array:
+  from repro.models import flash
+  q, k, v = attention_qkv(params, x, positions, rope_theta)
+  s = q.shape[2]
+  if s % min(blk, s) == 0:
+    # flash path with the memory-correct custom VJP (O(S) residuals)
+    attn = flash.flash_attention(q, k, v, scale, True, min(blk, s))
+  else:
+    attn = chunked_attention(q, k, v, scale, causal=True, blk_q=blk, blk_k=blk)
+  return attention_out(params, attn)
+
+
+def cross_attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                         head_dim: int, dtype) -> dict:
+  p = attention_init(key, d_model, n_heads, n_kv_heads, head_dim, dtype)
+  p["q_norm"] = rmsnorm_init(head_dim, dtype)
+  p["k_norm"] = rmsnorm_init(head_dim, dtype)
+  return p
+
+
+def cross_attention(params: dict, x: Array, kv_src: Array, scale: float,
+                    blk: int = 512) -> Array:
+  """x (B, S, D) attends to kv_src (B, T, D) (no causality, no RoPE —
+  llama-3.2-vision style with q/k norms)."""
+  q = jnp.einsum("bsd,dhk->bshk", x, wv(params["wq"], x.dtype))
+  k = jnp.einsum("btd,dhk->bthk", kv_src, wv(params["wk"], x.dtype))
+  v = jnp.einsum("btd,dhk->bthk", kv_src, wv(params["wv"], x.dtype))
+  q = rmsnorm(params["q_norm"], q)
+  k = rmsnorm(params["k_norm"], k)
+  q, k, v = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+  attn = chunked_attention(q, k, v, scale, causal=False,
+                           blk_q=min(blk, q.shape[2]), blk_k=min(blk, k.shape[2]))
+  return attention_out(params, attn)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+  ks = jax.random.split(key, 3)
+  return {
+      "w_gate": dense_init(ks[0], d_model, (d_ff,), dtype),
+      "w_up": dense_init(ks[1], d_model, (d_ff,), dtype),
+      "w_down": dense_init(ks[2], d_ff, (d_model,), dtype),
+  }
+
+
+def mlp(params: dict, x: Array) -> Array:
+  gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, wv(params["w_gate"], x.dtype)))
+  up = jnp.einsum("bsd,df->bsf", x, wv(params["w_up"], x.dtype))
+  return jnp.einsum("bsf,fd->bsd", gate * up, wv(params["w_down"], x.dtype))

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch (qwen2-moe / phi3.5-moe).
+
+Dispatch is the MaxText/Mixtral-JAX style sorted-scatter: flatten (token, slot)
+pairs, sort by expert id, place into a fixed-capacity per-expert buffer, run all
+experts as one batched einsum (the EP-shardable tensor), gather back and combine
+with router weights.  Static shapes throughout (capacity-factor drop policy), so it
+lowers cleanly under pjit; with experts sharded over the `model` axis GSPMD turns
+the scatter/gather into all-to-alls — the EP pattern.
+
+qwen2-moe extras: 4 shared experts (a dense SwiGLU of 4x moe_d_ff) with a sigmoid
+shared-gate, plus 60 routed top-4 with normalized top-k probs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.models import layers
+
+
+def moe_init(key, d_model: int, n_experts: int, moe_d_ff: int,
+             n_shared: int, top_k: int, dtype) -> dict:
+  ks = jax.random.split(key, 5)
+  p = {
+      "router": layers.dense_init(ks[0], d_model, (n_experts,), jnp.float32),
+      "w_gate": jax.vmap(
+          lambda k_: layers.dense_init(k_, d_model, (moe_d_ff,), dtype))(
+              jax.random.split(ks[1], n_experts)),
+      "w_up": jax.vmap(
+          lambda k_: layers.dense_init(k_, d_model, (moe_d_ff,), dtype))(
+              jax.random.split(ks[2], n_experts)),
+      "w_down": jax.vmap(
+          lambda k_: layers.dense_init(k_, moe_d_ff, (d_model,), dtype))(
+              jax.random.split(ks[3], n_experts)),
+  }
+  if n_shared > 0:
+    kss = jax.random.split(ks[4], 2)
+    p["shared"] = layers.mlp_init(kss[0], d_model, n_shared * moe_d_ff, dtype)
+    p["shared_gate"] = layers.dense_init(kss[1], d_model, (1,), jnp.float32)
+  return p
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def route_topk(router_logits: Array, top_k: int) -> Tuple[Array, Array]:
+  """(T, E) logits -> (weights (T, k) f32 normalized, expert ids (T, k) int32)."""
+  probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+  w, ids = jax.lax.top_k(probs, top_k)
+  w = w / jnp.sum(w, axis=-1, keepdims=True)           # norm_topk_prob
+  return w, ids.astype(jnp.int32)
+
+
+def load_balancing_loss(router_logits: Array, ids: Array, n_experts: int,
+                        top_k: int) -> Array:
+  """Switch-style aux loss: E * sum_e f_e * P_e."""
+  probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+  p_e = jnp.mean(probs, axis=0)                         # (E,)
+  onehot = jax.nn.one_hot(ids, n_experts, dtype=jnp.float32)  # (T, k, E)
+  f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)       # (E,)
+  return n_experts * jnp.sum(f_e * p_e)
+
+
+def _quant_rows(x: Array) -> Tuple[Array, Array]:
+  """Per-row symmetric int8 (the quantized-a2a wire format)."""
+  scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), -1,
+                              keepdims=True), 1e-12) / 127.0
+  q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+               ).astype(jnp.int8)
+  return q, scale
+
+
+def moe_ffn(
+    params: dict,
+    x: Array,                 # (B, S, D)
+    top_k: int,
+    n_experts: int,
+    capacity_factor: float = 1.25,
+    a2a_quant: bool = False,
+) -> Tuple[Array, Array]:
+  """Returns (out (B, S, D), aux_loss scalar).
+
+  a2a_quant: int8-quantize the token rows crossing the EP dispatch/combine
+  all-to-alls (halves the dominant MoE-training collective bytes; §Perf B).
+  """
+  b, s, d = x.shape
+  t = b * s
+  xf = x.reshape(t, d)
+  logits = xf.astype(jnp.float32) @ params["router"]    # (T, E)
+  w, ids = route_topk(logits, top_k)                    # (T, k)
+  aux = load_balancing_loss(logits, ids, n_experts, top_k)
+
+  capacity = int(max(1, round(t * top_k / n_experts * capacity_factor)))
+  # --- sorted dispatch ---
+  flat_ids = ids.reshape(-1)                            # (T*k,)
+  order = jnp.argsort(flat_ids)                         # stable
+  sorted_ids = flat_ids[order]
+  tok_of = order // top_k                               # source token per slot
+  # position within each expert's contiguous segment
+  first_occurrence = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+  seg_pos = jnp.arange(t * top_k) - first_occurrence
+  keep = seg_pos < capacity                             # drop overflow
+  slot = sorted_ids * capacity + jnp.clip(seg_pos, 0, capacity - 1)
+
+  safe_slot = jnp.where(keep, slot, n_experts * capacity - 1)
+  if a2a_quant:
+    # dispatch int8 rows + scales; dequantize expert-side (post all-to-all)
+    xq, xscale = _quant_rows(xf)
+    bufq = jnp.zeros((n_experts * capacity, d), jnp.int8).at[safe_slot].set(
+        jnp.where(keep[:, None], xq[tok_of], 0), mode="drop")
+    bufs = jnp.zeros((n_experts * capacity, 1), jnp.float32).at[safe_slot].set(
+        jnp.where(keep[:, None], xscale[tok_of], 0), mode="drop")
+    buf = (bufq.astype(jnp.float32) * bufs).astype(x.dtype)
+  else:
+    buf = jnp.zeros((n_experts * capacity, d), x.dtype)
+    buf = buf.at[safe_slot].set(
+        jnp.where(keep[:, None], xf[tok_of], 0), mode="drop")
+  buf = buf.reshape(n_experts, capacity, d)
+
+  # --- batched experts (the EP-shardable einsum) ---
+  gate = jax.nn.silu(jnp.einsum(
+      "ecd,edf->ecf", buf, layers.wv(params["w_gate"], buf.dtype)))
+  up = jnp.einsum("ecd,edf->ecf", buf, layers.wv(params["w_up"], buf.dtype))
+  expert_out = jnp.einsum(
+      "ecf,efd->ecd", gate * up, layers.wv(params["w_down"], buf.dtype))
+  expert_out = expert_out.reshape(n_experts * capacity, d)
+
+  # --- combine ---
+  if a2a_quant:
+    eq, es = _quant_rows(expert_out)                    # int8 return a2a
+    gathered = (eq[slot].astype(jnp.float32) * es[slot]) * keep[:, None]
+    gathered = gathered.astype(expert_out.dtype)
+  else:
+    gathered = expert_out[slot] * keep[:, None]         # (T*k, D)
+  w_sorted = w.reshape(-1)[order]
+  contrib = gathered.astype(jnp.float32) * w_sorted[:, None]
+  out = jnp.zeros((t, d), jnp.float32).at[tok_of].add(contrib)
+
+  if "shared" in params:
+    sg = jax.nn.sigmoid(xf.astype(jnp.float32) @ params["shared_gate"])
+    shared = layers.mlp(params["shared"], x).reshape(t, d)
+    out = out + sg * shared.astype(jnp.float32)
+
+  return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,52 @@
+"""int8 weight-storage conversion (beyond-paper serving optimization).
+
+Walks a parameter tree and replaces every matmul weight with
+{"q": int8, "scale": f32 per-output-channel}.  The decode memory roofline is
+parameter-read dominated at small batch; int8 storage halves that term vs bf16
+(EXPERIMENTS.md §Perf cell C).  Consumers dequantize through layers.wv /
+layers.embed_lookup — XLA fuses the dequant into the dot.
+
+Path -> contract-axes rules (negative axes: leaves carry stacked layer dims):
+  attn|cross / wq|wk|wv : (.., D, H, hd)  contract -3
+  attn|cross / wo       : (.., H, hd, D)  contract (-3, -2)
+  mlp|shared / w_gate|w_up : (.., D, F)   contract -2
+  mlp|shared / w_down      : (.., F, D)   contract -2
+  moe / w_*             : (.., E, D, F) / (.., E, F, D)  contract -2
+  lm_head               : (D, V)          contract -2 (=0)
+  embed                 : (V, D)          contract -1 (per-row)
+RWKV/SSM weights are left in bf16 (recurrent numerics are more sensitive; the
+families are small — documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+
+from repro.models import layers
+
+_RULES = (
+    (re.compile(r"(attn|cross)/w[qkv]$"), (-3,)),
+    (re.compile(r"(attn|cross)/wo$"), (-3, -2)),
+    (re.compile(r"(mlp|shared|cross_mlp)/w_(gate|up|down)$"), (-2,)),
+    (re.compile(r"moe/w_(gate|up|down)$"), (-2,)),
+    (re.compile(r"^lm_head$"), (-2,)),
+    (re.compile(r"^embed$"), (-1,)),
+)
+
+
+def _path_str(path) -> str:
+  return "/".join(
+      str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def quantize_params(params: Any) -> Any:
+  """Return a new tree with int8-stored matmul weights."""
+  def rule(path, leaf):
+    s = _path_str(path)
+    for pat, axes in _RULES:
+      if pat.search(s):
+        return layers.quantize_weight(leaf, axes)
+    return leaf
+  return jax.tree_util.tree_map_with_path(rule, params)

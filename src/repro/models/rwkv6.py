@@ -1,0 +1,210 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay, plus channel-mix FFN.
+
+Time-mix recurrence per head (state S in R^{hd x hd}):
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with per-channel decay w_t = exp(-exp(w0 + lora_w(xx_t)))  (data-dependent — the
+"Finch" feature) and token-shift ddlerp mixing for r/k/v/w/g.
+
+Training/prefill uses scan-over-chunks with inner rematerialized scans (bounded
+backward memory: chunk-boundary states only).  Decode carries (S, x_prev) in the
+cache — O(1) per token, which is why this arch runs the `long_500k` shape natively.
+
+AQPIM applicability: there is no KV cache to compress (DESIGN.md §5) — the paper's
+technique is inapplicable and this arch runs without it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.models import layers
+
+LORA_RANK = 32
+CHUNK = 64
+
+
+class RWKVState(NamedTuple):
+  s: Array           # (B, H, hd, hd) wkv state
+  x_prev_att: Array  # (B, D) last input to time-mix
+  x_prev_ffn: Array  # (B, D) last input to channel-mix
+
+
+def time_mix_init(key, d_model: int, n_heads: int, head_dim: int, dtype) -> dict:
+  ks = jax.random.split(key, 14)
+  d = d_model
+  def lora(k_, r=LORA_RANK):
+    k1, k2 = jax.random.split(k_)
+    return {"a": layers.dense_init(k1, d, (r,), dtype),
+            "b": layers.dense_init(k2, r, (d,), dtype)}
+  return {
+      "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+      "lora_r": lora(ks[1]), "lora_k": lora(ks[2]), "lora_v": lora(ks[3]),
+      "lora_w": lora(ks[4], 64), "lora_g": lora(ks[5]),
+      "w0": (jax.random.normal(ks[6], (d,), jnp.float32) * 0.1 - 0.6).astype(
+          jnp.float32),
+      "u": (jax.random.normal(ks[7], (n_heads, head_dim), jnp.float32) * 0.1
+            ).astype(jnp.float32),
+      "wr": layers.dense_init(ks[8], d, (d,), dtype),
+      "wk": layers.dense_init(ks[9], d, (d,), dtype),
+      "wv": layers.dense_init(ks[10], d, (d,), dtype),
+      "wg": layers.dense_init(ks[11], d, (d,), dtype),
+      "wo": layers.dense_init(ks[12], d, (d,), dtype),
+      "ln_x": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+  }
+
+
+def channel_mix_init(key, d_model: int, d_ff: int, dtype) -> dict:
+  ks = jax.random.split(key, 3)
+  return {
+      "mu": jax.random.uniform(ks[0], (2, d_model), jnp.float32).astype(dtype),
+      "wk": layers.dense_init(ks[1], d_model, (d_ff,), dtype),
+      "wv": layers.dense_init(ks[2], d_ff, (d_model,), dtype),
+      "wr": layers.dense_init(jax.random.fold_in(ks[0], 7), d_model,
+                              (d_model,), dtype),
+  }
+
+
+def _ddlerp(x: Array, x_prev: Array, mu: Array, lora: dict) -> Array:
+  """Data-dependent lerp: x + (x_prev - x) * (mu + tanh(xx A) B)."""
+  xx = x + (x_prev - x) * mu.astype(x.dtype)
+  dd = jnp.tanh(xx @ lora["a"]) @ lora["b"]
+  return x + (x_prev - x) * (mu.astype(x.dtype) + dd)
+
+
+def _group_norm(p: dict, x: Array, n_heads: int) -> Array:
+  """Per-head group norm on (B, S, D)."""
+  b, s, d = x.shape
+  xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+  mean = jnp.mean(xh, axis=-1, keepdims=True)
+  var = jnp.var(xh, axis=-1, keepdims=True)
+  xh = (xh - mean) * jax.lax.rsqrt(var + 64e-5)
+  xf = xh.reshape(b, s, d)
+  return (xf * p["scale"].astype(jnp.float32)
+          + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _time_mix_inputs(params: dict, x: Array, x_prev: Array, n_heads: int):
+  """Project r/k/v/w/g for a (B, S, D) block given the shifted inputs."""
+  b, s, d = x.shape
+  hd = d // n_heads
+  mu = params["mu"]
+  xr = _ddlerp(x, x_prev, mu[0], params["lora_r"])
+  xk = _ddlerp(x, x_prev, mu[1], params["lora_k"])
+  xv = _ddlerp(x, x_prev, mu[2], params["lora_v"])
+  xw = _ddlerp(x, x_prev, mu[3], params["lora_w"])
+  xg = _ddlerp(x, x_prev, mu[4], params["lora_g"])
+  r = (xr @ params["wr"]).reshape(b, s, n_heads, hd)
+  k = (xk @ params["wk"]).reshape(b, s, n_heads, hd)
+  v = (xv @ params["wv"]).reshape(b, s, n_heads, hd)
+  g = jax.nn.silu(xg @ params["wg"])
+  logw = -jnp.exp(jnp.clip(
+      params["w0"].astype(jnp.float32)
+      + (jnp.tanh(xw @ params["lora_w"]["a"]) @ params["lora_w"]["b"]
+         ).astype(jnp.float32), -8.0, 4.0))
+  w = jnp.exp(logw).reshape(b, s, n_heads, hd)          # decay in (0, 1)
+  return r, k, v, w, g
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+  """Sequential wkv recurrence over a chunk.
+
+  r/k/v/w: (C, B, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
+  Returns (y (C, B, H, hd), s_final).
+  """
+  def step(s, inp):
+    r_t, k_t, v_t, w_t = inp
+    kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+    y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+    s_new = w_t[..., None] * s + kv
+    return s_new, y
+  return jax.lax.scan(step, s0, (r, k, v, w), unroll=1)
+
+
+def time_mix(params: dict, x: Array, state: RWKVState, n_heads: int,
+             chunk: int = CHUNK) -> Tuple[Array, RWKVState]:
+  """Full-sequence time-mix: (B, S, D) -> (B, S, D), new state."""
+  b, s, d = x.shape
+  hd = d // n_heads
+  x_shift = jnp.concatenate([state.x_prev_att[:, None, :], x[:, :-1]], axis=1)
+  r, k, v, w, g = _time_mix_inputs(params, x, x_shift, n_heads)
+  r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+  u = params["u"].astype(jnp.float32)
+
+  pad = (-s) % chunk
+  def pad_t(t):
+    return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+  n_chunks = (s + pad) // chunk
+  # (nC, C, B, H, hd)
+  def to_chunks(t):
+    return jnp.moveaxis(
+        pad_t(t).reshape(b, n_chunks, chunk, n_heads, hd), 0, 2)
+  rc, kc, vc, wc = (to_chunks(t) for t in (r32, k32, v32, w32))
+  # padding must not alter the state: decay 1, k 0
+  if pad:
+    valid = (jnp.arange(n_chunks * chunk) < s).reshape(n_chunks, chunk)
+    wc = jnp.where(valid[:, :, None, None, None], wc, 1.0)
+    kc = jnp.where(valid[:, :, None, None, None], kc, 0.0)
+
+  @jax.checkpoint
+  def chunk_body(s_carry, inp):
+    rr, kk, vv, ww = inp
+    s_new, y = _wkv_scan(rr, kk, vv, ww, u, s_carry)
+    return s_new, y
+
+  s_final, ys = jax.lax.scan(chunk_body, state.s.astype(jnp.float32),
+                             (rc, kc, vc, wc))
+  y = jnp.moveaxis(ys, 2, 0).reshape(b, n_chunks * chunk, d)[:, :s]
+  y = _group_norm(params["ln_x"], y.astype(x.dtype), n_heads)
+  out = (y * g) @ params["wo"]
+  new_state = RWKVState(
+      s=s_final, x_prev_att=x[:, -1], x_prev_ffn=state.x_prev_ffn)
+  return out, new_state
+
+
+def time_mix_step(params: dict, x: Array, state: RWKVState, n_heads: int
+                  ) -> Tuple[Array, RWKVState]:
+  """Single-token decode: x (B, D) -> (B, D).  O(1) state update."""
+  b, d = x.shape
+  hd = d // n_heads
+  x_in = x[:, None, :]
+  x_prev = state.x_prev_att[:, None, :]
+  r, k, v, w, g = _time_mix_inputs(params, x_in, x_prev, n_heads)
+  r32, k32, v32, w32 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+  u = params["u"].astype(jnp.float32)
+  s = state.s.astype(jnp.float32)
+  kv = jnp.einsum("bhi,bhj->bhij", k32, v32)
+  y = jnp.einsum("bhi,bhij->bhj", r32, s + u[None, :, :, None] * kv)
+  s_new = w32[..., None] * s + kv
+  y = _group_norm(params["ln_x"], y.reshape(b, 1, d).astype(x.dtype), n_heads)
+  out = (y[:, 0] * g[:, 0]) @ params["wo"]
+  return out, RWKVState(s=s_new, x_prev_att=x, x_prev_ffn=state.x_prev_ffn)
+
+
+def channel_mix(params: dict, x: Array, x_prev_last: Array
+                ) -> Tuple[Array, Array]:
+  """(B, S, D) -> (B, S, D); returns new x_prev for the state."""
+  x_shift = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1]], axis=1)
+  mu = params["mu"]
+  xk = x + (x_shift - x) * mu[0].astype(x.dtype)
+  xr = x + (x_shift - x) * mu[1].astype(x.dtype)
+  k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+  kv = k @ params["wv"]
+  return jax.nn.sigmoid(xr @ params["wr"]) * kv, x[:, -1]
+
+
+def init_state(b: int, d_model: int, n_heads: int, dtype=jnp.float32
+               ) -> RWKVState:
+  hd = d_model // n_heads
+  return RWKVState(
+      s=jnp.zeros((b, n_heads, hd, hd), jnp.float32),
+      x_prev_att=jnp.zeros((b, d_model), dtype),
+      x_prev_ffn=jnp.zeros((b, d_model), dtype),
+  )

@@ -1,0 +1,138 @@
+"""Mamba-style selective SSM head (for Hymba's parallel attn+SSM blocks,
+arXiv:2411.13676).  State size per channel is `ssm_state` (16 for hymba-1.5b).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t (x) B_t
+    y_t = h_t . C_t + D_skip * x_t
+
+Depthwise causal conv (kernel 4) precedes the scan, as in Mamba.  Train/prefill is
+scan-over-chunks with rematerialized inner scans; decode carries (h, conv tail).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.models import layers
+
+CONV_K = 4
+CHUNK = 64
+
+
+class SSMState(NamedTuple):
+  h: Array         # (B, d_inner, n) f32
+  conv: Array      # (B, CONV_K - 1, d_inner) trailing inputs
+
+
+def ssm_init(key, d_model: int, d_inner: int, n_state: int, dtype) -> dict:
+  ks = jax.random.split(key, 7)
+  dt_rank = max(d_model // 16, 1)
+  return {
+      "w_in": layers.dense_init(ks[0], d_model, (2 * d_inner,), dtype),
+      "conv_w": (jax.random.normal(ks[1], (CONV_K, d_inner), jnp.float32)
+                 * 0.1).astype(dtype),
+      "w_bc": layers.dense_init(ks[2], d_inner, (2 * n_state,), dtype),
+      "w_dt": layers.dense_init(ks[3], d_inner, (dt_rank,), dtype),
+      "w_dt2": layers.dense_init(ks[4], dt_rank, (d_inner,), dtype),
+      "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+      "a_log": jnp.log(jnp.tile(
+          jnp.arange(1, n_state + 1, dtype=jnp.float32)[None, :],
+          (d_inner, 1))),
+      "d_skip": jnp.ones((d_inner,), jnp.float32),
+      "w_out": layers.dense_init(ks[5], d_inner, (d_model,), dtype),
+  }
+
+
+def _causal_conv(x: Array, w: Array, tail: Array) -> Tuple[Array, Array]:
+  """Depthwise causal conv, kernel CONV_K.  x (B, S, C), tail (B, K-1, C)."""
+  xx = jnp.concatenate([tail.astype(x.dtype), x], axis=1)     # (B, S+K-1, C)
+  out = sum(
+      xx[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(CONV_K))
+  new_tail = xx[:, -(CONV_K - 1):]
+  return out, new_tail
+
+
+def _ssm_inputs(params: dict, x: Array, conv_tail: Array):
+  """x (B, S, D) -> gates and scan inputs."""
+  xz = x @ params["w_in"]
+  x_p, z = jnp.split(xz, 2, axis=-1)                   # (B, S, d_inner)
+  x_c, new_tail = _causal_conv(x_p, params["conv_w"], conv_tail)
+  x_c = jax.nn.silu(x_c)
+  bc = x_c @ params["w_bc"]
+  b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)             # (B, S, n)
+  dt = jax.nn.softplus(
+      (x_c @ params["w_dt"]) @ params["w_dt2"]
+      + params["dt_bias"].astype(x.dtype))             # (B, S, d_inner)
+  return x_c, z, b_ssm, c_ssm, dt, new_tail
+
+
+def _scan_chunked(params, x_c, b_ssm, c_ssm, dt, h0, chunk=CHUNK):
+  b, s, d_inner = x_c.shape
+  n = b_ssm.shape[-1]
+  a = -jnp.exp(params["a_log"])                         # (d_inner, n)
+
+  pad = (-s) % chunk
+  n_chunks = (s + pad) // chunk
+  def to_chunks(t):
+    t = jnp.pad(t.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    return jnp.moveaxis(t.reshape(b, n_chunks, chunk, t.shape[-1]), 0, 2)
+  xc, bs, cs, dts = (to_chunks(t) for t in (x_c, b_ssm, c_ssm, dt))
+  if pad:
+    valid = (jnp.arange(n_chunks * chunk) < s).reshape(n_chunks, chunk)
+    dts = jnp.where(valid[:, :, None, None], dts, 0.0)  # dt=0: h unchanged
+
+  @jax.checkpoint
+  def chunk_body(h, inp):
+    xx, bb, cc, dd = inp
+    def step(h_c, inp_s):
+      x_t, b_t, c_t, dt_t = inp_s
+      da = jnp.exp(dt_t[..., None] * a[None])           # (B, d_inner, n)
+      h_new = da * h_c + (dt_t * x_t)[..., None] * b_t[:, None, :]
+      y = jnp.einsum("bdn,bn->bd", h_new, c_t)
+      return h_new, y
+    h_out, ys = jax.lax.scan(step, h, (xx, bb, cc, dd))
+    return h_out, ys
+
+  h_final, ys = jax.lax.scan(chunk_body, h0.astype(jnp.float32),
+                             (xc, bs, cs, dts))
+  y = jnp.moveaxis(ys, 2, 0).reshape(b, n_chunks * chunk, d_inner)[:, :s]
+  return y, h_final
+
+
+def ssm_forward(params: dict, x: Array, state: SSMState
+                ) -> Tuple[Array, SSMState]:
+  """Full-sequence selective SSM: (B, S, D) -> (B, S, D)."""
+  x_c, z, b_ssm, c_ssm, dt, new_tail = _ssm_inputs(params, x, state.conv)
+  y, h_final = _scan_chunked(params, x_c, b_ssm, c_ssm, dt, state.h)
+  y = y + params["d_skip"].astype(jnp.float32) * x_c.astype(jnp.float32)
+  y = (y.astype(x.dtype) * jax.nn.silu(z))
+  out = y @ params["w_out"]
+  return out, SSMState(h=h_final, conv=new_tail)
+
+
+def ssm_step(params: dict, x: Array, state: SSMState) -> Tuple[Array, SSMState]:
+  """Single-token decode: x (B, D)."""
+  x_c, z, b_ssm, c_ssm, dt, new_tail = _ssm_inputs(
+      params, x[:, None, :], state.conv)
+  a = -jnp.exp(params["a_log"])
+  x32 = x_c[:, 0].astype(jnp.float32)
+  dt32 = dt[:, 0].astype(jnp.float32)
+  b32 = b_ssm[:, 0].astype(jnp.float32)
+  c32 = c_ssm[:, 0].astype(jnp.float32)
+  da = jnp.exp(dt32[..., None] * a[None])
+  h_new = da * state.h + (dt32 * x32)[..., None] * b32[:, None, :]
+  y = jnp.einsum("bdn,bn->bd", h_new, c32)
+  y = y + params["d_skip"] * x32
+  y = y.astype(x.dtype) * jax.nn.silu(z[:, 0])
+  out = y @ params["w_out"]
+  return out, SSMState(h=h_new, conv=new_tail)
+
+
+def init_state(b: int, d_inner: int, n_state: int, dtype=jnp.bfloat16
+               ) -> SSMState:
+  return SSMState(
+      h=jnp.zeros((b, d_inner, n_state), jnp.float32),
+      conv=jnp.zeros((b, CONV_K - 1, d_inner), dtype),
+  )

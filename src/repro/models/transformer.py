@@ -1,0 +1,301 @@
+"""Block assembly for all assigned architecture families.
+
+A "block" is one decoder layer (or one pattern group for the VLM, which
+interleaves cross-attention layers).  Blocks come in three call modes:
+
+  - forward : full-sequence (training — no cache)
+  - prefill : full-sequence, returns the layer's cache contribution
+              (KV -> exact or PQ-compressed per config; recurrent state for SSM)
+  - step    : single-token decode against the layer cache
+
+Layer parameters are stacked (leading dim = n_layers or n_groups) and the model
+scans over them — essential for compile time at 126 layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.core import importance as imp
+from repro.core import kv_cache as kvc
+from repro.core import pq as pqlib
+from repro.models import layers, moe as moe_mod, rwkv6, ssm
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-layer with cache modes
+# ---------------------------------------------------------------------------
+
+def _attn_prefill(
+    p: dict, x: Array, positions: Array, cfg, pq_cache_cfg
+) -> Tuple[Array, Any]:
+  """Run attention over the full sequence AND build this layer's KV cache.
+
+  If PQ is enabled this is where the paper's in-memory clustering runs: the
+  importance weights (Eq. 1) come from the same q/k, and the windowed weighted
+  k-means compresses the body — layer by layer, exactly the paper's
+  "layer-wise codebook generation" that bounds peak memory.
+  """
+  scale = cfg.head_dim ** -0.5
+  q, k, v = layers.attention_qkv(p, x, positions, cfg.rope_theta)
+  attn = layers.chunked_attention(q, k, v, scale, causal=True,
+                                  blk_q=cfg.attn_block, blk_k=cfg.attn_block)
+  out = layers.attention_out(p, attn)
+
+  if pq_cache_cfg is None:
+    n_max = cfg.decode_cache_len
+    cache = kvc.exact_cache_prefill(k, v, n_max)
+  else:
+    # Eq. 1 weights per (batch, kv head): queries of the kv-group, averaged.
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, hd)[:, :, 0]           # lead query head / group
+    w = jax.vmap(jax.vmap(
+        lambda qq, kk: imp.attention_importance_weights(
+            qq, kk, scale, t=pq_cache_cfg.recent,
+            chunk=min(cfg.attn_block, s))))(qg, k)       # (B, Hkv, S)
+    cache = kvc.pq_cache_prefill(k, v, w, pq_cache_cfg)
+  return out, cache
+
+
+def _attn_step(
+    p: dict, x: Array, cache, length: Array, cfg, pq_cache_cfg
+) -> Tuple[Array, Any]:
+  """Single-token attention against the cache.  x (B, 1, D)."""
+  scale = cfg.head_dim ** -0.5
+  pos = jnp.full((x.shape[0], 1), length, jnp.int32)
+  q = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wq"], x.dtype))
+  k = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wk"], x.dtype))
+  v = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wv"], x.dtype))
+  q = layers.apply_rope(q, pos, cfg.rope_theta)[:, 0]    # (B, H, hd)
+  k = layers.apply_rope(k, pos, cfg.rope_theta)[:, 0]
+  v = v[:, 0]
+  q = jnp.swapaxes(q, 0, 1) if False else q             # (B, H, hd)
+
+  if pq_cache_cfg is None:
+    attn, new_cache = kvc.exact_cache_append_and_attend(
+        cache, q, k, v, length, scale)
+  else:
+    attn, new_cache = kvc.pq_cache_append_and_attend(
+        cache, q, k, v, length, pq_cache_cfg, scale)
+  out = jnp.einsum("bhk,hkd->bd", attn.astype(x.dtype),
+                   layers.wv(p["wo"], x.dtype))
+  return out[:, None, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE blocks
+# ---------------------------------------------------------------------------
+
+def dense_block_init(key, cfg) -> dict:
+  ks = jax.random.split(key, 4)
+  p = {
+      "ln1": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+      "attn": layers.attention_init(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, cfg.dtype),
+      "ln2": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+  }
+  if cfg.n_experts > 0:
+    p["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.n_experts,
+                                cfg.moe_d_ff, cfg.n_shared_experts,
+                                cfg.top_k, cfg.dtype)
+  else:
+    p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype)
+  if cfg.hybrid:
+    p["ssm"] = ssm.ssm_init(ks[2], cfg.d_model, cfg.ssm_d_inner,
+                            cfg.ssm_state, cfg.dtype)
+    p["ln_attn_out"] = layers.rmsnorm_init(cfg.d_model, cfg.dtype)
+    p["ln_ssm_out"] = layers.rmsnorm_init(cfg.d_model, cfg.dtype)
+  return p
+
+
+def _ffn_apply(p: dict, x: Array, cfg) -> Tuple[Array, Array]:
+  if cfg.n_experts > 0:
+    out, aux = moe_mod.moe_ffn(p["moe"], x, cfg.top_k, cfg.n_experts,
+                               cfg.capacity_factor,
+                               a2a_quant=getattr(cfg, "moe_a2a_quant", False))
+    return out, aux
+  return layers.mlp(p["mlp"], x), jnp.asarray(0.0, jnp.float32)
+
+
+def dense_block_forward(p: dict, x: Array, positions: Array, cfg
+                        ) -> Tuple[Array, Array]:
+  """Training forward (hybrid runs SSM branch in parallel with attention)."""
+  h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+  scale = cfg.head_dim ** -0.5
+  attn = layers.self_attention(p["attn"], h, positions, scale,
+                               cfg.rope_theta, blk=cfg.attn_block)
+  if cfg.hybrid:
+    s0 = ssm.init_state(x.shape[0], cfg.ssm_d_inner, cfg.ssm_state, x.dtype)
+    ssm_out, _ = ssm.ssm_forward(p["ssm"], h, s0)
+    attn = 0.5 * (layers.rmsnorm(p["ln_attn_out"], attn, cfg.norm_eps)
+                  + layers.rmsnorm(p["ln_ssm_out"], ssm_out, cfg.norm_eps))
+  if cfg.parallel_block:
+    # PaLM-style fused residual: one TP all-reduce per layer instead of two
+    ffn, aux = _ffn_apply(p, h, cfg)
+    return x + attn + ffn, aux
+  x = x + attn
+  h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+  ffn, aux = _ffn_apply(p, h, cfg)
+  return x + ffn, aux
+
+
+def dense_block_prefill(p: dict, x: Array, positions: Array, cfg,
+                        pq_cache_cfg) -> Tuple[Array, Any]:
+  h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+  attn, kv_cache = _attn_prefill(p["attn"], h, positions, cfg, pq_cache_cfg)
+  if cfg.hybrid:
+    s0 = ssm.init_state(x.shape[0], cfg.ssm_d_inner, cfg.ssm_state, x.dtype)
+    ssm_out, ssm_state = ssm.ssm_forward(p["ssm"], h, s0)
+    attn = 0.5 * (layers.rmsnorm(p["ln_attn_out"], attn, cfg.norm_eps)
+                  + layers.rmsnorm(p["ln_ssm_out"], ssm_out, cfg.norm_eps))
+    cache = (kv_cache, ssm_state)
+  else:
+    cache = kv_cache
+  if cfg.parallel_block:
+    ffn, _ = _ffn_apply(p, h, cfg)
+    return x + attn + ffn, cache
+  x = x + attn
+  h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+  ffn, _ = _ffn_apply(p, h, cfg)
+  return x + ffn, cache
+
+
+def dense_block_step(p: dict, x: Array, cache, length: Array, cfg,
+                     pq_cache_cfg) -> Tuple[Array, Any]:
+  h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+  if cfg.hybrid:
+    kv_cache, ssm_state = cache
+    attn, new_kv = _attn_step(p["attn"], h, kv_cache, length, cfg, pq_cache_cfg)
+    ssm_out, new_ssm = ssm.ssm_step(p["ssm"], h[:, 0], ssm_state)
+    attn = 0.5 * (layers.rmsnorm(p["ln_attn_out"], attn, cfg.norm_eps)
+                  + layers.rmsnorm(p["ln_ssm_out"], ssm_out[:, None],
+                                   cfg.norm_eps))
+    new_cache = (new_kv, new_ssm)
+  else:
+    attn, new_cache = _attn_step(p["attn"], h, cache, length, cfg, pq_cache_cfg)
+  if cfg.parallel_block:
+    ffn, _ = _ffn_apply(p, h, cfg)
+    return x + attn + ffn, new_cache
+  x = x + attn
+  h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+  ffn, _ = _ffn_apply(p, h, cfg)
+  return x + ffn, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block
+# ---------------------------------------------------------------------------
+
+def rwkv_block_init(key, cfg) -> dict:
+  ks = jax.random.split(key, 2)
+  return {
+      "ln1": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+      "tm": rwkv6.time_mix_init(ks[0], cfg.d_model, cfg.n_heads,
+                                cfg.head_dim, cfg.dtype),
+      "ln2": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+      "cm": rwkv6.channel_mix_init(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype),
+  }
+
+
+def rwkv_block_forward(p: dict, x: Array, state: rwkv6.RWKVState, cfg
+                       ) -> Tuple[Array, rwkv6.RWKVState]:
+  h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+  tm_out, state = rwkv6.time_mix(p["tm"], h, state, cfg.n_heads)
+  x = x + tm_out
+  h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+  cm_out, x_prev_ffn = rwkv6.channel_mix(p["cm"], h, state.x_prev_ffn)
+  state = state._replace(x_prev_ffn=x_prev_ffn)
+  return x + cm_out, state
+
+
+def rwkv_block_step(p: dict, x: Array, state: rwkv6.RWKVState, cfg
+                    ) -> Tuple[Array, rwkv6.RWKVState]:
+  h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)           # (B, 1, D)
+  tm_out, state = rwkv6.time_mix_step(p["tm"], h[:, 0], state, cfg.n_heads)
+  x = x + tm_out[:, None]
+  h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+  cm_out, x_prev_ffn = rwkv6.channel_mix(p["cm"], h, state.x_prev_ffn)
+  state = state._replace(x_prev_ffn=x_prev_ffn)
+  return x + cm_out, state
+
+
+# ---------------------------------------------------------------------------
+# VLM pattern group: [cross-attn layer, (period-1) self layers]
+# ---------------------------------------------------------------------------
+
+def vlm_group_init(key, cfg) -> dict:
+  ks = jax.random.split(key, cfg.cross_attn_period + 1)
+  self_layers = jax.vmap(lambda k_: dense_block_init(k_, cfg))(
+      jnp.stack(ks[1:cfg.cross_attn_period]))
+  return {
+      "cross_ln": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+      "cross": layers.cross_attention_init(
+          ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+          cfg.dtype),
+      "cross_gate": jnp.zeros((1,), jnp.float32),
+      "cross_mlp_ln": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+      "cross_mlp": layers.mlp_init(
+          jax.random.fold_in(ks[0], 3), cfg.d_model, cfg.d_ff, cfg.dtype),
+      "cross_mlp_gate": jnp.zeros((1,), jnp.float32),
+      "selfs": self_layers,
+  }
+
+
+def _cross_layer(p: dict, x: Array, vision: Array, cfg) -> Array:
+  scale = cfg.head_dim ** -0.5
+  h = layers.rmsnorm(p["cross_ln"], x, cfg.norm_eps)
+  attn = layers.cross_attention(p["cross"], h, vision, scale,
+                                blk=cfg.attn_block)
+  x = x + jnp.tanh(p["cross_gate"]).astype(x.dtype) * attn
+  h = layers.rmsnorm(p["cross_mlp_ln"], x, cfg.norm_eps)
+  return x + jnp.tanh(p["cross_mlp_gate"]).astype(x.dtype) * layers.mlp(
+      p["cross_mlp"], h)
+
+
+def _scan_selfs(p_selfs, x, fn):
+  def body(carry, lp):
+    y, aux = carry
+    y, aux_i = fn(lp, y)
+    return (y, aux + aux_i), None
+  (x, aux), _ = jax.lax.scan(body, (x, jnp.asarray(0.0, jnp.float32)), p_selfs)
+  return x, aux
+
+
+def vlm_group_forward(p: dict, x: Array, vision: Array, positions: Array,
+                      cfg) -> Tuple[Array, Array]:
+  x = _cross_layer(p, x, vision, cfg)
+  return _scan_selfs(
+      p["selfs"], x, lambda lp, y: dense_block_forward(lp, y, positions, cfg))
+
+
+def vlm_group_prefill(p: dict, x: Array, vision: Array, positions: Array,
+                      cfg, pq_cache_cfg) -> Tuple[Array, Any]:
+  x = _cross_layer(p, x, vision, cfg)
+  def body(y, lp):
+    y, cache = dense_block_prefill(lp, y, positions, cfg, pq_cache_cfg)
+    return y, cache
+  def scan_body(carry, lp):
+    y = carry
+    y, cache = body(y, lp)
+    return y, cache
+  x, caches = jax.lax.scan(scan_body, x, p["selfs"])
+  return x, caches
+
+
+def vlm_group_step(p: dict, x: Array, vision: Array, caches, length: Array,
+                   cfg, pq_cache_cfg) -> Tuple[Array, Any]:
+  x = _cross_layer(p, x, vision, cfg)
+  def scan_body(carry, inp):
+    y = carry
+    lp, cache = inp
+    y, new_cache = dense_block_step(lp, y, cache, length, cfg, pq_cache_cfg)
+    return y, new_cache
+  x, new_caches = jax.lax.scan(scan_body, x, (p["selfs"], caches))
+  return x, new_caches

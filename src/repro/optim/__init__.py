@@ -1,0 +1,4 @@
+"""Optimizers (no optax in env): AdamW + schedule + grad compression."""
+from repro.optim import adamw
+
+__all__ = ["adamw"]

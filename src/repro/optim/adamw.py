@@ -1,0 +1,155 @@
+"""AdamW with cosine schedule, global-norm clipping, bf16-param/f32-master
+training, and optional int8 gradient compression with error feedback.
+
+No optax in this environment — this is a from-scratch, pjit-friendly optimizer:
+state is a pytree mirroring params, update is pure, and every leaf keeps the
+param's sharding (moments inherit specs via parallel.sharding.opt_pspecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array, PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+  lr: float = 3e-4
+  warmup_steps: int = 100
+  total_steps: int = 10000
+  min_lr_ratio: float = 0.1
+  b1: float = 0.9
+  b2: float = 0.95
+  eps: float = 1e-8
+  weight_decay: float = 0.1
+  clip_norm: float = 1.0
+  master_f32: bool = True        # keep f32 master weights for bf16 params
+  compress_grads: bool = False   # int8 + error-feedback gradient compression
+
+
+class OptState(NamedTuple):
+  step: Array
+  mu: PyTree
+  nu: PyTree
+  master: Optional[PyTree]
+  error: Optional[PyTree]        # error-feedback residual (compression)
+
+
+def schedule(cfg: OptConfig, step: Array) -> Array:
+  """Linear warmup -> cosine decay to min_lr_ratio."""
+  step = step.astype(jnp.float32)
+  warm = step / jnp.maximum(cfg.warmup_steps, 1)
+  t = jnp.clip((step - cfg.warmup_steps)
+               / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+  cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+      1 + jnp.cos(jnp.pi * t))
+  return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: OptConfig, params: PyTree) -> OptState:
+  zeros = jax.tree_util.tree_map(
+      lambda p: jnp.zeros(p.shape, jnp.float32), params)
+  master = None
+  if cfg.master_f32:
+    # explicit copy: astype is a no-op for f32 params and donation must never
+    # see the same buffer twice (params + master)
+    master = jax.tree_util.tree_map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+  error = None
+  if cfg.compress_grads:
+    error = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+  return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                  nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                  master=master, error=error)
+
+
+def global_norm(tree: PyTree) -> Array:
+  leaves = jax.tree_util.tree_leaves(tree)
+  return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                      for l in leaves))
+
+
+def _compress_int8(g: Array) -> Tuple[Array, Array]:
+  """Per-tensor symmetric int8 quantization (the compressed wire format)."""
+  scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+  q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+  return q, scale
+
+
+def _decompress_int8(q: Array, scale: Array) -> Array:
+  return q.astype(jnp.float32) * scale
+
+
+def apply_compression(grads: PyTree, error: PyTree) -> Tuple[PyTree, PyTree]:
+  """Error-feedback int8 compression: g' = Q(g + e); e' = (g + e) - g'.
+
+  In a real deployment Q(g) is what crosses the DP all-reduce links (4x fewer
+  bytes than f32); here the quantize/dequantize round-trip exercises the exact
+  numerics and the residual state machinery.
+  """
+  def one(g, e):
+    total = g.astype(jnp.float32) + e
+    q, s = _compress_int8(total)
+    deq = _decompress_int8(q, s)
+    return deq, total - deq
+  flat = jax.tree_util.tree_map(one, grads, error)
+  new_grads = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+  new_error = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+  return new_grads, new_error
+
+
+def update(cfg: OptConfig, state: OptState, params: PyTree, grads: PyTree
+           ) -> Tuple[PyTree, OptState, Dict[str, Array]]:
+  """One AdamW step.  Returns (new_params, new_state, metrics)."""
+  grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+  error = state.error
+  if cfg.compress_grads and error is not None:
+    grads, error = apply_compression(grads, error)
+
+  gnorm = global_norm(grads)
+  clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+  grads = jax.tree_util.tree_map(lambda g: g * clip, grads)
+
+  step = state.step + 1
+  lr = schedule(cfg, step)
+  b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+  b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+  ref = state.master if state.master is not None else params
+
+  def one(p, m, v, g):
+    m_new = cfg.b1 * m + (1 - cfg.b1) * g
+    v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+    upd = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+    p32 = p.astype(jnp.float32)
+    p_new = p32 - lr * (upd + cfg.weight_decay * p32)
+    return p_new, m_new, v_new
+
+  out = jax.tree_util.tree_map(one, ref, state.mu, state.nu, grads)
+  p_new = jax.tree_util.tree_map(
+      lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+  mu = jax.tree_util.tree_map(
+      lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+  nu = jax.tree_util.tree_map(
+      lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+  if state.master is not None:
+    master = p_new
+    params_out = jax.tree_util.tree_map(
+        lambda p_old, p32: p32.astype(p_old.dtype), params, p_new)
+  else:
+    master = None
+    params_out = jax.tree_util.tree_map(
+        lambda p_old, p32: p32.astype(p_old.dtype), params, p_new)
+
+  new_state = OptState(step=step, mu=mu, nu=nu, master=master, error=error)
+  return params_out, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,4 @@
+"""Distribution: sharding rules, pipeline parallelism, collectives."""
+from repro.parallel import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,222 @@
+"""Sharding rules: param/optimizer/cache PartitionSpecs for the production mesh.
+
+Megatron-style tensor parallelism over the `model` axis, data parallelism over
+(`pod`, `data`).  pjit requires *argument* dims to divide evenly by their mesh
+axes, so every rule is a FALLBACK CHAIN: the preferred axis placement is used when
+divisible, otherwise the next candidate (e.g. GQA kv-projections with 8 kv-heads on
+a 16-way model axis shard head_dim instead; granite's 49155 vocab shards d_model;
+qwen2's 60 experts shard the expert FFN dim instead of the expert axis).
+
+Decode caches get their own chains:
+  - kv-heads over `model` when divisible, else the *sequence* axis over `model`
+    (flash-decoding split-K: partial softmax stats are psum-combined by GSPMD);
+  - `long_500k` (batch=1) shards the PQ body sequence over BOTH (data, model) —
+    full sequence parallelism, the only parallelism available at batch 1.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import PyTree
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+DATA_AXES_SINGLE = ("data",)
+DATA_AXES_MULTI = ("pod", "data")
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+  return DATA_AXES_MULTI if "pod" in mesh.axis_names else DATA_AXES_SINGLE
+
+
+def _axis_size(mesh_axes: dict, axis) -> int:
+  if axis is None:
+    return 1
+  if isinstance(axis, (tuple, list)):
+    n = 1
+    for a in axis:
+      n *= mesh_axes[a]
+    return n
+  return mesh_axes[axis]
+
+
+def _fits(shape: Sequence[int], spec: Tuple, mesh_axes: dict) -> bool:
+  for dim, axis in zip(shape[len(shape) - len(spec):], spec):
+    if axis is not None and dim % _axis_size(mesh_axes, axis) != 0:
+      return False
+  return True
+
+
+def _choose(shape: Sequence[int], candidates: Sequence[Tuple],
+            mesh_axes: dict) -> P:
+  """First candidate whose sharded trailing dims divide; else replicate.
+  Candidates are trailing-dim specs, left-padded with None."""
+  nd = len(shape)
+  for cand in candidates:
+    if len(cand) <= nd and _fits(shape, cand, mesh_axes):
+      return P(*([None] * (nd - len(cand)) + list(cand)))
+  return P(*([None] * nd))
+
+
+def _path_str(path) -> str:
+  return "/".join(
+      str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_pspecs(params: PyTree, cfg: ModelConfig,
+                 model_axis_size: int,
+                 mesh_axes: Optional[dict] = None) -> PyTree:
+  """PartitionSpec tree matching the (stacked-layer) parameter tree.
+
+  cfg.fsdp: additionally shard the non-TP matmul dim over `data` (ZeRO-3/FSDP:
+  GSPMD all-gathers weights at use, reduce-scatters grads).  Never the leading
+  stacked-layer dim — scan slices must stay device-local.
+  """
+  axes = dict(mesh_axes or {MODEL_AXIS: model_axis_size})
+  axes.setdefault("data", 16)
+  M = MODEL_AXIS
+  # FSDP shards over every data-parallel axis (pod included on multi-pod)
+  D = None
+  if cfg.fsdp:
+    D = ("pod", "data") if "pod" in axes else "data"
+
+  def rule(path, leaf) -> P:
+    s = _path_str(path)
+    # int8-stored weights: {"q": ..., "scale": ...} leaves share the parent rule
+    if s.endswith("/q") or s.endswith("/scale"):
+      s = s.rsplit("/", 1)[0]
+    sh = leaf.shape
+
+    if s == "embed":                       # (V, D)
+      return _choose(sh, [(M, D), (M, None), (None, M)], axes)
+    if s == "lm_head":                     # (D, V)
+      return _choose(sh, [(D, M), (None, M), (M, None)], axes)
+
+    # MoE experts (.., E, D, F) / (.., E, F, D): EP when E divides, else TP on F
+    if re.search(r"moe/w_(gate|up)$", s):
+      return _choose(sh, [(M, D, None), (M, None, None), (None, D, M),
+                          (None, None, M), (None, M, None)], axes)
+    if re.search(r"moe/w_down$", s):
+      return _choose(sh, [(M, None, D), (M, None, None), (None, M, D),
+                          (None, M, None), (None, None, M)], axes)
+    if s.endswith("moe/router"):
+      return P(*([None] * leaf.ndim))
+
+    # dense / shared-expert MLP
+    if re.search(r"(mlp|shared)/w_(gate|up)$", s):
+      return _choose(sh, [(D, M), (None, M), (M, None)], axes)
+    if re.search(r"(mlp|shared)/w_down$", s):
+      return _choose(sh, [(M, D), (M, None), (None, M)], axes)
+
+    # attention (.., D, H, hd) / (.., H, hd, D)
+    if re.search(r"(attn|cross)/w[qkv]$", s):
+      return _choose(sh, [(D, M, None), (None, M, None), (None, None, M),
+                          (M, None, None)], axes)
+    if re.search(r"(attn|cross)/wo$", s):
+      return _choose(sh, [(M, None, D), (M, None, None), (None, M, None),
+                          (None, None, M)], axes)
+
+    # RWKV time-mix / channel-mix (.., D, D) and (.., H, hd)
+    if re.search(r"tm/w[rkvg]$", s) or s.endswith("cm/wk") or s.endswith("cm/wr"):
+      return _choose(sh, [(None, M), (M, None)], axes)
+    if s.endswith("tm/wo") or s.endswith("cm/wv"):
+      return _choose(sh, [(M, None), (None, M)], axes)
+    if s.endswith("tm/u"):
+      return _choose(sh, [(M, None)], axes)
+
+    # SSM: d_inner-sharded
+    if s.endswith("ssm/w_in") or s.endswith("ssm/w_dt2"):
+      return _choose(sh, [(None, M)], axes)
+    if s.endswith("ssm/conv_w"):
+      return _choose(sh, [(None, M)], axes)
+    if re.search(r"ssm/(w_bc|w_dt|a_log|w_out)$", s):
+      return _choose(sh, [(M, None)], axes)
+    if re.search(r"ssm/(dt_bias|d_skip)$", s):
+      return _choose(sh, [(M,)], axes)
+
+    # norms, gates, loras, mus: replicated
+    return P(*([None] * leaf.ndim))
+
+  return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_pspecs(mesh: Mesh, with_modal: bool = False) -> dict:
+  da = data_axes(mesh)
+  specs = {"tokens": P(da, None), "targets": P(da, None)}
+  if with_modal:
+    specs["modal"] = P(da, None, None)
+  return specs
+
+
+def cache_pspecs(cache: PyTree, mesh: Mesh, batch: int,
+                 shard_sequence: bool = False) -> PyTree:
+  """PartitionSpecs for a decode-cache tree (see module docstring)."""
+  axes = dict(mesh.shape)
+  da = data_axes(mesh)
+  n_data = _axis_size(axes, da)
+  batch_ax = da if (batch > 1 and batch % n_data == 0) else None
+  M = MODEL_AXIS
+  seq_both = ("data", M) if "pod" not in mesh.axis_names else \
+      (("pod", "data", M))
+
+  def rule(path, leaf) -> P:
+    s = _path_str(path)
+    sh = leaf.shape
+    nd = leaf.ndim
+    # PQ index stores: (L, B, H, Nb, m)
+    if "indices" in s and nd >= 5:
+      if shard_sequence and batch == 1:
+        return _choose(sh, [(None, None, seq_both, None),
+                            (None, None, (M,), None)], axes)
+      if shard_sequence:
+        return _choose(sh, [(None, batch_ax, None, M, None),
+                            (None, batch_ax, M, None, None)], axes)
+      return _choose(sh, [(None, batch_ax, M, None, None),
+                          (None, batch_ax, None, M, None)], axes)
+    # codebooks (L, B, H, nW, m, K, dsub): heads on model when divisible,
+    # else centroid axis K on model; batch always on data — NEVER fully
+    # replicated (at B=128 the per-sequence codebooks are cache-scale data)
+    if "codebooks" in s:
+      return _choose(sh, [
+          (None, batch_ax, M) + (None,) * (nd - 3),
+          (None, batch_ax, None, None, None, M, None),
+          (None, batch_ax) + (None,) * (nd - 2),
+      ], axes)
+    # exact kv / sink / recent: (L, B, H, N, D)
+    if nd >= 5:
+      if shard_sequence and batch == 1:
+        return _choose(sh, [(None, None, None, seq_both, None),
+                            (None, None, M, None, None),
+                            (None, None, None, None, M)], axes)
+      if shard_sequence:
+        return _choose(sh, [(None, batch_ax, None, M, None),
+                            (None, batch_ax, M, None, None),
+                            (None, batch_ax, None, None, None)], axes)
+      return _choose(sh, [(None, batch_ax, M, None, None),
+                          (None, batch_ax, None, M, None),
+                          (None, batch_ax, None, None, M)], axes)
+    if nd == 4:   # ssm h (L,B,d_inner,n) / rwkv s handled above by ndim>=5
+      return _choose(sh, [(None, batch_ax, M, None),
+                          (None, batch_ax, None, M),
+                          (None, batch_ax, None, None)], axes)
+    if nd == 3:   # (L, B, D)-ish recurrent leaves
+      return _choose(sh, [(None, batch_ax, M),
+                          (None, batch_ax, None)], axes)
+    return P(*([None] * nd))
+
+  return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def opt_pspecs(param_specs: PyTree, zero1: bool = False) -> PyTree:
+  """Optimizer-moment specs mirror params (ZeRO-1 handled at build site)."""
+  return param_specs
+
+
+def make_shardings(pspecs: PyTree, mesh: Mesh) -> PyTree:
+  return jax.tree_util.tree_map(
+      lambda s: NamedSharding(mesh, s), pspecs,
+      is_leaf=lambda x: isinstance(x, P))

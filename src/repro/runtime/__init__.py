@@ -1,0 +1,4 @@
+"""Cluster runtime: fault tolerance, straggler mitigation."""
+from repro.runtime import fault_tolerance
+
+__all__ = ["fault_tolerance"]

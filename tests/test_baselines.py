@@ -1,0 +1,83 @@
+"""Baseline KV-compression methods (paper §IV comparison set)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, pq, pq_attention as pqa
+
+
+def test_uniform_quant_roundtrip_error_drops_with_bits():
+  rng = np.random.default_rng(0)
+  x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+  perm = baselines.channel_reorder_by_range(x)
+  errs = []
+  for bits in (2, 4, 8):
+    uq = baselines.uniform_quantize(x, bits, group=8, perm=perm)
+    xh = baselines.uniform_dequantize(uq, group=8)
+    errs.append(float(jnp.mean((x - xh) ** 2)))
+  assert errs[0] > errs[1] > errs[2]
+  assert errs[2] < 1e-3
+
+
+def test_skvq_attention_close_at_8bit():
+  rng = np.random.default_rng(1)
+  n, d, g = 64, 16, 2
+  k = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  q = jnp.asarray(rng.normal(size=(g, d)), jnp.float32)
+  mask = jnp.ones((n,), bool)
+  exact = pqa.exact_decode_attention(q, k, v, mask, 0.25)
+  got = baselines.skvq_decode_attention(q, k, v, mask, 0.25, bits=8, group=8)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                             rtol=0.05, atol=0.05)
+
+
+def test_snapkv_always_keeps_sinks_and_recents():
+  n, sink, recent, length = 64, 4, 8, 50
+  weights = jnp.zeros((n,))
+  mask = baselines.snapkv_select(weights, keep=5, sink=sink, recent=recent,
+                                 length=length)
+  assert bool(jnp.all(mask[:sink]))
+  assert bool(jnp.all(mask[length - recent:length]))
+  assert not bool(jnp.any(mask[length:]))
+
+
+def test_streaming_llm_window():
+  rng = np.random.default_rng(2)
+  n, d = 64, 8
+  k = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  q = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+  out = baselines.streaming_llm_decode_attention(
+      q, k, v, length=n, scale=0.3, sink=4, window=16)
+  assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_pqcache_recovers_exact_when_keep_is_all():
+  rng = np.random.default_rng(3)
+  n, d, g = 64, 16, 2
+  k = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  q = jnp.asarray(rng.normal(size=(g, d)), jnp.float32)
+  mask = jnp.ones((n,), bool)
+  cfg = pq.PQConfig(m=4, k=16, iters=4)
+  out, traffic = baselines.pqcache_decode_attention(
+      q, k, v, mask, 0.25, cfg, keep=n)
+  exact = pqa.exact_decode_attention(q, k, v, mask, 0.25)
+  np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                             rtol=1e-4, atol=1e-4)
+  assert traffic["fetched_bytes"] == n * d * 2 * 2
+
+
+def test_pqcache_traffic_grows_with_keep():
+  rng = np.random.default_rng(4)
+  n, d = 64, 16
+  k = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  q = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+  mask = jnp.ones((n,), bool)
+  cfg = pq.PQConfig(m=4, k=16)
+  _, t8 = baselines.pqcache_decode_attention(q, k, v, mask, 0.25, cfg, keep=8)
+  _, t32 = baselines.pqcache_decode_attention(q, k, v, mask, 0.25, cfg, keep=32)
+  assert t32["fetched_bytes"] == 4 * t8["fetched_bytes"]

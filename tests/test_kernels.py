@@ -1,0 +1,156 @@
+"""Per-kernel allclose vs pure-jnp oracle, sweeping shapes and dtypes
+(interpret mode on CPU; same code targets Mosaic on TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# kmeans_assign
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,dsub,k", [
+    (1, 64, 4, 8), (4, 300, 8, 32), (8, 1024, 16, 64), (2, 100, 2, 512),
+])
+def test_kmeans_assign_matches_ref(m, n, dsub, k):
+  rng = np.random.default_rng(hash((m, n, dsub, k)) % 2**31)
+  x = jnp.asarray(rng.normal(size=(m, n, dsub)), jnp.float32)
+  c = jnp.asarray(rng.normal(size=(m, k, dsub)), jnp.float32)
+  got = ops.kmeans_assign(x, c, blk=128)
+  want = ref.kmeans_assign_ref(x, c)
+  np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_dtypes(dtype):
+  rng = np.random.default_rng(0)
+  x = jnp.asarray(rng.normal(size=(2, 256, 8)), dtype)
+  c = jnp.asarray(rng.normal(size=(2, 16, 8)), dtype)
+  got = ops.kmeans_assign(x, c, blk=128)
+  want = ref.kmeans_assign_ref(x, c)
+  agree = float(jnp.mean((got == want).astype(jnp.float32)))
+  assert agree > 0.99, agree   # bf16 rounding may flip rare argmin ties
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,n,d,blk", [
+    (1, 1, 1, 128, 32, 64),
+    (2, 4, 2, 256, 64, 64),
+    (1, 8, 1, 256, 16, 128),     # MQA
+    (2, 6, 6, 192, 32, 64),      # MHA, n not a power of two
+])
+def test_flash_attention_matches_ref(b, hq, hkv, n, d, blk):
+  rng = np.random.default_rng(hash((b, hq, n)) % 2**31)
+  q = jnp.asarray(rng.normal(size=(b, hq, n, d)), jnp.float32)
+  k = jnp.asarray(rng.normal(size=(b, hkv, n, d)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(b, hkv, n, d)), jnp.float32)
+  scale = 1 / np.sqrt(d)
+  got = ops.flash_attention(q, k, v, scale, causal=True, blk_q=blk, blk_k=blk)
+  want = ref.flash_attention_ref(q, k, v, scale, causal=True)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                             rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_noncausal():
+  rng = np.random.default_rng(7)
+  q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+  k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+  got = ops.flash_attention(q, k, v, 0.2, causal=False, blk_q=64, blk_k=64)
+  want = ref.flash_attention_ref(q, k, v, 0.2, causal=False)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                             rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+  rng = np.random.default_rng(8)
+  q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), dtype)
+  k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), dtype)
+  v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), dtype)
+  got = ops.flash_attention(q, k, v, 0.18, blk_q=64, blk_k=64)
+  want = ref.flash_attention_ref(q, k, v, 0.18)
+  np.testing.assert_allclose(
+      np.asarray(got, np.float32), np.asarray(want, np.float32),
+      rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# pq decode attention (the flagship kernel)
+# ---------------------------------------------------------------------------
+
+def _pq_inputs(rng, b, h, g, d, m, k, n):
+  dsub = d // m
+  kcb = jnp.asarray(rng.normal(size=(b, h, m, k, dsub)), jnp.float32)
+  vcb = jnp.asarray(rng.normal(size=(b, h, m, k, dsub)), jnp.float32)
+  kix = jnp.asarray(rng.integers(0, k, size=(b, h, n, m)), jnp.int32)
+  vix = jnp.asarray(rng.integers(0, k, size=(b, h, n, m)), jnp.int32)
+  q = jnp.asarray(rng.normal(size=(b, h, g, d)), jnp.float32)
+  return q, kcb, vcb, kix, vix
+
+
+@pytest.mark.parametrize("b,h,g,d,m,k,n,blk", [
+    (1, 1, 1, 32, 4, 8, 128, 64),
+    (2, 2, 4, 64, 8, 32, 256, 64),
+    (1, 4, 2, 128, 32, 512, 512, 128),   # paper hyperparameters
+    (1, 1, 7, 64, 16, 64, 192, 64),      # odd GQA group (yi-style)
+])
+def test_pq_decode_matches_ref(b, h, g, d, m, k, n, blk):
+  rng = np.random.default_rng(hash((b, h, g, d, m, k, n)) % 2**31)
+  q, kcb, vcb, kix, vix = _pq_inputs(rng, b, h, g, d, m, k, n)
+  length = jnp.full((b, h), n - 17, jnp.int32)
+  scale = 1 / np.sqrt(d)
+  out, mx, dn = ops.pq_decode_attention(
+      q, kcb, vcb, kix, vix, length, scale, blk=blk)
+  bh = b * h
+  r_out, r_stats = ref.pq_decode_attention_ref(
+      q.reshape(bh, g, d), kcb.reshape(bh, m, k, d // m),
+      vcb.reshape(bh, m, k, d // m), kix.reshape(bh, n, m),
+      vix.reshape(bh, n, m), length.reshape(-1), scale)
+  np.testing.assert_allclose(np.asarray(out).reshape(bh, g, d),
+                             np.asarray(r_out), rtol=1e-3, atol=1e-3)
+  np.testing.assert_allclose(np.asarray(mx).reshape(bh, g),
+                             np.asarray(r_stats[:, 0]), rtol=1e-4, atol=1e-4)
+  np.testing.assert_allclose(np.asarray(dn).reshape(bh, g),
+                             np.asarray(r_stats[:, 1]), rtol=1e-3, atol=1e-3)
+
+
+def test_pq_decode_zero_length_body():
+  """Empty body (prefill shorter than sink+recent): kernel must not NaN."""
+  rng = np.random.default_rng(9)
+  q, kcb, vcb, kix, vix = _pq_inputs(rng, 1, 1, 2, 32, 4, 8, 64)
+  out, mx, dn = ops.pq_decode_attention(
+      q, kcb, vcb, kix, vix, jnp.zeros((1, 1), jnp.int32), 0.2, blk=64)
+  assert bool(jnp.all(jnp.isfinite(out)))
+  assert float(jnp.max(dn)) == 0.0
+
+
+def test_combine_segments_exact():
+  """Flash-decoding combine over segments == one joint softmax."""
+  rng = np.random.default_rng(10)
+  g, d, n1, n2 = 2, 16, 40, 24
+  q = jnp.asarray(rng.normal(size=(g, d)), jnp.float32)
+  k = jnp.asarray(rng.normal(size=(n1 + n2, d)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(n1 + n2, d)), jnp.float32)
+  scale = 0.25
+
+  def seg(lo, hi):
+    s = (q @ k[lo:hi].T) * scale
+    mm = jnp.max(s, -1)
+    p = jnp.exp(s - mm[:, None])
+    return (p @ v[lo:hi]) / jnp.sum(p, -1)[:, None], mm, jnp.sum(p, -1)
+
+  o1, m1, l1 = seg(0, n1)
+  o2, m2, l2 = seg(n1, n1 + n2)
+  got = ops.combine_attention_segments([o1, o2], [m1, m2], [l1, l2])
+  from repro.core import pq_attention as pqa
+  want = pqa.exact_decode_attention(
+      q, k, v, jnp.ones((n1 + n2,), bool), scale)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                             rtol=1e-5, atol=1e-5)

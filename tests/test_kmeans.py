@@ -1,0 +1,100 @@
+"""Weighted k-means (paper Eq. 2): unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kmeans
+
+
+def test_assignment_is_nearest():
+  rng = np.random.default_rng(0)
+  x = jnp.asarray(rng.normal(size=(100, 8)), jnp.float32)
+  c = jnp.asarray(rng.normal(size=(7, 8)), jnp.float32)
+  a = kmeans.assign_clusters(x, c)
+  d = np.linalg.norm(np.asarray(x)[:, None] - np.asarray(c)[None], axis=-1)
+  np.testing.assert_array_equal(np.asarray(a), d.argmin(-1))
+
+
+def test_objective_decreases_over_iterations():
+  rng = np.random.default_rng(1)
+  x = jnp.asarray(rng.normal(size=(512, 16)), jnp.float32)
+  w = jnp.ones((512,))
+  errs = []
+  for iters in (0, 1, 2, 4, 8):
+    c, a = kmeans.weighted_kmeans(x, w, k=32, iters=iters)
+    errs.append(float(kmeans.weighted_quantization_error(x, w, c, a)))
+  assert all(e1 >= e2 - 1e-3 for e1, e2 in zip(errs, errs[1:])), errs
+
+
+def test_four_iterations_near_converged():
+  """Paper §III-B: 4 iterations reach a stable state."""
+  rng = np.random.default_rng(2)
+  centers = rng.normal(size=(16, 8)) * 5
+  x = jnp.asarray(
+      centers[rng.integers(0, 16, 2048)] + rng.normal(size=(2048, 8)) * 0.1,
+      jnp.float32)
+  w = jnp.ones((2048,))
+  c4, a4 = kmeans.weighted_kmeans(x, w, k=16, iters=4)
+  c20, a20 = kmeans.weighted_kmeans(x, w, k=16, iters=20)
+  e4 = float(kmeans.weighted_quantization_error(x, w, c4, a4))
+  e20 = float(kmeans.weighted_quantization_error(x, w, c20, a20))
+  assert e4 <= e20 * 1.10 + 1e-6, (e4, e20)
+
+
+def test_weighting_prioritizes_heavy_tokens():
+  """Heavily weighted tokens get lower quantization error than unweighted."""
+  rng = np.random.default_rng(3)
+  x = jnp.asarray(rng.normal(size=(512, 8)), jnp.float32)
+  w = jnp.ones((512,)).at[:32].set(100.0)      # 32 heavy hitters
+  cw, aw = kmeans.weighted_kmeans(x, w, k=16, iters=8)
+  cu, au = kmeans.weighted_kmeans(x, jnp.ones((512,)), k=16, iters=8)
+  def heavy_err(c, a):
+    recon = c[a[:32]]
+    return float(jnp.sum((x[:32] - recon) ** 2))
+  assert heavy_err(cw, aw) < heavy_err(cu, au)
+
+
+def test_mask_excludes_padding():
+  rng = np.random.default_rng(4)
+  x = np.asarray(rng.normal(size=(128, 4)), np.float32)
+  x[100:] = 1e3                                  # poisoned padding
+  mask = jnp.arange(128) < 100
+  c, a = kmeans.weighted_kmeans(
+      jnp.asarray(x), jnp.ones((128,)), k=8, iters=4, mask=mask)
+  assert float(jnp.max(jnp.abs(c))) < 100.0      # centroids ignore padding
+
+
+def test_empty_cluster_frozen():
+  x = jnp.asarray(np.zeros((16, 4), np.float32))
+  c, a = kmeans.weighted_kmeans(x, jnp.ones((16,)), k=8, iters=2)
+  assert bool(jnp.all(jnp.isfinite(c)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(16, 128), d=st.integers(2, 16),
+       k=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_property_update_reduces_weighted_objective(n, d, k, seed):
+  """One Lloyd update never increases the weighted objective."""
+  rng = np.random.default_rng(seed)
+  x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  w = jnp.asarray(rng.uniform(0.1, 2.0, size=(n,)), jnp.float32)
+  c0 = kmeans.init_centroids(x, k)
+  a0 = kmeans.assign_clusters(x, c0)
+  e0 = float(kmeans.weighted_quantization_error(x, w, c0, a0))
+  c1 = kmeans._weighted_update(x, w, a0, c0)
+  a1 = kmeans.assign_clusters(x, c1)
+  e1 = float(kmeans.weighted_quantization_error(x, w, c1, a1))
+  assert e1 <= e0 + 1e-3 * max(abs(e0), 1.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_singleton_clusters_exact(seed):
+  """K = N: every point its own centroid -> zero error."""
+  rng = np.random.default_rng(seed)
+  x = jnp.asarray(rng.normal(size=(16, 4)) * 10, jnp.float32)
+  c, a = kmeans.weighted_kmeans(x, jnp.ones((16,)), k=16, iters=6)
+  err = float(kmeans.weighted_quantization_error(x, jnp.ones((16,)), c, a))
+  assert err < 1e-2, err

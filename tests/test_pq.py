@@ -1,0 +1,152 @@
+"""Product Quantization codec + channel sorting tests (paper §III-B/D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel_sort, pq
+
+
+def _clustered(rng, n, d, n_modes=8, noise=0.05):
+  centers = rng.normal(size=(n_modes, d)) * 3
+  return jnp.asarray(
+      centers[rng.integers(0, n_modes, n)] + rng.normal(size=(n, d)) * noise,
+      jnp.float32)
+
+
+def test_roundtrip_shapes():
+  rng = np.random.default_rng(0)
+  x = _clustered(rng, 256, 64)
+  cfg = pq.PQConfig(m=8, k=32)
+  cb, idx = pq.build_codebook(x, jnp.ones((256,)), cfg)
+  assert cb.shape == (8, 32, 8)
+  assert idx.shape == (256, 8)
+  rec = pq.decode(idx, cb)
+  assert rec.shape == (256, 64)
+
+
+def test_error_decreases_with_k():
+  """Paper Table III: accuracy saturates as K grows."""
+  rng = np.random.default_rng(1)
+  x = _clustered(rng, 512, 32)
+  errs = []
+  for k in (4, 16, 64, 256):
+    cfg = pq.PQConfig(m=8, k=k, iters=8)
+    cb, idx = pq.build_codebook(x, jnp.ones((512,)), cfg)
+    errs.append(float(pq.quantization_mse(x, cb, idx)))
+  assert errs[0] > errs[-1]
+  assert all(a >= b - 1e-5 for a, b in zip(errs, errs[1:])), errs
+
+
+def test_error_decreases_with_m():
+  """Paper Table II: more subvectors -> finer quantization."""
+  rng = np.random.default_rng(2)
+  x = jnp.asarray(rng.normal(size=(512, 32)), jnp.float32)
+  errs = []
+  for m in (1, 2, 4, 8, 16):
+    cfg = pq.PQConfig(m=m, k=16, iters=8)
+    cb, idx = pq.build_codebook(x, jnp.ones((512,)), cfg)
+    errs.append(float(pq.quantization_mse(x, cb, idx)))
+  assert errs[0] > errs[-1], errs
+
+
+def test_encode_matches_build_assignment():
+  rng = np.random.default_rng(3)
+  x = _clustered(rng, 128, 16)
+  cfg = pq.PQConfig(m=4, k=8)
+  cb, idx = pq.build_codebook(x, jnp.ones((128,)), cfg)
+  idx2 = pq.encode(x, cb)
+  np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+
+
+def test_compression_ratio_accounting():
+  cfg = pq.PQConfig(m=32, k=512)
+  assert cfg.index_bytes() == 2
+  assert cfg.compression_ratio(128) == 128 * 2 / (32 * 2)  # 4x at int16
+  cfg8 = pq.PQConfig(m=32, k=256)
+  assert cfg8.compression_ratio(128) == 8.0                # 8x at uint8
+
+
+# ---------------------------------------------------------------------------
+# channel sorting (paper §III-D)
+# ---------------------------------------------------------------------------
+
+def test_greedy_groups_is_permutation():
+  rng = np.random.default_rng(4)
+  calib = rng.normal(size=(256, 32))
+  perm = channel_sort.greedy_channel_groups(calib, m=8)
+  assert sorted(perm.tolist()) == list(range(32))
+
+
+def test_sorting_groups_correlated_channels():
+  """Duplicated channels must land in the same group."""
+  rng = np.random.default_rng(5)
+  base = rng.normal(size=(512, 4))
+  # channels [i, i+4, i+8, i+12] are copies of each other (+ tiny noise)
+  calib = np.concatenate([base + rng.normal(size=base.shape) * 1e-3
+                          for _ in range(4)], axis=1)
+  perm = channel_sort.greedy_channel_groups(calib, m=4)
+  groups = perm.reshape(4, 4) % 4
+  for g in groups:
+    assert len(set(g.tolist())) == 1, groups
+
+
+def test_presort_reduces_pq_error():
+  """Paper Table IV 'w/o pre-sort' ablation, at the codec level."""
+  rng = np.random.default_rng(6)
+  base = rng.normal(size=(1024, 8))
+  # interleaved correlated channels: contiguous split is the worst case
+  calib = np.stack(
+      [base[:, i % 8] * (1 + 0.01 * i) for i in range(32)], axis=1)
+  x = jnp.asarray(calib, jnp.float32)
+  cfg = pq.PQConfig(m=8, k=16, iters=8)
+  cb0, idx0 = pq.build_codebook(x, jnp.ones((1024,)), cfg)
+  e_plain = float(pq.quantization_mse(x, cb0, idx0))
+  perm = channel_sort.greedy_channel_groups(calib, m=8)
+  xs = x[:, perm]
+  cb1, idx1 = pq.build_codebook(xs, jnp.ones((1024,)), cfg)
+  e_sorted = float(pq.quantization_mse(xs, cb1, idx1))
+  assert e_sorted < e_plain, (e_sorted, e_plain)
+
+
+def test_absorbed_permutation_preserves_scores():
+  """q.k invariant under shared head_dim permutation of W_q, W_k."""
+  rng = np.random.default_rng(7)
+  d_model, h, hd = 16, 2, 8
+  wq = rng.normal(size=(d_model, h, hd)).astype(np.float32)
+  wk = rng.normal(size=(d_model, h, hd)).astype(np.float32)
+  wv = rng.normal(size=(d_model, h, hd)).astype(np.float32)
+  wo = rng.normal(size=(h, hd, d_model)).astype(np.float32)
+  perm = np.random.default_rng(8).permutation(hd)
+  wq2, wk2, wv2, wo2 = channel_sort.absorb_into_projections(
+      wq, wk, wv, wo, perm, perm)
+  x = rng.normal(size=(4, d_model)).astype(np.float32)
+  q1 = np.einsum("bd,dhk->bhk", x, wq)
+  k1 = np.einsum("bd,dhk->bhk", x, wk)
+  q2 = np.einsum("bd,dhk->bhk", x, wq2)
+  k2 = np.einsum("bd,dhk->bhk", x, wk2)
+  np.testing.assert_allclose(
+      np.einsum("bhk,chk->bhc", q1, k1),
+      np.einsum("bhk,chk->bhc", q2, k2), rtol=1e-5, atol=1e-5)
+  # value path: v (x) o composition preserved
+  v1 = np.einsum("bd,dhk->bhk", x, wv)
+  o1 = np.einsum("bhk,hkd->bd", v1, wo)
+  v2 = np.einsum("bd,dhk->bhk", x, wv2)
+  o2 = np.einsum("bhk,hkd->bd", v2, wo2)
+  np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.sampled_from([2, 4, 8]), k=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_decode_encode_idempotent(m, k, seed):
+  """decode(encode(decode(idx))) == decode(idx): codebook points are fixed."""
+  rng = np.random.default_rng(seed)
+  cb = jnp.asarray(rng.normal(size=(m, k, 4)), jnp.float32)
+  idx = jnp.asarray(rng.integers(0, k, size=(32, m)), jnp.int32)
+  rec = pq.decode(idx, cb)
+  idx2 = pq.encode(rec, cb)
+  rec2 = pq.decode(idx2, cb)
+  np.testing.assert_allclose(np.asarray(rec), np.asarray(rec2),
+                             rtol=1e-5, atol=1e-5)

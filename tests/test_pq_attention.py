@@ -1,0 +1,170 @@
+"""PQ-based attention (paper Fig. 5): exactness and approximation tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pq, pq_attention as pqa, windowed
+
+
+def _setup(rng, n=128, d=32, m=8, k=16, g=2):
+  x_k = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  x_v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  cfg = pq.PQConfig(m=m, k=k, iters=6)
+  w = jnp.ones((n,))
+  kcb, kidx = pq.build_codebook(x_k, w, cfg)
+  vcb, vidx = pq.build_codebook(x_v, w, cfg)
+  q = jnp.asarray(rng.normal(size=(g, d)), jnp.float32)
+  return x_k, x_v, kcb, kidx, vcb, vidx, q, cfg
+
+
+def test_lookup_scores_equal_scores_on_reconstruction():
+  """Core identity: PQ scores == q . decode(indices) exactly."""
+  rng = np.random.default_rng(0)
+  x_k, _, kcb, kidx, _, _, q, cfg = _setup(rng)
+  table = pqa.inner_product_table(q, kcb)
+  s = pqa.lookup_scores(table, kidx)
+  rec = pq.decode(kidx, kcb)
+  np.testing.assert_allclose(np.asarray(s), np.asarray(q @ rec.T),
+                             rtol=1e-4, atol=1e-4)
+
+
+def test_bucket_output_equals_probs_times_reconstruction():
+  """Bucket-sum trick == probs @ decode(indices) exactly (paper steps 6-7)."""
+  rng = np.random.default_rng(1)
+  _, x_v, _, _, vcb, vidx, q, cfg = _setup(rng)
+  probs = jax.nn.softmax(jnp.asarray(rng.normal(size=(2, 128)), jnp.float32))
+  buckets = pqa.bucket_accumulate(probs, vidx, cfg.k)
+  out = pqa.output_from_buckets(buckets, vcb)
+  rec = pq.decode(vidx, vcb)
+  np.testing.assert_allclose(np.asarray(out), np.asarray(probs @ rec),
+                             rtol=1e-4, atol=1e-4)
+
+
+def test_pq_attention_equals_exact_on_reconstructed_kv():
+  """Full decode attention == exact attention over the reconstructed KV."""
+  rng = np.random.default_rng(2)
+  x_k, x_v, kcb, kidx, vcb, vidx, q, cfg = _setup(rng)
+  n, d = x_k.shape
+  seg = pqa.PQAttnSegments(
+      sink_k=jnp.zeros((0, d)), sink_v=jnp.zeros((0, d)),
+      sink_mask=jnp.zeros((0,), bool),
+      key_codebook=kcb, value_codebook=vcb,
+      key_indices=kidx, value_indices=vidx,
+      body_mask=jnp.ones((n,), bool),
+      recent_k=jnp.zeros((0, d)), recent_v=jnp.zeros((0, d)),
+      recent_mask=jnp.zeros((0,), bool))
+  scale = 1 / np.sqrt(d)
+  out = pqa.pq_decode_attention(q, seg, scale)
+  rec_k = pq.decode(kidx, kcb)
+  rec_v = pq.decode(vidx, vcb)
+  want = pqa.exact_decode_attention(q, rec_k, rec_v,
+                                    jnp.ones((n,), bool), scale)
+  np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                             rtol=1e-4, atol=1e-4)
+
+
+def test_pq_attention_approaches_exact_as_k_grows():
+  """Approximation error vs the TRUE attention shrinks with K (Table III)."""
+  rng = np.random.default_rng(3)
+  n, d = 128, 32
+  x_k = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  x_v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  q = jnp.asarray(rng.normal(size=(1, d)), jnp.float32)
+  scale = 1 / np.sqrt(d)
+  exact = pqa.exact_decode_attention(q, x_k, x_v, jnp.ones((n,), bool), scale)
+  errs = []
+  for k in (2, 8, 32, 128):
+    cfg = pq.PQConfig(m=8, k=k, iters=8)
+    kcb, kidx = pq.build_codebook(x_k, jnp.ones((n,)), cfg)
+    vcb, vidx = pq.build_codebook(x_v, jnp.ones((n,)), cfg)
+    seg = pqa.PQAttnSegments(
+        sink_k=jnp.zeros((0, d)), sink_v=jnp.zeros((0, d)),
+        sink_mask=jnp.zeros((0,), bool),
+        key_codebook=kcb, value_codebook=vcb,
+        key_indices=kidx, value_indices=vidx,
+        body_mask=jnp.ones((n,), bool),
+        recent_k=jnp.zeros((0, d)), recent_v=jnp.zeros((0, d)),
+        recent_mask=jnp.zeros((0,), bool))
+    out = pqa.pq_decode_attention(q, seg, scale)
+    errs.append(float(jnp.max(jnp.abs(out - exact))))
+  assert errs[0] > errs[-1], errs
+  assert errs[-1] < 0.05, errs    # K = N: near-exact
+
+
+def test_windowed_matches_flat_when_codebooks_tile():
+  """nW windows with identical codebooks == flat lookup."""
+  rng = np.random.default_rng(4)
+  x_k, _, kcb, kidx, _, _, q, cfg = _setup(rng, n=128)
+  flat = pqa.lookup_scores(pqa.inner_product_table(q, kcb), kidx)
+  cbs = jnp.broadcast_to(kcb[None], (4,) + kcb.shape)
+  win = pqa.windowed_lookup_scores(q, cbs, kidx)
+  np.testing.assert_allclose(np.asarray(flat), np.asarray(win),
+                             rtol=1e-4, atol=1e-4)
+
+
+def test_windowed_build_warm_start_improves_over_cold_window():
+  """Warm-started window codebooks give coherent pages (finite + low error)."""
+  rng = np.random.default_rng(5)
+  n, d = 256, 16
+  x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  cfg = pq.PQConfig(m=4, k=16, iters=4)
+  cbs, idx = windowed.windowed_build_codebooks(x, jnp.ones((n,)), cfg, 4)
+  rec = windowed.windowed_decode(idx, cbs)
+  err = float(jnp.mean((x - rec) ** 2))
+  assert np.isfinite(err) and err < float(jnp.var(x)), err
+
+
+def test_sink_recent_joint_softmax():
+  """Mixed segments (sink + body + recent) == one joint softmax."""
+  rng = np.random.default_rng(6)
+  n, d, s0, r = 64, 16, 4, 8
+  keys = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  vals = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+  q = jnp.asarray(rng.normal(size=(2, d)), jnp.float32)
+  scale = 1 / np.sqrt(d)
+  body_k, body_v = keys[s0:n - r], vals[s0:n - r]
+  cfg = pq.PQConfig(m=4, k=52, iters=10)  # K ~= body size -> near-lossless
+  nb = n - s0 - r
+  kcb, kidx = pq.build_codebook(body_k, jnp.ones((nb,)), cfg)
+  vcb, vidx = pq.build_codebook(body_v, jnp.ones((nb,)), cfg)
+  seg = pqa.PQAttnSegments(
+      sink_k=keys[:s0], sink_v=vals[:s0], sink_mask=jnp.ones((s0,), bool),
+      key_codebook=kcb, value_codebook=vcb,
+      key_indices=kidx, value_indices=vidx,
+      body_mask=jnp.ones((nb,), bool),
+      recent_k=keys[n - r:], recent_v=vals[n - r:],
+      recent_mask=jnp.ones((r,), bool))
+  out = pqa.pq_decode_attention(q, seg, scale)
+  # oracle: joint softmax over [sink | decode(body) | recent]
+  k_all = jnp.concatenate([keys[:s0], pq.decode(kidx, kcb), keys[n - r:]])
+  v_all = jnp.concatenate([vals[:s0], pq.decode(vidx, vcb), vals[n - r:]])
+  want = pqa.exact_decode_attention(q, k_all, v_all,
+                                    jnp.ones((n,), bool), scale)
+  np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                             rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), g=st.sampled_from([1, 2, 4]))
+def test_property_masked_tokens_never_contribute(seed, g):
+  rng = np.random.default_rng(seed)
+  n, d = 64, 16
+  x_k, x_v, kcb, kidx, vcb, vidx, q, cfg = _setup(rng, n=n, d=d, g=g)
+  mask = jnp.arange(n) < 32
+  seg = pqa.PQAttnSegments(
+      sink_k=jnp.zeros((0, d)), sink_v=jnp.zeros((0, d)),
+      sink_mask=jnp.zeros((0,), bool),
+      key_codebook=kcb, value_codebook=vcb,
+      key_indices=kidx, value_indices=vidx, body_mask=mask,
+      recent_k=jnp.zeros((0, d)), recent_v=jnp.zeros((0, d)),
+      recent_mask=jnp.zeros((0,), bool))
+  out1 = pqa.pq_decode_attention(q, seg, 0.1)
+  # poison masked indices: result must not change
+  poison = kidx.at[32:].set((kidx[32:] + 7) % cfg.k)
+  poison_v = vidx.at[32:].set((vidx[32:] + 3) % cfg.k)
+  seg2 = seg._replace(key_indices=poison, value_indices=poison_v)
+  out2 = pqa.pq_decode_attention(q, seg2, 0.1)
+  np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                             rtol=1e-5, atol=1e-5)

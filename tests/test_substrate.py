@@ -1,0 +1,230 @@
+"""Substrate tests: optimizer, data determinism, checkpoint, fault tolerance,
+sharding divisibility, importance weights."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs import ARCHS, get_arch
+from repro.core import importance
+from repro.data import pipeline as data_lib
+from repro.models import Model
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.runtime import fault_tolerance as ft
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+  cfg = adamw.OptConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                        weight_decay=0.0, master_f32=False)
+  params = {"w": jnp.asarray([5.0, -3.0])}
+  state = adamw.init(cfg, params)
+  for _ in range(150):
+    g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+    params, state, _ = adamw.update(cfg, state, params, g)
+  assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_adamw_bf16_params_with_f32_master():
+  cfg = adamw.OptConfig(lr=0.05, warmup_steps=1, total_steps=100,
+                        weight_decay=0.0, master_f32=True)
+  params = {"w": jnp.asarray([1.0, 2.0], jnp.bfloat16)}
+  state = adamw.init(cfg, params)
+  for _ in range(50):
+    g = jax.grad(lambda p: jnp.sum(p["w"].astype(jnp.float32) ** 2))(params)
+    params, state, _ = adamw.update(cfg, state, params, g)
+  assert params["w"].dtype == jnp.bfloat16
+  assert float(jnp.max(jnp.abs(state.master["w"]))) < 0.5
+
+
+def test_grad_compression_error_feedback_converges():
+  """int8-compressed grads with error feedback still minimize the objective."""
+  cfg = adamw.OptConfig(lr=0.1, warmup_steps=2, total_steps=300,
+                        weight_decay=0.0, master_f32=False,
+                        compress_grads=True)
+  params = {"w": jnp.linspace(-2, 2, 16)}
+  state = adamw.init(cfg, params)
+  for _ in range(200):
+    g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+    params, state, _ = adamw.update(cfg, state, params, g)
+  assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_clip_norm_bounds_update():
+  cfg = adamw.OptConfig(lr=1.0, warmup_steps=0, total_steps=10,
+                        clip_norm=1e-3, weight_decay=0.0, master_f32=False)
+  params = {"w": jnp.zeros((4,))}
+  state = adamw.init(cfg, params)
+  huge = {"w": jnp.full((4,), 1e6)}
+  _, _, m = adamw.update(cfg, state, params, huge)
+  assert float(m["grad_norm"]) > 1e5   # raw norm reported pre-clip
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_by_step():
+  cfg = data_lib.DataConfig(vocab_size=1000, seq_len=64, global_batch=4)
+  a = data_lib.make_batch(cfg, 7)
+  b = data_lib.make_batch(cfg, 7)
+  np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                np.asarray(b["tokens"]))
+  c = data_lib.make_batch(cfg, 8)
+  assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_data_shard_slices_consistent():
+  """Row r of the global batch is identical however the batch is sliced."""
+  cfg = data_lib.DataConfig(vocab_size=500, seq_len=32, global_batch=8)
+  full = data_lib._batch_numpy(cfg, 3, 0, 8)
+  part = data_lib._batch_numpy(cfg, 3, 5, 8)
+  np.testing.assert_array_equal(full[5:], part)
+
+
+def test_data_has_induction_structure():
+  cfg = data_lib.DataConfig(vocab_size=100, seq_len=128, global_batch=1,
+                            induction_period=32)
+  t = np.asarray(data_lib.make_batch(cfg, 0)["tokens"])[0]
+  np.testing.assert_array_equal(t[16:32], t[0:16])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+  tree = {"a": jnp.arange(6).reshape(2, 3),
+          "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+          "d": jnp.asarray(3, jnp.int32)}
+  with tempfile.TemporaryDirectory() as d:
+    ckpt_lib.save(d, 42, tree, extra={"next_step": 42})
+    assert ckpt_lib.latest_step(d) == 42
+    restored, extra = ckpt_lib.restore(d, 42, tree)
+    assert extra["next_step"] == 42
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+      np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                    np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_and_latest():
+  tree = {"w": jnp.ones((8, 8))}
+  with tempfile.TemporaryDirectory() as d:
+    cp = ckpt_lib.AsyncCheckpointer()
+    cp.save_async(d, 1, tree)
+    cp.save_async(d, 2, tree)   # waits for 1 internally
+    cp.wait()
+    assert ckpt_lib.latest_step(d) == 2
+
+
+def test_checkpoint_ignores_partial_writes():
+  tree = {"w": jnp.ones((2,))}
+  with tempfile.TemporaryDirectory() as d:
+    ckpt_lib.save(d, 5, tree)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    assert ckpt_lib.latest_step(d) == 5
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_restart_resumes_and_matches_uninterrupted_run():
+  def make_run(fail_at, d):
+    inj = ft.FailureInjector(fail_at=fail_at)
+    def init_state():
+      return {"x": jnp.zeros(()), "hist": jnp.zeros((50,))}
+    def step_fn(state, step):
+      x = state["x"] + step
+      return {"x": x, "hist": state["hist"].at[step].set(x)}
+    return ft.run_with_restarts(
+        total_steps=30, ckpt_dir=d, ckpt_every=5,
+        init_state_fn=init_state, step_fn=step_fn, injector=inj)
+
+  with tempfile.TemporaryDirectory() as d1:
+    clean, rep1 = make_run((), d1)
+  with tempfile.TemporaryDirectory() as d2:
+    failed, rep2 = make_run((7, 18), d2)
+  assert rep2.restarts == 2
+  assert rep2.resumed_from == [5, 15]
+  np.testing.assert_allclose(np.asarray(clean["hist"]),
+                             np.asarray(failed["hist"]))
+
+
+def test_straggler_monitor_flags_slow_steps():
+  mon = ft.StragglerMonitor(window=10, timeout_factor=3.0)
+  for i in range(10):
+    mon.record(i, 0.01)
+  assert mon.record(10, 0.2) is True
+  assert 10 in mon.flagged
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_param_specs_divisible_on_production_mesh(arch, key):
+  """Every sharded dim of every param divides the 16-way model axis."""
+  cfg = get_arch(arch)          # FULL config
+  model = Model(cfg, context_len=4096)
+  abstract = jax.eval_shape(model.init, key)
+  specs = shd.param_pspecs(abstract, cfg, 16)
+
+  def check(leaf, spec):
+    for dim, ax in zip(leaf.shape[leaf.ndim - len(spec):], spec):
+      if ax is not None:
+        size = 16 if ax == "model" else 16
+        assert dim % size == 0, (leaf.shape, tuple(spec))
+  jax.tree_util.tree_map(
+      check, abstract, specs,
+      is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+
+def test_cache_specs_divisible_long500k(key):
+  from repro.launch.mesh import make_local_mesh
+  cfg = get_arch("llama3-405b", reduced=True)
+  model = Model(cfg, context_len=1024)
+  cache = jax.eval_shape(lambda: model.init_cache(1))
+  mesh = make_local_mesh()
+  specs = shd.cache_pspecs(cache, mesh, batch=1, shard_sequence=True)
+  assert jax.tree_util.tree_structure(specs) is not None
+
+
+# ---------------------------------------------------------------------------
+# importance weights (Eq. 1)
+# ---------------------------------------------------------------------------
+
+def test_importance_matches_dense_colsum(key):
+  n, d, t = 64, 16, 8
+  q = jax.random.normal(key, (n, d))
+  k = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+  scale = 1 / np.sqrt(d)
+  w = importance.attention_importance_weights(q, k, scale, t=t, chunk=16)
+  # dense oracle
+  s = (q @ k.T) * scale
+  mask = jnp.tril(jnp.ones((n, n), bool))
+  s = jnp.where(mask, s, -jnp.inf)
+  p = jax.nn.softmax(s, axis=-1)
+  want = jnp.sum(p[-t:], axis=0)
+  np.testing.assert_allclose(np.asarray(w), np.asarray(want),
+                             rtol=1e-4, atol=1e-5)
+
+
+def test_importance_respects_dynamic_length(key):
+  n, d, t, ln = 64, 8, 4, 40
+  q = jax.random.normal(key, (n, d))
+  k = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+  w = importance.attention_importance_weights(
+      q, k, 0.3, t=t, chunk=16, length=jnp.int32(ln))
+  assert float(jnp.sum(w[ln:])) == 0.0
+  np.testing.assert_allclose(float(jnp.sum(w)), t, rtol=1e-4)
