@@ -1,15 +1,15 @@
 """Shared benchmark utilities: synthetic activation generators that mimic the
 paper's observation (Fig. 2) that K/V vectors cluster, an attention-quality
-metric, and a timing helper."""
+metric, and timing helpers (re-exported from repro.common.timing so the serve
+driver and the benches share one implementation)."""
 from __future__ import annotations
 
-import time
-from typing import Callable, Tuple
+from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.timing import Stopwatch, time_us  # noqa: F401  (re-export)
 from repro.core import pq_attention as pqa
 
 
@@ -45,15 +45,6 @@ def attention_quality(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                                      * base, 1e-9)))
   return {"rel_err": rel, "cosine": cos,
           "score_proxy": max(0.0, 100.0 * cos)}
-
-
-def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
-  for _ in range(warmup):
-    jax.block_until_ready(fn(*args))
-  t0 = time.perf_counter()
-  for _ in range(iters):
-    jax.block_until_ready(fn(*args))
-  return (time.perf_counter() - t0) / iters * 1e6
 
 
 def csv_line(name: str, us: float, derived: str) -> str:

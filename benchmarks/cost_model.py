@@ -91,7 +91,7 @@ def forward_flops(cfg: ModelConfig, b: int, s: int) -> float:
 def clustering_flops(cfg: ModelConfig, b: int, s: int) -> float:
   """PQ codebook generation at prefill (the work PIM hides): weighted k-means,
   4 iterations, per (layer, batch, kv-head), K & V."""
-  if not (cfg.pq_enabled and cfg.supports_pq):
+  if cfg.resolved_cache_policy() != "pq":
     return 0.0
   iters = 4
   n = max(s - cfg.pq_sink - cfg.pq_recent, 1)
@@ -193,7 +193,7 @@ def prefill_step_bytes(cfg: ModelConfig, b: int, s: int) -> float:
   n_blk = max(s // cfg.attn_block, 1)
   act += cfg.n_layers * 2 * n_blk * b * s * cfg.n_kv_heads * cfg.head_dim * BF16
   # clustering passes: 4 iters x (read body K/V per subvector sweep)
-  if cfg.pq_enabled and cfg.supports_pq:
+  if cfg.resolved_cache_policy() == "pq":
     act += cfg.n_layers * b * cfg.n_kv_heads * 2 * 4 * s * cfg.head_dim * F32
   # cache write
   act += kv_cache_bytes(cfg, b, s)

@@ -1,93 +1,80 @@
 """Paper Fig. 10: memory-reduction ratio vs accuracy, AQPIM vs baselines.
 
-Methods: AQPIM (PQ, in-PIM), SKVQ-like (uniform quant), SnapKV-like (eviction),
-PQCache-like (PQ-select + exact fetch — accuracy ~exact, but pays PCIe traffic,
-reported separately).  Memory ratio uses target-hardware byte accounting
-(bf16 exact vs int16/uint8 indices + codebooks / int4-8 scales / kept-token
-fraction)."""
+Every method now goes through the unified `CachePolicy` registry
+(`repro.core.cache_registry`) on identical inputs: prefill a clustered
+synthetic context, run one `append_and_attend` decode step, and compare the
+output against the `exact` policy's on the same state.  Memory ratios come
+from each policy's own `bytes()` accounting (bf16 exact vs int16/uint8
+indices + codebooks / int4-8 scales / kept-token fraction).
+"""
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import baselines, pq, pq_attention as pqa
+from repro.core import cache_api, cache_registry, kv_cache as kvc, pq
 
 
-def _aqpim_point(rng, keys, vals, w, q, scale, m, k):
-  n, d = keys.shape
-  cfg = pq.PQConfig(m=m, k=k, iters=4)
-  kcb, kidx = pq.build_codebook(keys, w, cfg)
-  vcb, vidx = pq.build_codebook(vals, w, cfg)
-  seg = pqa.PQAttnSegments(
-      sink_k=jnp.zeros((0, d)), sink_v=jnp.zeros((0, d)),
-      sink_mask=jnp.zeros((0,), bool),
-      key_codebook=kcb, value_codebook=vcb, key_indices=kidx,
-      value_indices=vidx, body_mask=jnp.ones((n,), bool),
-      recent_k=jnp.zeros((0, d)), recent_v=jnp.zeros((0, d)),
-      recent_mask=jnp.zeros((0,), bool))
-  out = pqa.pq_decode_attention(q, seg, scale)
-  exact_bytes = n * d * 2 * 2
-  idx_bytes = n * m * cfg.index_bytes() * 2
-  cb_bytes = 2 * m * k * (d // m) * 2
-  ratio = exact_bytes / (idx_bytes + cb_bytes)
-  return ratio, common.attention_quality(q, keys, vals, out, scale)
+def _policy_points(n: int, d: int):
+  """(label, registry key, CacheSpec) per swept Fig. 10 point."""
+  cap = n + 8
+  base = dict(capacity=cap, head_dim=d, dtype=jnp.float32, sink=8, recent=32)
 
+  def pq_spec(m, k):
+    body = n - 8 - 32 + 8
+    return cache_api.CacheSpec(
+        **base, pq=kvc.PQCacheConfig(sink=8, recent=32, body_capacity=body,
+                                     n_windows=1,
+                                     pq=pq.PQConfig(m=m, k=k, iters=4)))
 
-def _skvq_point(rng, keys, vals, q, scale, bits):
-  n, d = keys.shape
-  mask = jnp.ones((n,), bool)
-  out = baselines.skvq_decode_attention(q, keys, vals, mask, scale,
-                                        bits=bits, group=32)
-  # bytes: bits/value + per-group scale+zero (f16) over group=32
-  per_tok = d * bits / 8 + (d // 32) * 4
-  ratio = (d * 2) / per_tok
-  return ratio, common.attention_quality(q, keys, vals, out, scale)
-
-
-def _snapkv_point(rng, keys, vals, w, q, scale, keep_frac):
-  n, d = keys.shape
-  keep = max(int(n * keep_frac), 1)
-  mask = baselines.snapkv_select(w, keep=keep, sink=4, recent=16, length=n)
-  out = pqa.exact_decode_attention(q, keys, vals, mask, scale)
-  ratio = n / float(jnp.sum(mask))
-  return ratio, common.attention_quality(q, keys, vals, out, scale)
+  pts = [(f"aqpim_m{m}_k{k}", "pq", pq_spec(m, k))
+         for m, k in ((32, 512), (32, 256), (16, 256), (8, 128))]
+  pts += [(f"skvq_{bits}bit", "skvq",
+           cache_api.CacheSpec(**base, bits=bits, group=32))
+          for bits in (8, 4, 2)]
+  pts += [(f"snapkv_keep{frac}", "snapkv",
+           cache_api.CacheSpec(**base, keep_frac=frac))
+          for frac in (0.5, 0.25, 0.125)]
+  pts.append(("streamingllm_w512", "streamingllm",
+              cache_api.CacheSpec(**base, window=512)))
+  pts.append(("pqcache_keep0.125", "pqcache",
+              cache_api.CacheSpec(**base, keep_frac=0.125)))
+  return pts
 
 
 def run(n: int = 2048, d: int = 128) -> list:
   rng = np.random.default_rng(0)
   keys, vals, w = common.clustered_activations(rng, n, d)
-  q = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
-  scale = 1 / np.sqrt(d)
+  k4 = keys[None, None]                       # (1, 1, N, D)
+  v4 = vals[None, None]
+  w3 = w[None, None]
+  q4 = jnp.asarray(rng.normal(size=(1, 4, d)), jnp.float32)
+  kn = jnp.asarray(rng.normal(size=(1, 1, d)), jnp.float32)
+  vn = jnp.asarray(rng.normal(size=(1, 1, d)), jnp.float32)
+  lengths = jnp.asarray([n], jnp.int32)
+
+  def one_step(policy):
+    state = policy.prefill(k4, v4, w3 if policy.needs_weights else None)
+    out, _ = policy.append_and_attend(state, q4, kn, vn, lengths)
+    return np.asarray(out[0], np.float64)     # (g, d)
+
+  exact = one_step(cache_registry.make("exact", cache_api.CacheSpec(
+      capacity=n + 8, head_dim=d, dtype=jnp.float32)))
+
   lines = []
-
-  for m, k in ((32, 512), (32, 256), (16, 256), (8, 128)):
-    ratio, qual = _aqpim_point(rng, keys, vals, w, q, scale, m, k)
-    lines.append(common.csv_line(
-        f"fig10_aqpim_m{m}_k{k}", 0.0,
-        f"mem_reduction={ratio:.2f}x;cosine={qual['cosine']:.4f}"))
-
-  for bits in (8, 4, 2):
-    ratio, qual = _skvq_point(rng, keys, vals, q, scale, bits)
-    lines.append(common.csv_line(
-        f"fig10_skvq_{bits}bit", 0.0,
-        f"mem_reduction={ratio:.2f}x;cosine={qual['cosine']:.4f}"))
-
-  for frac in (0.5, 0.25, 0.125):
-    ratio, qual = _snapkv_point(rng, keys, vals, w, q, scale, frac)
-    lines.append(common.csv_line(
-        f"fig10_snapkv_keep{frac}", 0.0,
-        f"mem_reduction={ratio:.2f}x;cosine={qual['cosine']:.4f}"))
-
-  # PQCache-like: accuracy ~exact at keep=12.5% but pays exact-KV fetch traffic
-  cfg = pq.PQConfig(m=16, k=128, iters=4)
-  out, traffic = baselines.pqcache_decode_attention(
-      q, keys, vals, jnp.ones((n,), bool), scale, cfg, keep=n // 8)
-  qual = common.attention_quality(q, keys, vals, out, scale)
-  lines.append(common.csv_line(
-      "fig10_pqcache_keep0.125", 0.0,
-      f"cosine={qual['cosine']:.4f};pcie_bytes_per_step={traffic['fetched_bytes']}"))
+  for label, name, spec in _policy_points(n, d):
+    policy = cache_registry.make(name, spec)
+    out = one_step(policy)
+    cos = float(np.mean(
+        np.sum(out * exact, -1)
+        / np.maximum(np.linalg.norm(out, axis=-1)
+                     * np.linalg.norm(exact, axis=-1), 1e-9)))
+    by = policy.bytes(1, 1, d)
+    derived = f"mem_reduction={by['reduction_ratio']:.2f}x;cosine={cos:.4f}"
+    if "fetched_bytes_per_step" in by:
+      derived += f";pcie_bytes_per_step={by['fetched_bytes_per_step']}"
+    lines.append(common.csv_line(f"fig10_{label}", 0.0, derived))
   return lines
 
 

@@ -1,10 +1,19 @@
 """Benchmark harness: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.  Roofline rows require the dry-run
-JSONs (python -m repro.launch.dryrun); other benches are self-contained."""
+
+Default mode prints ``name,us_per_call,derived`` CSV.  Roofline rows require
+the dry-run JSONs (python -m repro.launch.dryrun); other benches are
+self-contained.
+
+``--json`` instead runs the serving benchmark (tinyllama reduced, `pq` vs
+`exact` cache policy through `repro.launch.serve.ServeRun`) and writes a
+``BENCH_serve.json`` with tok/s — the start of the serving perf trajectory.
+"""
+import argparse
+import json
 import sys
 
 
-def main() -> None:
+def run_csv() -> int:
   from benchmarks import (
       fig10_tradeoff,
       fig11_13_latency_model,
@@ -31,8 +40,48 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
       failures += 1
       print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}")
-  if failures:
-    sys.exit(1)
+  return 1 if failures else 0
+
+
+def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
+                   batch: int = 2, prompt_len: int = 64, gen: int = 16) -> int:
+  from repro.launch.serve import ServeRun
+
+  results = {"arch": arch, "reduced": True, "batch": batch,
+             "prompt_len": prompt_len, "gen": gen, "policies": {}}
+  for policy in ("pq", "exact"):
+    run = ServeRun(arch=arch, reduced=True, batch=batch,
+                   prompt_len=prompt_len, gen=gen, cache_policy=policy)
+    res = run.run()
+    results["policies"][policy] = {
+        "tok_per_s": round(res["tok_per_s"], 2),
+        "prefill_s": round(res["prefill_s"], 4),
+        "decode_s": round(res["decode_s"], 4),
+    }
+    print(f"serve[{policy}]: {res['tok_per_s']:.1f} tok/s "
+          f"(prefill {res['prefill_s']:.2f}s, decode {res['decode_s']:.2f}s)")
+  with open(out_path, "w") as f:
+    json.dump(results, f, indent=2)
+    f.write("\n")
+  print(f"wrote {out_path}")
+  return 0
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser(description=__doc__)
+  ap.add_argument("--json", action="store_true",
+                  help="run the serve benchmark and write a JSON summary")
+  ap.add_argument("--out", default="BENCH_serve.json",
+                  help="output path for --json mode")
+  ap.add_argument("--arch", default="tinyllama-1.1b")
+  ap.add_argument("--batch", type=int, default=2)
+  ap.add_argument("--prompt-len", type=int, default=64)
+  ap.add_argument("--gen", type=int, default=16)
+  args = ap.parse_args()
+  if args.json:
+    sys.exit(run_serve_json(args.out, arch=args.arch, batch=args.batch,
+                            prompt_len=args.prompt_len, gen=args.gen))
+  sys.exit(run_csv())
 
 
 if __name__ == '__main__':

@@ -13,7 +13,6 @@ import jax, jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import kv_cache as kvc
 from repro.models import Model
 
 
@@ -32,24 +31,24 @@ def main():
   tokens = jax.random.randint(key, (1, n), 0, cfg.vocab_size)
 
   results = {}
-  for pq_on in (True, False):
-    c = dataclasses.replace(cfg, pq_enabled=pq_on)
+  for policy in ("pq", "exact"):
+    c = dataclasses.replace(cfg, cache_policy=policy)
     model = Model(c, context_len=n + 64)
     params = model.init(key)
     logits, cache = model.prefill(params, tokens)
     lg, _ = model.decode_step(params, tokens[:, -1], cache, jnp.int32(n))
-    results[pq_on] = np.asarray(lg, np.float32)
-    if pq_on:
-      st = kvc.pq_cache_bytes(model.pq_cfg, 1, c.n_kv_heads, c.head_dim)
-      print(f"context {n}: PQ cache {st['total_bytes']/1e6:.2f} MB/layer-head-set "
-            f"vs exact {st['equivalent_exact_bytes']/1e6:.2f} MB "
-            f"({st['reduction_ratio']:.1f}x reduction)")
+    results[policy] = np.asarray(lg, np.float32)
+    # every policy reports its own target-hardware byte budget
+    st = model.cache_policy.bytes(1, c.n_kv_heads, c.head_dim)
+    print(f"context {n}: {policy} cache {st['total_bytes']/1e6:.2f} MB"
+          f"/layer-head-set vs exact {st['equivalent_exact_bytes']/1e6:.2f} MB"
+          f" ({st['reduction_ratio']:.1f}x reduction)")
 
-  a, b = results[True].ravel(), results[False].ravel()
+  a, b = results["pq"].ravel(), results["exact"].ravel()
   corr = float(np.corrcoef(a, b)[0, 1])
   print(f"decode-logit correlation PQ vs exact: {corr:.4f}")
   print("top-1 agreement:",
-        bool(results[True].argmax() == results[False].argmax()))
+        bool(results["pq"].argmax() == results["exact"].argmax()))
 
 
 if __name__ == "__main__":

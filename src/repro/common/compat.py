@@ -1,0 +1,10 @@
+"""jax version-compat helpers shared by launch drivers and tests."""
+from __future__ import annotations
+
+
+def normalize_cost_analysis(cost) -> dict:
+  """jax<0.5 `compiled.cost_analysis()` returns one dict per device; newer
+  releases return the dict directly.  Always hand back a dict."""
+  if isinstance(cost, (list, tuple)):
+    return cost[0] if cost else {}
+  return cost or {}

@@ -1,0 +1,47 @@
+"""Small reusable timers shared by the serve driver and the benchmark harness.
+
+`Stopwatch` wraps a block and (optionally) a `block_until_ready` target so
+async-dispatched JAX work is actually counted; `time_us` is the classic
+warmup-then-average microbenchmark loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+class Stopwatch:
+  """Context manager measuring wall time of a block.
+
+      with Stopwatch() as sw:
+        out = fn(x)
+        sw.wait_for(out)          # block on async dispatch before stopping
+      print(sw.seconds)
+  """
+
+  def __init__(self):
+    self.seconds = 0.0
+    self._t0 = 0.0
+
+  def __enter__(self) -> "Stopwatch":
+    self._t0 = time.monotonic()
+    return self
+
+  def wait_for(self, tree) -> None:
+    jax.block_until_ready(tree)
+
+  def __exit__(self, *exc) -> bool:
+    self.seconds = time.monotonic() - self._t0
+    return False
+
+
+def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+  """Average wall-clock microseconds per call (after warmup compiles)."""
+  for _ in range(warmup):
+    jax.block_until_ready(fn(*args))
+  t0 = time.perf_counter()
+  for _ in range(iters):
+    jax.block_until_ready(fn(*args))
+  return (time.perf_counter() - t0) / iters * 1e6

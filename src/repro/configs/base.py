@@ -52,7 +52,9 @@ class ModelConfig:
   # runtime knobs (overridden per run via dataclasses.replace)
   attn_block: int = 512
   decode_cache_len: int = 4096     # exact-cache capacity for decode
-  pq_enabled: bool = True          # AQPIM on attention KV (if family supports it)
+  cache_policy: str = "pq"         # registry key: exact | pq | skvq | snapkv |
+                                   # streamingllm | pqcache (core/cache_registry)
+  pq_enabled: bool = True          # legacy toggle: False downgrades "pq"->"exact"
   pq_m: int = 32                   # paper Table II optimum
   pq_k: int = 512                  # paper Table III optimum
   pq_sink: int = 8                 # paper §IV-A
@@ -91,9 +93,36 @@ class ModelConfig:
   def supports_pq(self) -> bool:
     return not self.attn_free
 
+  def resolved_cache_policy(self) -> str:
+    """Effective registry key: legacy `pq_enabled=False` means exact; families
+    without attention never build a KV policy at all."""
+    if not self.supports_pq:
+      return "exact"
+    if self.cache_policy == "pq" and not self.pq_enabled:
+      return "exact"
+    return self.cache_policy
+
+  def make_cache_policy(self, context_len: int):
+    """Build the configured CachePolicy for a given max context (None when the
+    family has no attention KV cache, e.g. rwkv6)."""
+    from repro.core import cache_api, cache_registry
+    if self.attn_free:
+      return None
+    name = self.resolved_cache_policy()
+    spec = cache_api.CacheSpec(
+        capacity=context_len, head_dim=self.head_dim, dtype=self.dtype,
+        sink=self.pq_sink, recent=self.pq_recent,
+        pq=self.pq_cache_config(context_len) if name == "pq" else None)
+    return cache_registry.make(name, spec)
+
   def pq_cache_config(self, context_len: int) -> Optional[kvc.PQCacheConfig]:
-    """PQ cache geometry for a given max context (None if PQ off/unsupported)."""
-    if not (self.pq_enabled and self.supports_pq):
+    """PQ cache geometry for a given max context.
+
+    None whenever the *effective* cache policy is not "pq" — so the cost
+    model, roofline, and dry-run byte accounting stay in lockstep with the
+    policy the model actually runs (not just the legacy pq_enabled flag).
+    """
+    if self.resolved_cache_policy() != "pq":
       return None
     body = max(context_len - self.pq_sink - self.pq_recent, self.pq_windows)
     # round body capacity to a multiple of windows AND the kernel block (512)

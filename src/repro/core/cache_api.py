@@ -1,0 +1,361 @@
+"""Unified `CachePolicy` API: one swappable surface for every KV-cache method.
+
+AQPIM's core claim is that PQ-compressed KV attention is a *drop-in
+replacement* for exact decode attention (paper Fig. 3a/5), evaluated by
+sweeping it against SKVQ/SnapKV/StreamingLLM/PQCache-style baselines on
+identical inputs (§IV-A/B, Fig. 10).  This module makes "which KV policy"
+a first-class choice.  Every policy implements:
+
+    init(b, h, d)                                   -> state
+    prefill(k, v, weights, lengths)                 -> state
+    append_and_attend(state, q, k_new, v_new, lengths) -> (out, state)
+    bytes(b, h, d)                                  -> dict
+
+Shapes: k/v (B, H, N, D); q (B, Hq, D) with GQA groups folded into Hq;
+`lengths` is a per-request (B,) int32 vector (a scalar broadcasts), so one
+batch may mix prompt lengths — the substrate for continuous batching in
+`repro.launch.engine`.  `weights` are the Eq. 1 importance weights
+(B, H, N); only policies with `needs_weights=True` receive them.
+
+Policies are selected by string key via `repro.core.cache_registry`:
+`exact`, `pq` (AQPIM), `skvq`, `snapkv`, `streamingllm`, `pqcache`.
+
+Migration from the old free functions:
+
+    exact_cache_init/prefill/append_and_attend  -> ExactPolicy methods
+    pq_cache_init/prefill/append_and_attend     -> PQPolicy methods
+    baselines.{skvq,snapkv,streaming_llm,pqcache}_decode_attention
+        -> the corresponding policy's append_and_attend
+
+The kernel-level free functions in `kv_cache.py`/`baselines.py` remain the
+numerical core; policies bind geometry (a `CacheSpec`) and add the batched
+per-request-length semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array
+from repro.core import baselines, cache_registry, kv_cache as kvc
+from repro.core import pq as pqlib
+from repro.core import pq_attention
+
+
+def _fit_m(m: int, d: int) -> int:
+  while m > 1 and d % m != 0:
+    m //= 2
+  return max(m, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+  """Static geometry + hyperparameters shared by all policies.
+
+  `capacity` is the maximum context (prompt + generated) per request;
+  policy-specific fields are ignored by policies that don't use them.
+  """
+  capacity: int
+  head_dim: int
+  dtype: Any = jnp.bfloat16
+  sink: int = 8              # exact sink tokens (paper §IV-A)
+  recent: int = 32           # exact recent window (= t of Eq. 1)
+  window: int = 512          # streamingllm sliding window
+  bits: int = 4              # skvq uniform-quant bits
+  group: int = 32            # skvq channel-group size
+  keep_frac: float = 0.25    # snapkv / pqcache kept-token fraction
+  pq: Optional[kvc.PQCacheConfig] = None   # aqpim geometry (policy "pq")
+  pq_select: Optional[pqlib.PQConfig] = None  # pqcache ANN-index codec
+  scale: Optional[float] = None            # softmax scale; None -> d^-0.5
+
+  @property
+  def keep(self) -> int:
+    return max(int(self.capacity * self.keep_frac), 1)
+
+  def sm_scale(self, d: int) -> float:
+    return self.scale if self.scale is not None else float(d) ** -0.5
+
+
+class WeightedLayerCache(NamedTuple):
+  """Exact KV plus per-token importance (snapkv's observation window)."""
+  k: Array               # (B, H, N, D)
+  v: Array
+  w: Array               # (B, H, N) f32
+
+
+class CachePolicy:
+  """Base class; subclasses register themselves under a string key."""
+  name: str = "base"
+  needs_weights: bool = False
+
+  def __init__(self, spec: CacheSpec):
+    self.spec = spec
+
+  # -- protocol -------------------------------------------------------------
+  def init(self, b: int, h: int, d: int) -> Any:
+    raise NotImplementedError
+
+  def prefill(self, k: Array, v: Array, weights: Optional[Array] = None,
+              lengths: Optional[Array] = None) -> Any:
+    raise NotImplementedError
+
+  def append_and_attend(self, state: Any, q: Array, k_new: Array,
+                        v_new: Array, lengths: Array) -> Tuple[Array, Any]:
+    raise NotImplementedError
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    raise NotImplementedError
+
+  def __repr__(self) -> str:
+    return f"{type(self).__name__}(capacity={self.spec.capacity})"
+
+
+# ---------------------------------------------------------------------------
+# Exact-family policies: full-precision store, per-policy attend transform
+# ---------------------------------------------------------------------------
+
+class _ExactStorePolicy(CachePolicy):
+  """Shared store/append machinery for policies that keep exact KV.
+
+  Subclasses override `_attend(q, k, v, w, length)` operating per
+  (batch, kv-head): q (g, d), k/v (N, d), w (N,) f32 or None, `length` the
+  count of cached tokens *including* the token just inserted minus one
+  (i.e. valid positions are < length + 1).
+  """
+  tracks_weights = False
+
+  def init(self, b: int, h: int, d: int) -> Any:
+    base = kvc.exact_cache_init(b, h, self.spec.capacity, d, self.spec.dtype)
+    if not self.tracks_weights:
+      return base
+    return WeightedLayerCache(
+        k=base.k, v=base.v, w=jnp.zeros((b, h, self.spec.capacity),
+                                        jnp.float32))
+
+  def prefill(self, k: Array, v: Array, weights: Optional[Array] = None,
+              lengths: Optional[Array] = None) -> Any:
+    del lengths  # padding rows are masked at attend time by `lengths`
+    base = kvc.exact_cache_prefill(k, v, self.spec.capacity)
+    if not self.tracks_weights:
+      return base
+    b, h, n, _ = k.shape
+    w = weights if weights is not None else jnp.zeros((b, h, n))
+    w = jnp.pad(w.astype(jnp.float32),
+                ((0, 0), (0, 0), (0, self.spec.capacity - n)))
+    return WeightedLayerCache(k=base.k, v=base.v, w=w)
+
+  def append_and_attend(self, state: Any, q: Array, k_new: Array,
+                        v_new: Array, lengths: Array) -> Tuple[Array, Any]:
+    b = q.shape[0]
+    d = q.shape[-1]
+    lens = kvc.as_lengths(lengths, b)
+    scale = self.spec.sm_scale(d)
+    tracks = self.tracks_weights
+
+    def one(k_c, v_c, w_c, qq, kn, vn, ln):
+      # k_c/v_c (H, N, D), w_c (H, N) or None, qq (Hq, D), ln scalar
+      h = k_c.shape[0]
+      hq = qq.shape[0]
+      g = hq // h
+      k_c, v_c = kvc.exact_insert_one(k_c, v_c, kn, vn, ln)
+      qg = qq.reshape(h, g, d)
+      if w_c is None:
+        out = jax.vmap(lambda qh, kh, vh: self._attend(qh, kh, vh, None, ln)
+                       )(qg, k_c, v_c)
+        return out.reshape(hq, d), k_c, v_c, None
+      # generated tokens get +inf importance: real SnapKV compresses only the
+      # prompt, so post-prefill tokens must outrank every observed prompt
+      # weight in the top-keep selection once they age out of `recent`
+      w_c = jax.lax.dynamic_update_slice(
+          w_c, jnp.full((w_c.shape[0], 1), jnp.inf, w_c.dtype), (0, ln))
+      out = jax.vmap(lambda qh, kh, vh, wh: self._attend(qh, kh, vh, wh, ln)
+                     )(qg, k_c, v_c, w_c)
+      return out.reshape(hq, d), k_c, v_c, w_c
+
+    if tracks:
+      out, k_c, v_c, w_c = jax.vmap(one)(
+          state.k, state.v, state.w, q, k_new, v_new, lens)
+      return out, WeightedLayerCache(k=k_c, v=v_c, w=w_c)
+    out, k_c, v_c, _ = jax.vmap(
+        lambda k_c, v_c, qq, kn, vn, ln: one(k_c, v_c, None, qq, kn, vn, ln)
+    )(state.k, state.v, q, k_new, v_new, lens)
+    return out, kvc.ExactLayerCache(k=k_c, v=v_c)
+
+  # scale is bound per call because d is only known there
+  def _attend(self, q: Array, k: Array, v: Array, w: Optional[Array],
+              length: Array) -> Array:
+    raise NotImplementedError
+
+  def _valid_mask(self, n: int, length: Array) -> Array:
+    return jnp.arange(n) < (length + 1)
+
+
+@cache_registry.register("exact")
+class ExactPolicy(_ExactStorePolicy):
+  """Full-precision KV, dense decode attention (the paper's upper bound)."""
+
+  def append_and_attend(self, state, q, k_new, v_new, lengths):
+    # identical semantics to the generic path; delegate so the plain-exact
+    # row step has exactly one implementation (kv_cache.py)
+    return kvc.exact_cache_append_and_attend(
+        state, q, k_new, v_new, lengths, self.spec.sm_scale(q.shape[-1]))
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    fp = 2
+    per_head = self.spec.capacity * d * fp * 2
+    return dict(per_head_bytes=per_head, total_bytes=per_head * b * h,
+                equivalent_exact_bytes=per_head * b * h, reduction_ratio=1.0)
+
+
+@cache_registry.register("streamingllm")
+class StreamingLLMPolicy(_ExactStorePolicy):
+  """Static sink + sliding window; everything else evicted (masked)."""
+
+  def _attend(self, q, k, v, w, length):
+    return baselines.streaming_llm_decode_attention(
+        q, k, v, length + 1, self.spec.sm_scale(q.shape[-1]),
+        sink=self.spec.sink, window=self.spec.window)
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    fp = 2
+    kept = min(self.spec.sink + self.spec.window, self.spec.capacity)
+    per_head = kept * d * fp * 2
+    exact = self.spec.capacity * d * fp * 2
+    return dict(per_head_bytes=per_head, total_bytes=per_head * b * h,
+                equivalent_exact_bytes=exact * b * h,
+                reduction_ratio=exact / per_head)
+
+
+@cache_registry.register("skvq")
+class SKVQPolicy(_ExactStorePolicy):
+  """Sliding-window uniform quantization with channel reordering.
+
+  Storage is modeled (bytes()); compute follows §IV-E: GPUs must upcast, so
+  the attend path quantize-dequantizes the full valid context each step.
+  """
+
+  def _attend(self, q, k, v, w, length):
+    mask = self._valid_mask(k.shape[0], length)
+    # zero masked rows so garbage never skews the channel-range reorder
+    k_m = jnp.where(mask[:, None], k, 0)
+    v_m = jnp.where(mask[:, None], v, 0)
+    return baselines.skvq_decode_attention(
+        q, k_m, v_m, mask, self.spec.sm_scale(q.shape[-1]),
+        bits=self.spec.bits, group=min(self.spec.group, k.shape[-1]))
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    g = min(self.spec.group, d)
+    per_tok = d * self.spec.bits / 8 + (d // g) * 4   # int storage + scale/zero
+    per_head = int(self.spec.capacity * per_tok) * 2
+    exact = self.spec.capacity * d * 2 * 2
+    return dict(per_head_bytes=per_head, total_bytes=per_head * b * h,
+                equivalent_exact_bytes=exact * b * h,
+                reduction_ratio=exact / per_head)
+
+
+@cache_registry.register("snapkv")
+class SnapKVPolicy(_ExactStorePolicy):
+  """Importance top-k eviction: sinks + recents + top-`keep` body tokens.
+
+  Matches real SnapKV's asymmetry: the *prompt* body competes for the keep
+  budget by observed importance, while generated tokens (weighted +inf at
+  append) are never evicted in favor of prompt tokens."""
+  needs_weights = True
+  tracks_weights = True
+
+  def _attend(self, q, k, v, w, length):
+    mask = baselines.snapkv_select(
+        w, keep=self.spec.keep, sink=self.spec.sink,
+        recent=self.spec.recent, length=length + 1)
+    return pq_attention.exact_decode_attention(
+        q, k, v, mask, self.spec.sm_scale(q.shape[-1]))
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    kept = min(self.spec.sink + self.spec.recent + self.spec.keep,
+               self.spec.capacity)
+    per_head = kept * d * 2 * 2
+    exact = self.spec.capacity * d * 2 * 2
+    return dict(per_head_bytes=per_head, total_bytes=per_head * b * h,
+                equivalent_exact_bytes=exact * b * h,
+                reduction_ratio=exact / per_head)
+
+
+@cache_registry.register("pqcache")
+class PQCachePolicy(_ExactStorePolicy):
+  """PQ as ANN index to select top-k, exact KV fetched for selected tokens.
+
+  Accuracy ~exact; the cost AQPIM eliminates is the per-step exact-KV fetch
+  over PCIe, accounted in bytes()['fetched_bytes_per_step'].
+
+  NOTE: this models *selection quality and traffic*, not wall-clock: the PQ
+  index is rebuilt from scratch each step (the real PQCache builds it once
+  at prefill and appends incrementally), so tok/s measured with this policy
+  overstates the baseline's compute cost.  bytes() reflects the persistent
+  index the real system stores.
+  """
+
+  def _select_cfg(self, d: int) -> pqlib.PQConfig:
+    if self.spec.pq_select is not None:
+      return self.spec.pq_select
+    # matches the historical Fig. 10 operating point — a *strong* baseline
+    # (weakening it would flatter AQPIM's relative accuracy)
+    return pqlib.PQConfig(m=_fit_m(16, d), k=128, iters=4)
+
+  def _attend(self, q, k, v, w, length):
+    mask = self._valid_mask(k.shape[0], length)
+    out, _ = baselines.pqcache_decode_attention(
+        q, k, v, mask, self.spec.sm_scale(q.shape[-1]),
+        self._select_cfg(k.shape[-1]), keep=self.spec.keep)
+    return out
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    cfg = self._select_cfg(d)
+    idx = self.spec.capacity * cfg.m * cfg.index_bytes() * 2
+    per_head = idx                        # on-accelerator footprint: the index
+    exact = self.spec.capacity * d * 2 * 2
+    return dict(per_head_bytes=per_head, total_bytes=per_head * b * h,
+                equivalent_exact_bytes=exact * b * h,
+                reduction_ratio=exact / per_head,
+                fetched_bytes_per_step=self.spec.keep * d * 2 * 2 * b * h)
+
+
+# ---------------------------------------------------------------------------
+# AQPIM PQ policy
+# ---------------------------------------------------------------------------
+
+@cache_registry.register("pq")
+class PQPolicy(CachePolicy):
+  """AQPIM: sink/recent exact, PQ-compressed body, attention on compressed
+  data (paper Fig. 3a/5).  Wraps the kv_cache.py kernel-level core."""
+  needs_weights = True
+
+  def __init__(self, spec: CacheSpec):
+    super().__init__(spec)
+    if spec.pq is None:
+      raise ValueError("PQPolicy requires CacheSpec.pq geometry")
+    if (spec.pq.sink, spec.pq.recent) != (spec.sink, spec.recent):
+      # _attn_prefill reads the Eq. 1 window t from spec.recent while the
+      # cache rings use spec.pq — drift would silently skew weight quality
+      raise ValueError(
+          f"CacheSpec sink/recent ({spec.sink},{spec.recent}) must match "
+          f"PQCacheConfig ({spec.pq.sink},{spec.pq.recent})")
+    self.pq_cfg = spec.pq
+
+  def init(self, b: int, h: int, d: int):
+    return kvc.pq_cache_init(b, h, d, self.pq_cfg, self.spec.dtype)
+
+  def prefill(self, k, v, weights=None, lengths=None):
+    if weights is None:
+      weights = jnp.ones(k.shape[:3], jnp.float32)
+    return kvc.pq_cache_prefill(k, v, weights, self.pq_cfg, length=lengths)
+
+  def append_and_attend(self, state, q, k_new, v_new, lengths):
+    return kvc.pq_cache_append_and_attend(
+        state, q, k_new, v_new, lengths, self.pq_cfg,
+        self.spec.sm_scale(q.shape[-1]))
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    return kvc.pq_cache_bytes(self.pq_cfg, b, h, d)

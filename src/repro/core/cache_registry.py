@@ -1,0 +1,53 @@
+"""String-keyed registry of KV-cache policies.
+
+Every method the paper sweeps (AQPIM PQ, exact, SKVQ/SnapKV/StreamingLLM/
+PQCache baselines — §IV-A/B, Fig. 10) registers itself here under a short
+key; models, the serve engine, and the benchmark harness all select the
+policy by name:
+
+    from repro.core import cache_registry
+    policy = cache_registry.make("pq", spec)
+
+Kept import-light (stdlib only) so it can sit below both `core.cache_api`
+and `configs.base` without cycles.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(name: str) -> Callable[[type], type]:
+  """Class decorator: `@register("pq") class PQPolicy(CachePolicy)`."""
+  def deco(cls: type) -> type:
+    if name in _REGISTRY and _REGISTRY[name] is not cls:
+      raise ValueError(f"cache policy {name!r} already registered")
+    _REGISTRY[name] = cls
+    cls.name = name
+    return cls
+  return deco
+
+
+def get(name: str) -> type:
+  _ensure_builtin()
+  try:
+    return _REGISTRY[name]
+  except KeyError:
+    raise KeyError(
+        f"unknown cache policy {name!r}; available: {names()}") from None
+
+
+def make(name: str, spec):
+  """Instantiate the policy registered under `name` with a CacheSpec."""
+  return get(name)(spec)
+
+
+def names() -> Tuple[str, ...]:
+  _ensure_builtin()
+  return tuple(sorted(_REGISTRY))
+
+
+def _ensure_builtin() -> None:
+  # registration happens at class definition; importing cache_api is enough
+  from repro.core import cache_api  # noqa: F401  (cycle-safe: lazy)

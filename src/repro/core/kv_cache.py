@@ -18,6 +18,7 @@ jit/pjit-safe and lowers into the multi-pod serve_step.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -25,6 +26,14 @@ import jax.numpy as jnp
 
 from repro.common import Array
 from repro.core import pq, pq_attention, windowed
+
+
+def as_lengths(length, b: int) -> Array:
+  """Normalize a scalar length or per-request (B,) lengths to (B,) int32."""
+  ln = jnp.asarray(length, jnp.int32)
+  if ln.ndim == 0:
+    return jnp.broadcast_to(ln, (b,))
+  return ln.reshape(b)
 
 
 class PQCacheConfig(NamedTuple):
@@ -76,29 +85,62 @@ def exact_cache_prefill(k: Array, v: Array, n_max: int) -> ExactLayerCache:
   return ExactLayerCache(k=jnp.pad(k, pad), v=jnp.pad(v, pad))
 
 
+def exact_insert_one(
+    k_c: Array,          # (H, N, D)
+    v_c: Array,
+    k_new: Array,        # (H, D)
+    v_new: Array,
+    length: Array,       # scalar int32: tokens already cached in this row
+) -> Tuple[Array, Array]:
+  """Insert one token at position `length` of a single request's exact store.
+
+  Shared by the free-function path below and the exact-family policies in
+  `core.cache_api` so the insertion layout has exactly one implementation.
+  """
+  k_c = jax.lax.dynamic_update_slice(
+      k_c, k_new[:, None, :].astype(k_c.dtype), (0, length, 0))
+  v_c = jax.lax.dynamic_update_slice(
+      v_c, v_new[:, None, :].astype(v_c.dtype), (0, length, 0))
+  return k_c, v_c
+
+
+def _exact_append_attend_one(
+    k_c: Array,          # (H, N, D)
+    v_c: Array,
+    q: Array,            # (Hq, D)
+    k_new: Array,        # (H, D)
+    v_new: Array,
+    length: Array,       # scalar int32: tokens already cached in this row
+    scale: float,
+) -> Tuple[Array, Array, Array]:
+  """One request's decode step; batching is a vmap over this (per-row length)."""
+  h, n_max, d = k_c.shape
+  hq = q.shape[0]
+  g = hq // h
+  k_c, v_c = exact_insert_one(k_c, v_c, k_new, v_new, length)
+  mask = jnp.arange(n_max) < (length + 1)
+
+  qg = q.reshape(h, g, d)
+  out = jax.vmap(
+      lambda qq, kk, vv: pq_attention.exact_decode_attention(qq, kk, vv, mask, scale)
+  )(qg, k_c, v_c)                                     # (H, g, D)
+  return out.reshape(hq, d), k_c, v_c
+
+
 def exact_cache_append_and_attend(
     cache: ExactLayerCache,
     q: Array,            # (B, Hq, D)
     k_new: Array,        # (B, H, D)
     v_new: Array,
-    length: Array,       # scalar int32: tokens already cached
+    length: Array,       # scalar int32 OR (B,) per-request lengths
     scale: float,
 ) -> Tuple[Array, ExactLayerCache]:
-  b, hq, d = q.shape
-  h = cache.k.shape[1]
-  g = hq // h
-  k_c = jax.lax.dynamic_update_slice(
-      cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, length, 0))
-  v_c = jax.lax.dynamic_update_slice(
-      cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, length, 0))
-  n_max = k_c.shape[2]
-  mask = jnp.arange(n_max) < (length + 1)
-
-  qg = q.reshape(b, h, g, d)
-  out = jax.vmap(jax.vmap(
-      lambda qq, kk, vv: pq_attention.exact_decode_attention(qq, kk, vv, mask, scale)
-  ))(qg, k_c, v_c)                                    # (B, H, g, D)
-  return out.reshape(b, hq, d), ExactLayerCache(k=k_c, v=v_c)
+  b = q.shape[0]
+  lengths = as_lengths(length, b)
+  out, k_c, v_c = jax.vmap(
+      functools.partial(_exact_append_attend_one, scale=scale)
+  )(cache.k, cache.v, q, k_new, v_new, lengths)
+  return out, ExactLayerCache(k=k_c, v=v_c)
 
 
 # ---------------------------------------------------------------------------
@@ -132,12 +174,73 @@ def pq_cache_init(
   )
 
 
+def _pq_prefill_one(
+    k: Array,            # (H, N, D)
+    v: Array,
+    weights: Array,      # (H, N)
+    length: Array,       # scalar int32: true prompt length (<= N)
+    cfg: PQCacheConfig,
+) -> PQLayerCache:
+  """Per-request PQ prefill with a dynamic valid length (right-padded inputs).
+
+  The layout invariant is the same as the static path: token p >= sink lives at
+  ring slot (p - sink) % recent; body offsets are positions [sink, length-recent).
+  Tokens beyond `length` (padding) are excluded from clustering via the body
+  mask and never become visible: the decode-side masks derive from `length`.
+  """
+  h, n, d = k.shape
+  s0, r, nb = cfg.sink, cfg.recent, cfg.body_capacity
+  assert n >= s0 + r, f"prefill capacity {n} < sink+recent {s0 + r}"
+  # static worst case (length == n): the mirror of the batched path's
+  # `body exceeds capacity` assert — without it, overflow tokens would be
+  # silently masked out of the body instead of raising
+  assert n - s0 - r <= nb, (
+      f"prefill capacity {n} can overflow body capacity {nb} (sink={s0}, "
+      f"recent={r})")
+
+  sink_k, sink_v = k[:, :s0], v[:, :s0]
+  # last `recent` valid tokens -> ring slots keyed by absolute position
+  start = jnp.maximum(length - r, 0)
+  rec_tok_k = jax.lax.dynamic_slice(k, (0, start, 0), (h, r, d))
+  rec_tok_v = jax.lax.dynamic_slice(v, (0, start, 0), (h, r, d))
+  slots = (jnp.arange(r) + start - s0) % r
+  recent_k = jnp.zeros((h, r, d), k.dtype).at[:, slots].set(rec_tok_k)
+  recent_v = jnp.zeros((h, r, d), v.dtype).at[:, slots].set(rec_tok_v)
+
+  # body candidates occupy positions [s0, s0+nb); clustering masked to the
+  # true body [s0, length - r)
+  pad = max(s0 + nb - n, 0)
+  kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))[:, s0:s0 + nb]
+  vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))[:, s0:s0 + nb]
+  wp = jnp.pad(weights, ((0, 0), (0, pad)))[:, s0:s0 + nb]
+  body_n = jnp.clip(length - s0 - r, 0, nb)
+  mask = jnp.arange(nb) < body_n
+
+  def per_head(kk, vv, ww):
+    k_cb, k_idx = windowed.windowed_build_codebooks(
+        kk, ww, cfg.pq, cfg.n_windows, mask=mask)
+    v_cb, v_idx = windowed.windowed_build_codebooks(
+        vv, ww, cfg.pq, cfg.n_windows, mask=mask)
+    return k_cb, k_idx, v_cb, v_idx
+
+  k_cb, k_idx, v_cb, v_idx = jax.vmap(per_head)(kp, vp, wp)
+  idt = index_storage_dtype(cfg)
+  return PQLayerCache(
+      sink_k=sink_k, sink_v=sink_v,
+      recent_k=recent_k, recent_v=recent_v,
+      key_codebooks=k_cb.astype(jnp.bfloat16),
+      value_codebooks=v_cb.astype(jnp.bfloat16),
+      key_indices=k_idx.astype(idt),
+      value_indices=v_idx.astype(idt),
+  )
+
+
 def pq_cache_prefill(
     k: Array,            # (B, H, N, D)
     v: Array,
     weights: Array,      # (B, H, N) importance weights (Eq. 1)
     cfg: PQCacheConfig,
-    length: Optional[Array] = None,
+    length: Optional[Array] = None,   # (B,) per-request lengths (None -> N)
 ) -> PQLayerCache:
   """Compress a prefilled KV into the PQ cache (paper Fig. 3a prefill step 3).
 
@@ -147,6 +250,9 @@ def pq_cache_prefill(
   fuse into the prefill step.
   """
   b, h, n, d = k.shape
+  if length is not None:
+    return jax.vmap(functools.partial(_pq_prefill_one, cfg=cfg))(
+        k, v, weights, as_lengths(length, b))
   s0, r, nb = cfg.sink, cfg.recent, cfg.body_capacity
   assert n >= s0 + r, f"prefill length {n} < sink+recent {s0 + r}"
   body_n = n - s0 - r
@@ -192,21 +298,17 @@ def pq_cache_prefill(
   )
 
 
-def pq_cache_append_and_attend(
-    cache: PQLayerCache,
-    q: Array,            # (B, Hq, D)
-    k_new: Array,        # (B, H, D)
+def _pq_append_attend_one(
+    cache: PQLayerCache,  # leaves without the batch dim: (H, ...)
+    q: Array,             # (Hq, D)
+    k_new: Array,         # (H, D)
     v_new: Array,
-    length: Array,       # scalar int32 tokens already cached (incl. prefill)
+    length: Array,        # scalar int32 tokens already cached (incl. prefill)
     cfg: PQCacheConfig,
     scale: float,
 ) -> Tuple[Array, PQLayerCache]:
-  """One decode step: insert token, evict->encode, attend on compressed context.
-
-  Mirrors paper Fig. 3a decode: (3) append indices, (4) PQ attention.
-  """
-  b, hq, d = q.shape
-  h = cache.recent_k.shape[1]
+  hq, d = q.shape
+  h = cache.recent_k.shape[0]
   g = hq // h
   s0, r, nb = cfg.sink, cfg.recent, cfg.body_capacity
   pos = length                                     # position of the new token
@@ -221,21 +323,21 @@ def pq_cache_append_and_attend(
   win_id = jnp.clip(ev // max(cfg.window_len, 1), 0, cfg.n_windows - 1)
 
   old_k = jax.lax.dynamic_slice(
-      cache.recent_k, (0, 0, slot, 0), (b, h, 1, d))[:, :, 0]   # (B,H,D)
+      cache.recent_k, (0, slot, 0), (h, 1, d))[:, 0]            # (H, D)
   old_v = jax.lax.dynamic_slice(
-      cache.recent_v, (0, 0, slot, 0), (b, h, 1, d))[:, :, 0]
+      cache.recent_v, (0, slot, 0), (h, 1, d))[:, 0]
 
   def encode_one(x, cbs):
     # x (D,), cbs (nW, m, K, dsub)
     return windowed.windowed_encode(x[None], cbs, win_id[None])[0]  # (m,)
-  k_idx_new = jax.vmap(jax.vmap(encode_one))(
-      old_k.astype(jnp.float32), cache.key_codebooks)          # (B,H,m)
-  v_idx_new = jax.vmap(jax.vmap(encode_one))(
+  k_idx_new = jax.vmap(encode_one)(
+      old_k.astype(jnp.float32), cache.key_codebooks)          # (H, m)
+  v_idx_new = jax.vmap(encode_one)(
       old_v.astype(jnp.float32), cache.value_codebooks)
 
   def maybe_scatter(idx_store, idx_new):
     upd = jax.lax.dynamic_update_slice(
-        idx_store, idx_new[:, :, None, :].astype(idx_store.dtype), (0, 0, ev, 0))
+        idx_store, idx_new[:, None, :].astype(idx_store.dtype), (0, ev, 0))
     return jnp.where(do_evict, upd, idx_store)
   key_indices = maybe_scatter(cache.key_indices, k_idx_new)
   value_indices = maybe_scatter(cache.value_indices, v_idx_new)
@@ -244,11 +346,11 @@ def pq_cache_append_and_attend(
   write_slot = jnp.where(in_sink, jnp.clip(pos, 0, s0 - 1), slot)
 
   def insert(buf_sink, buf_rec, val):
-    val = val[:, :, None, :]
+    val = val[:, None, :]
     new_sink = jax.lax.dynamic_update_slice(
-        buf_sink, val.astype(buf_sink.dtype), (0, 0, jnp.clip(pos, 0, s0 - 1), 0))
+        buf_sink, val.astype(buf_sink.dtype), (0, jnp.clip(pos, 0, s0 - 1), 0))
     new_rec = jax.lax.dynamic_update_slice(
-        buf_rec, val.astype(buf_rec.dtype), (0, 0, write_slot, 0))
+        buf_rec, val.astype(buf_rec.dtype), (0, write_slot, 0))
     return (jnp.where(in_sink, new_sink, buf_sink),
             jnp.where(in_sink, buf_rec, new_rec))
   sink_k, recent_k = insert(cache.sink_k, cache.recent_k, k_new)
@@ -263,7 +365,7 @@ def pq_cache_append_and_attend(
   body_mask = jnp.arange(nb) < body_len
 
   # --- 4. PQ attention on compressed context -------------------------------
-  qg = q.reshape(b, h, g, d)
+  qg = q.reshape(h, g, d)
 
   def attend(qq, sk, sv, rk, rv, kcb, vcb, kix, vix):
     seg = pq_attention.PQAttnSegments(
@@ -274,16 +376,38 @@ def pq_cache_append_and_attend(
         recent_k=rk, recent_v=rv, recent_mask=rec_mask)
     return pq_attention.pq_decode_attention(qq, seg, scale)
 
-  out = jax.vmap(jax.vmap(attend))(
+  out = jax.vmap(attend)(
       qg, sink_k, sink_v, recent_k, recent_v,
       cache.key_codebooks, cache.value_codebooks,
-      key_indices, value_indices)                  # (B, H, g, D)
+      key_indices, value_indices)                  # (H, g, D)
 
   new_cache = PQLayerCache(
       sink_k=sink_k, sink_v=sink_v, recent_k=recent_k, recent_v=recent_v,
       key_codebooks=cache.key_codebooks, value_codebooks=cache.value_codebooks,
       key_indices=key_indices, value_indices=value_indices)
-  return out.reshape(b, hq, d), new_cache
+  return out.reshape(hq, d), new_cache
+
+
+def pq_cache_append_and_attend(
+    cache: PQLayerCache,
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,       # scalar int32 OR (B,) per-request lengths
+    cfg: PQCacheConfig,
+    scale: float,
+) -> Tuple[Array, PQLayerCache]:
+  """One decode step: insert token, evict->encode, attend on compressed context.
+
+  Mirrors paper Fig. 3a decode: (3) append indices, (4) PQ attention.  Batched
+  as a vmap over the per-request core so each row may sit at a different
+  position in its ring/body (continuous batching).
+  """
+  b = q.shape[0]
+  lengths = as_lengths(length, b)
+  return jax.vmap(
+      functools.partial(_pq_append_attend_one, cfg=cfg, scale=scale)
+  )(cache, q, k_new, v_new, lengths)
 
 
 def pq_cache_bytes(cfg: PQCacheConfig, b: int, h: int, d: int) -> dict:

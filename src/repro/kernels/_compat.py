@@ -1,0 +1,10 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+One place to touch when the jax floor moves: jax<0.5 names the TPU
+compiler-params class `TPUCompilerParams`; newer releases call it
+`CompilerParams`.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

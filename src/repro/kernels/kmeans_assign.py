@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _assign_kernel(x_ref, c_ref, out_ref, *, blk: int):
   """x_ref (1, blk, dsub); c_ref (1, K, dsub); out_ref (1, blk) int32."""
@@ -54,7 +56,7 @@ def kmeans_assign_kernel(
       ],
       out_specs=pl.BlockSpec((1, blk), lambda mi, j: (mi, j)),
       out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-      compiler_params=pltpu.CompilerParams(
+      compiler_params=_CompilerParams(
           dimension_semantics=("parallel", "arbitrary"),
       ),
       interpret=interpret,

@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -183,7 +185,7 @@ def pq_decode_attention_kernel(
           jax.ShapeDtypeStruct((bhn, g, d), jnp.float32),
           jax.ShapeDtypeStruct((bhn, 2, g), jnp.float32),
       ],
-      compiler_params=pltpu.CompilerParams(
+      compiler_params=_CompilerParams(
           dimension_semantics=("arbitrary", "arbitrary"),
       ),
       interpret=interpret,

@@ -1,0 +1,219 @@
+"""Continuous-batching serve engine on top of the unified CachePolicy API.
+
+The fixed-batch demo loop in `launch.serve` decodes B requests in lockstep:
+all prompts share one length and all finish together.  Real serving (the
+ROADMAP north star; LoL-PIM/PIMphony-style long-context PIM serving) needs
+*continuous batching*: a request queue, slot-based admit/finish between
+jitted decode steps, and per-slot length tracking.  That is what this
+module provides:
+
+    engine = ServeEngine(cfg, context_len=256, max_batch=4)
+    h1 = engine.submit([12, 7, 99, ...], max_new_tokens=16)
+    h2 = engine.submit(prompt2, max_new_tokens=4)       # any prompt length
+    while engine.has_work:
+      for done in engine.step():
+        print(done.rid, done.tokens)
+
+Mechanics
+---------
+- One jitted batch=1 prefill (prompts right-padded to `prompt_capacity`),
+  one jitted batch=`max_batch` decode step, and one jitted donated
+  slot-insert — three compiles total, regardless of how many requests
+  stream through.
+- The decode cache is a single batched tree (leaves (L, B, ...)); admitting
+  a request writes its prefilled slot-cache into batch row `slot`, so
+  requests at different positions coexist in one `decode_step` thanks to the
+  per-request `lengths` vector threaded through the CachePolicy API.
+- Greedy sampling; inactive slots decode garbage that is simply discarded
+  (their rows are overwritten at the next admit).
+
+Families with sequence-recurrent prefill state (ssm/hybrid) or extra modal
+streams (vlm/audio) are not admitted — right-padded prefill would corrupt
+their recurrent state.  Dense and MoE architectures are supported.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class RequestHandle:
+  """One submitted generation request; `tokens` fills in as it decodes."""
+  rid: int
+  prompt: np.ndarray                 # (prompt_len,) int32
+  max_new_tokens: int
+  tokens: List[int] = dataclasses.field(default_factory=list)
+  done: bool = False
+  slot: Optional[int] = None
+  admitted_step: Optional[int] = None
+  finished_step: Optional[int] = None
+
+  @property
+  def prompt_len(self) -> int:
+    return int(self.prompt.shape[0])
+
+
+class ServeEngine:
+  """Slot-based continuous batching over `Model.prefill` / `Model.decode_step`."""
+
+  def __init__(self, cfg: ModelConfig, *, context_len: int = 256,
+               max_batch: int = 4, prompt_capacity: Optional[int] = None,
+               params: Any = None, seed: int = 0):
+    if cfg.family not in ("dense", "moe"):
+      raise ValueError(
+          f"ServeEngine supports dense/moe attention families, got "
+          f"{cfg.family!r} (recurrent prefill state cannot be right-padded)")
+    if cfg.frontend != "none":
+      raise ValueError("ServeEngine does not manage modal input streams")
+    self.cfg = cfg
+    self.context_len = context_len
+    self.max_batch = max_batch
+    self.prompt_capacity = prompt_capacity or max(context_len // 2,
+                                                  cfg.pq_sink + cfg.pq_recent)
+    if not self.prompt_capacity < context_len:
+      raise ValueError(
+          f"prompt_capacity {self.prompt_capacity} must be < context_len "
+          f"{context_len}")
+    if (cfg.resolved_cache_policy() == "pq"
+        and self.prompt_capacity < cfg.pq_sink + cfg.pq_recent):
+      raise ValueError(
+          f"pq policy needs prompt_capacity >= sink+recent "
+          f"({cfg.pq_sink}+{cfg.pq_recent}), got {self.prompt_capacity}")
+    self.model = Model(cfg, context_len=context_len)
+
+    if params is None:
+      params = jax.jit(self.model.init)(jax.random.PRNGKey(seed))
+    self.params = params
+    self._prefill = jax.jit(
+        lambda p, t, ln: self.model.prefill(p, t, None, lengths=ln))
+    # caches are donated on both hot paths: decode updates in place instead
+    # of reallocating the full (L, B, context) KV tree every token
+    self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+    # slot is a traced operand (one compile covers every slot) and the batched
+    # cache is donated, so admission updates buffers in place instead of
+    # copying the whole tree per admit
+    self._insert = jax.jit(
+        lambda cache, c1, slot: jax.tree_util.tree_map(
+            lambda c, x: jax.lax.dynamic_update_slice_in_dim(
+                c, x.astype(c.dtype), slot, axis=1), cache, c1),
+        donate_argnums=(0,))
+
+    self.cache = self.model.init_cache(max_batch)
+    self._lengths = np.zeros((max_batch,), np.int32)
+    self._cur = np.zeros((max_batch,), np.int32)
+    self._slots: List[Optional[RequestHandle]] = [None] * max_batch
+    self._queue: collections.deque = collections.deque()
+    self._next_rid = 0
+    self._step_no = 0
+
+  # -------------------------------------------------------------------------
+  # public API
+  # -------------------------------------------------------------------------
+
+  def submit(self, prompt: Sequence[int], max_new_tokens: int = 16
+             ) -> RequestHandle:
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    if not 0 < prompt.shape[0] <= self.prompt_capacity:
+      raise ValueError(
+          f"prompt length {prompt.shape[0]} not in (0, {self.prompt_capacity}]")
+    if max_new_tokens < 1:
+      raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+    if prompt.shape[0] + max_new_tokens > self.context_len:
+      raise ValueError("prompt + max_new_tokens exceeds context capacity")
+    req = RequestHandle(rid=self._next_rid, prompt=prompt,
+                        max_new_tokens=max_new_tokens)
+    self._next_rid += 1
+    self._queue.append(req)
+    return req
+
+  @property
+  def has_work(self) -> bool:
+    return bool(self._queue) or any(r is not None for r in self._slots)
+
+  @property
+  def active_count(self) -> int:
+    return sum(r is not None for r in self._slots)
+
+  def step(self) -> List[RequestHandle]:
+    """Admit queued requests into free slots, run one batched decode step,
+    and return the requests that finished this step."""
+    finished = self._admit()
+    if self.active_count == 0:
+      self._step_no += 1
+      return finished
+
+    logits, self.cache = self._decode(
+        self.params, jnp.asarray(self._cur), self.cache,
+        jnp.asarray(self._lengths))
+    next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+    for slot, req in enumerate(self._slots):
+      if req is None:
+        continue
+      # the token we just fed (cur) is now cached at position lengths[slot]
+      self._lengths[slot] += 1
+      tok = int(next_tok[slot])
+      req.tokens.append(tok)
+      self._cur[slot] = tok
+      if (len(req.tokens) >= req.max_new_tokens
+          or int(self._lengths[slot]) + 1 >= self.context_len):
+        finished.append(self._finish(slot, req))
+    self._step_no += 1
+    return finished
+
+  def run_to_completion(self, max_steps: int = 10_000) -> List[RequestHandle]:
+    """Drive `step()` until queue and slots drain; returns finish order."""
+    done: List[RequestHandle] = []
+    steps = 0
+    while self.has_work:
+      done.extend(self.step())
+      steps += 1
+      if steps > max_steps:
+        raise RuntimeError(f"engine did not drain within {max_steps} steps")
+    return done
+
+  # -------------------------------------------------------------------------
+  # internals
+  # -------------------------------------------------------------------------
+
+  def _admit(self) -> List[RequestHandle]:
+    """Prefill queued requests into free slots (one compile: fixed pad)."""
+    finished = []
+    for slot in range(self.max_batch):
+      if self._slots[slot] is not None or not self._queue:
+        continue
+      req = self._queue.popleft()
+      padded = np.zeros((1, self.prompt_capacity), np.int32)
+      padded[0, :req.prompt_len] = req.prompt
+      logits, slot_cache = self._prefill(
+          self.params, jnp.asarray(padded),
+          jnp.asarray([req.prompt_len], jnp.int32))
+      self.cache = self._insert(self.cache, slot_cache,
+                                jnp.asarray(slot, jnp.int32))
+      first = int(np.asarray(jnp.argmax(logits[0], axis=-1)))
+      req.slot = slot
+      req.admitted_step = self._step_no
+      req.tokens.append(first)
+      self._slots[slot] = req
+      self._lengths[slot] = req.prompt_len
+      self._cur[slot] = first
+      if len(req.tokens) >= req.max_new_tokens:
+        finished.append(self._finish(slot, req))
+    return finished
+
+  def _finish(self, slot: int, req: RequestHandle) -> RequestHandle:
+    req.done = True
+    req.finished_step = self._step_no
+    self._slots[slot] = None
+    self._lengths[slot] = 0
+    self._cur[slot] = 0
+    return req

@@ -1,25 +1,33 @@
-"""End-to-end serving driver: batched prefill -> PQ compression -> decode loop.
+"""End-to-end serving driver: batched prefill -> cache policy -> decode loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
-      --prompt-len 128 --gen 32 --batch 4
+      --prompt-len 128 --gen 32 --batch 4 --cache-policy pq
 
-This exercises the full AQPIM inference path (paper Fig. 3a): prefill computes
-exact attention AND builds the compressed cache (importance-weighted windowed
-clustering, hidden behind prefill); the decode loop appends tokens by PQ-encoding
-ring-buffer evictions and attends directly on compressed data.
+The KV-cache method is selected by registry key (`--cache-policy`): `exact`,
+`pq` (AQPIM, default), `skvq`, `snapkv`, `streamingllm`, `pqcache` — the
+paper's Fig. 10 sweep surface.  With `pq` this exercises the full AQPIM
+inference path (paper Fig. 3a): prefill computes exact attention AND builds
+the compressed cache (importance-weighted windowed clustering, hidden behind
+prefill); the decode loop appends tokens by PQ-encoding ring-buffer
+evictions and attends directly on compressed data.
+
+`--engine` runs the same architecture through the continuous-batching
+`ServeEngine` instead: staggered prompt lengths admitted into one batch,
+finishing at different steps.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.common.timing import Stopwatch
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
+from repro.core import cache_registry
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh
 from repro.parallel import sharding as shd
@@ -32,13 +40,18 @@ class ServeRun:
   batch: int = 4
   prompt_len: int = 128
   gen: int = 32
-  pq: bool = True
+  cache_policy: str = "pq"
+  pq: bool = True                  # legacy knob: False downgrades the default
+                                   # "pq" policy to "exact" (no effect on other
+                                   # explicitly chosen policies)
+  warmup: bool = True              # compile outside the timed sections
   seed: int = 0
   greedy: bool = True
   mesh: Any = None
 
   def run(self):
     cfg = get_arch(self.arch, reduced=self.reduced)
+    cfg = dataclasses.replace(cfg, cache_policy=self.cache_policy)
     if not self.pq:
       cfg = dataclasses.replace(cfg, pq_enabled=False)
     context = self.prompt_len + self.gen
@@ -61,45 +74,77 @@ class ServeRun:
                         cfg.dtype)
 
     with mesh:
-      t0 = time.monotonic()
       prefill = jax.jit(model.prefill)
       m_pref = modal[:, :self.prompt_len] if (
           modal is not None and cfg.frontend == "audio_frames") else modal
-      logits, cache = prefill(params, prompts, m_pref)
-      logits.block_until_ready()
-      t_prefill = time.monotonic() - t0
-
-      # pad recurrent/kv caches built at prompt_len up to full context capacity
-      cache = _pad_cache_to(model, cache, self.batch)
-
       step = jax.jit(model.decode_step)
+      if self.warmup:
+        # trace+compile outside the stopwatches so timings measure execution
+        logits_w, cache_w = prefill(params, prompts, m_pref)
+        jax.block_until_ready(step(
+            params, jnp.argmax(logits_w, -1).astype(jnp.int32), cache_w,
+            jnp.full((self.batch,), self.prompt_len, jnp.int32),
+            modal[:, :1] if modal is not None
+            and cfg.frontend == "audio_frames" else modal))
+
+      with Stopwatch() as sw_prefill:
+        logits, cache = prefill(params, prompts, m_pref)
+        sw_prefill.wait_for(logits)
+
       tokens = [jnp.argmax(logits, -1).astype(jnp.int32)]
-      t1 = time.monotonic()
-      for i in range(self.gen):
-        length = jnp.asarray(self.prompt_len + i, jnp.int32)
-        m_step = (modal[:, self.prompt_len + i:self.prompt_len + i + 1]
-                  if modal is not None and cfg.frontend == "audio_frames"
-                  else modal)
-        logits, cache = step(params, tokens[-1], cache, length, m_step)
-        tokens.append(jnp.argmax(logits, -1).astype(jnp.int32))
-      jax.block_until_ready(tokens[-1])
-      t_decode = time.monotonic() - t1
+      with Stopwatch() as sw_decode:
+        for i in range(self.gen):
+          lengths = jnp.full((self.batch,), self.prompt_len + i, jnp.int32)
+          m_step = (modal[:, self.prompt_len + i:self.prompt_len + i + 1]
+                    if modal is not None and cfg.frontend == "audio_frames"
+                    else modal)
+          logits, cache = step(params, tokens[-1], cache, lengths, m_step)
+          tokens.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        sw_decode.wait_for(tokens[-1])
 
     out = jnp.stack(tokens[:-1], axis=1)
+    policy_name = cfg.resolved_cache_policy() if not cfg.attn_free else "none"
     return {
         "tokens": out,
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "tok_per_s": self.batch * self.gen / max(t_decode, 1e-9),
-        "pq": cfg.pq_enabled and cfg.supports_pq,
+        "prefill_s": sw_prefill.seconds,
+        "decode_s": sw_decode.seconds,
+        "tok_per_s": self.batch * self.gen / max(sw_decode.seconds, 1e-9),
+        "cache_policy": policy_name,
+        "pq": policy_name == "pq",
     }
 
 
-def _pad_cache_to(model, cache, batch):
-  """Prefill builds caches at context capacity already (PQ) — exact caches are
-  padded to the model's context_len by exact_cache_prefill; recurrent states
-  carry no length.  Nothing to do today; hook kept for ring-resize variants."""
-  return cache
+def run_engine_demo(args) -> None:
+  """Continuous batching: mixed prompt lengths, staggered finishes."""
+  from repro.launch.engine import ServeEngine
+  cfg = get_arch(args.arch, reduced=args.reduced)
+  cfg = dataclasses.replace(cfg, cache_policy=args.cache_policy)
+  context = args.prompt_len + args.gen
+  engine = ServeEngine(cfg, context_len=context, max_batch=args.batch,
+                       prompt_capacity=args.prompt_len)
+  key = jax.random.PRNGKey(0)
+  # drain one throwaway request so the three jit compiles land outside the
+  # timed section (same reason ServeRun has warmup) — it must ask for >= 2
+  # tokens, else it finishes at admission and never compiles the decode step
+  warm_len = min(8, args.prompt_len, max(1, context - 2))
+  engine.submit([1] * warm_len, max_new_tokens=min(2, context - warm_len))
+  engine.run_to_completion()
+  floor = min(8, args.prompt_len)
+  rng_lens = [max(floor, args.prompt_len - 17 * i)
+              for i in range(args.batch + 2)]
+  max_new = max(1, min(args.gen, max(2, args.gen // 2)))
+  for i, ln in enumerate(rng_lens):
+    prompt = jax.random.randint(jax.random.fold_in(key, i), (ln,), 0,
+                                cfg.vocab_size)
+    engine.submit(list(map(int, prompt)), max_new_tokens=max_new)
+  with Stopwatch() as sw:
+    done = engine.run_to_completion()
+  n_tok = sum(len(r.tokens) for r in done)
+  print(f"engine: {len(done)} requests, {n_tok} tokens in {sw.seconds:.2f}s "
+        f"({n_tok / max(sw.seconds, 1e-9):.1f} tok/s)")
+  for r in done:
+    print(f"  rid={r.rid} prompt_len={r.prompt_len} admitted@{r.admitted_step}"
+          f" finished@{r.finished_step} tokens={r.tokens[:8]}")
 
 
 def main():
@@ -109,13 +154,29 @@ def main():
   ap.add_argument("--batch", type=int, default=4)
   ap.add_argument("--prompt-len", type=int, default=128)
   ap.add_argument("--gen", type=int, default=32)
-  ap.add_argument("--no-pq", action="store_true")
+  ap.add_argument("--cache-policy", default="pq",
+                  choices=cache_registry.names())
+  ap.add_argument("--no-pq", action="store_true",
+                  help="legacy alias for --cache-policy exact")
+  ap.add_argument("--engine", action="store_true",
+                  help="run the continuous-batching ServeEngine demo")
   args = ap.parse_args()
+  # --no-pq is an alias for --cache-policy exact; refuse a conflicting mix
+  # rather than silently measuring the wrong policy
+  if args.no_pq:
+    if args.cache_policy not in ("pq", "exact"):
+      ap.error(f"--no-pq conflicts with --cache-policy {args.cache_policy}")
+    args.cache_policy = "exact"
+
+  if args.engine:
+    run_engine_demo(args)
+    return
 
   run = ServeRun(arch=args.arch, reduced=args.reduced, batch=args.batch,
-                 prompt_len=args.prompt_len, gen=args.gen, pq=not args.no_pq)
+                 prompt_len=args.prompt_len, gen=args.gen,
+                 cache_policy=args.cache_policy)
   res = run.run()
-  print(f"arch={args.arch} pq={res['pq']} "
+  print(f"arch={args.arch} policy={res['cache_policy']} "
         f"prefill={res['prefill_s']:.2f}s decode={res['decode_s']:.2f}s "
         f"({res['tok_per_s']:.1f} tok/s)")
   print("sample tokens:", res["tokens"][0, :16].tolist())

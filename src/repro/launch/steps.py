@@ -29,7 +29,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig,
 
   train:   {tokens (B,S) i32, targets (B,S) i32[, modal]}
   prefill: {tokens (B,S) i32[, modal]}
-  decode:  {token (B,) i32, cache <tree>, length () i32[, modal]}
+  decode:  {token (B,) i32, cache <tree>, length (B,) i32[, modal]}
+           (length is per-request so one decode batch can mix positions —
+            the continuous-batching substrate)
   """
   b, s = shape.global_batch, shape.seq_len
   i32 = jnp.int32
@@ -60,7 +62,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig,
   model = model or Model(cfg, context_len=s)
   cache = jax.eval_shape(lambda: model.init_cache(b))
   specs = {"token": sds((b,), i32), "cache": cache,
-           "length": sds((), i32)}
+           "length": sds((b,), i32)}
   m = modal_spec(1)
   if m is not None:
     specs["modal"] = m
@@ -160,7 +162,7 @@ def _batch_specs_tree(cfg: ModelConfig, mesh: Mesh, specs: Dict[str, Any],
     elif k == "token":
       out[k] = P(batch_ax(v.shape[0]))
     elif k == "length":
-      out[k] = P()
+      out[k] = P(batch_ax(v.shape[0]))
     elif k == "cache":
       batch = jax.tree_util.tree_leaves(v)[0].shape[1]
       out[k] = shd.cache_pspecs(v, mesh, batch, shard_sequence=seq_shard)

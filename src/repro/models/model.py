@@ -30,7 +30,8 @@ class Model:
   def __init__(self, cfg: ModelConfig, context_len: Optional[int] = None):
     self.cfg = cfg
     self.context_len = context_len or cfg.decode_cache_len
-    self.pq_cfg = cfg.pq_cache_config(self.context_len)
+    # the unified KV-cache policy (core.cache_api); None for attn-free families
+    self.cache_policy = cfg.make_cache_policy(self.context_len)
 
   # -------------------------------------------------------------------------
   # init
@@ -166,14 +167,23 @@ class Model:
   # -------------------------------------------------------------------------
   # prefill
   # -------------------------------------------------------------------------
-  def prefill(self, params, tokens: Array, modal: Optional[Array] = None
-              ) -> Tuple[Array, Any]:
+  def prefill(self, params, tokens: Array, modal: Optional[Array] = None,
+              lengths: Optional[Array] = None) -> Tuple[Array, Any]:
     """Full-context forward that also builds every layer's cache.
 
     PQ codebook generation happens layer by layer inside the scan — the paper's
     "layer-wise codebook generation minimizes peak memory" (§III-B).
+
+    `lengths` (B,) marks each request's true prompt length when `tokens` is a
+    right-padded mixed batch; logits are then taken at each row's last valid
+    token.  None (default) means every row spans the full sequence.
     """
     cfg = self.cfg
+    if lengths is not None and (cfg.family == "ssm" or cfg.hybrid):
+      raise ValueError(
+          "lengths-aware prefill is unsupported for recurrent state "
+          "(ssm/hybrid families): the carried state would absorb the "
+          "right-padding tokens")
     x = self._embed(params, tokens, modal)
     positions = jnp.arange(tokens.shape[1])[None, :]
 
@@ -186,25 +196,33 @@ class Model:
     elif cfg.family == "vlm":
       def body(y, lp):
         y, c = tfm.vlm_group_prefill(lp, y, modal.astype(y.dtype), positions,
-                                     cfg, self.pq_cfg)
+                                     cfg, self.cache_policy, lengths)
         return y, c
       x, caches = jax.lax.scan(body, x, params["layers"])
     else:
       def body(y, lp):
-        y, c = tfm.dense_block_prefill(lp, y, positions, cfg, self.pq_cfg)
+        y, c = tfm.dense_block_prefill(lp, y, positions, cfg,
+                                       self.cache_policy, lengths)
         return y, c
       x, caches = jax.lax.scan(body, x, params["layers"])
 
-    logits = self._logits(params, x[:, -1:])
+    if lengths is None:
+      x_last = x[:, -1:]
+    else:
+      idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+      x_last = x[jnp.arange(x.shape[0]), idx][:, None]
+    logits = self._logits(params, x_last)
     return logits[:, 0], caches
 
   # -------------------------------------------------------------------------
   # decode
   # -------------------------------------------------------------------------
-  def decode_step(self, params, token: Array, caches, length: Array,
+  def decode_step(self, params, token: Array, caches, lengths: Array,
                   modal: Optional[Array] = None) -> Tuple[Array, Any]:
-    """token (B,) int32; caches leading dim = layer stack; length = scalar."""
+    """token (B,) int32; caches leading dim = layer stack; lengths (B,) int32
+    per-request cached-token counts (a scalar broadcasts)."""
     cfg = self.cfg
+    lengths = kvc.as_lengths(lengths, token.shape[0])
     x = self._embed(params, token[:, None], modal if cfg.frontend == "none"
                     else None)
     if cfg.frontend == "audio_frames" and modal is not None:
@@ -219,14 +237,14 @@ class Model:
     elif cfg.family == "vlm":
       def body(y, inp):
         lp, c = inp
-        y, c = tfm.vlm_group_step(lp, y, modal.astype(y.dtype), c, length,
-                                  cfg, self.pq_cfg)
+        y, c = tfm.vlm_group_step(lp, y, modal.astype(y.dtype), c, lengths,
+                                  cfg, self.cache_policy)
         return y, c
       x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
     else:
       def body(y, inp):
         lp, c = inp
-        y, c = tfm.dense_block_step(lp, y, c, length, cfg, self.pq_cfg)
+        y, c = tfm.dense_block_step(lp, y, c, lengths, cfg, self.cache_policy)
         return y, c
       x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
 
@@ -243,11 +261,7 @@ class Model:
                else cfg.n_layers // cfg.cross_attn_period)
 
     def one_layer_kv():
-      if self.pq_cfg is not None:
-        return kvc.pq_cache_init(batch, cfg.n_kv_heads, cfg.head_dim,
-                                 self.pq_cfg, cfg.dtype)
-      return kvc.exact_cache_init(batch, cfg.n_kv_heads,
-                                  self.context_len, cfg.head_dim, cfg.dtype)
+      return self.cache_policy.init(batch, cfg.n_kv_heads, cfg.head_dim)
 
     def stack(tree, n):
       return jax.tree_util.tree_map(

@@ -32,14 +32,16 @@ from repro.models import layers, moe as moe_mod, rwkv6, ssm
 # ---------------------------------------------------------------------------
 
 def _attn_prefill(
-    p: dict, x: Array, positions: Array, cfg, pq_cache_cfg
+    p: dict, x: Array, positions: Array, cfg, policy, lengths=None
 ) -> Tuple[Array, Any]:
   """Run attention over the full sequence AND build this layer's KV cache.
 
-  If PQ is enabled this is where the paper's in-memory clustering runs: the
-  importance weights (Eq. 1) come from the same q/k, and the windowed weighted
-  k-means compresses the body — layer by layer, exactly the paper's
-  "layer-wise codebook generation" that bounds peak memory.
+  `policy` is a `repro.core.cache_api.CachePolicy`; for the PQ policy this is
+  where the paper's in-memory clustering runs: the importance weights (Eq. 1)
+  come from the same q/k, and the windowed weighted k-means compresses the
+  body — layer by layer, exactly the paper's "layer-wise codebook generation"
+  that bounds peak memory.  `lengths` (B,) marks true prompt lengths for
+  right-padded mixed batches (None -> full sequence).
   """
   scale = cfg.head_dim ** -0.5
   q, k, v = layers.attention_qkv(p, x, positions, cfg.rope_theta)
@@ -47,43 +49,42 @@ def _attn_prefill(
                                   blk_q=cfg.attn_block, blk_k=cfg.attn_block)
   out = layers.attention_out(p, attn)
 
-  if pq_cache_cfg is None:
-    n_max = cfg.decode_cache_len
-    cache = kvc.exact_cache_prefill(k, v, n_max)
-  else:
+  w = None
+  if policy.needs_weights:
     # Eq. 1 weights per (batch, kv head): queries of the kv-group, averaged.
     b, hq, s, hd = q.shape
     hkv = k.shape[1]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, s, hd)[:, :, 0]           # lead query head / group
-    w = jax.vmap(jax.vmap(
-        lambda qq, kk: imp.attention_importance_weights(
-            qq, kk, scale, t=pq_cache_cfg.recent,
-            chunk=min(cfg.attn_block, s))))(qg, k)       # (B, Hkv, S)
-    cache = kvc.pq_cache_prefill(k, v, w, pq_cache_cfg)
+    t = policy.spec.recent
+    chunk = min(cfg.attn_block, s)
+    if lengths is None:
+      w = jax.vmap(jax.vmap(
+          lambda qq, kk: imp.attention_importance_weights(
+              qq, kk, scale, t=t, chunk=chunk)))(qg, k)  # (B, Hkv, S)
+    else:
+      w = jax.vmap(lambda qb, kb, ln: jax.vmap(
+          lambda qq, kk: imp.attention_importance_weights(
+              qq, kk, scale, t=t, chunk=chunk, length=ln))(qb, kb)
+      )(qg, k, lengths)
+  cache = policy.prefill(k, v, w, lengths)
   return out, cache
 
 
 def _attn_step(
-    p: dict, x: Array, cache, length: Array, cfg, pq_cache_cfg
+    p: dict, x: Array, cache, lengths: Array, cfg, policy
 ) -> Tuple[Array, Any]:
-  """Single-token attention against the cache.  x (B, 1, D)."""
-  scale = cfg.head_dim ** -0.5
-  pos = jnp.full((x.shape[0], 1), length, jnp.int32)
+  """Single-token attention against the cache.  x (B, 1, D), lengths (B,)."""
+  lengths = kvc.as_lengths(lengths, x.shape[0])
+  pos = lengths[:, None]                                 # (B, 1) RoPE positions
   q = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wq"], x.dtype))
   k = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wk"], x.dtype))
   v = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wv"], x.dtype))
   q = layers.apply_rope(q, pos, cfg.rope_theta)[:, 0]    # (B, H, hd)
   k = layers.apply_rope(k, pos, cfg.rope_theta)[:, 0]
   v = v[:, 0]
-  q = jnp.swapaxes(q, 0, 1) if False else q             # (B, H, hd)
 
-  if pq_cache_cfg is None:
-    attn, new_cache = kvc.exact_cache_append_and_attend(
-        cache, q, k, v, length, scale)
-  else:
-    attn, new_cache = kvc.pq_cache_append_and_attend(
-        cache, q, k, v, length, pq_cache_cfg, scale)
+  attn, new_cache = policy.append_and_attend(cache, q, k, v, lengths)
   out = jnp.einsum("bhk,hkd->bd", attn.astype(x.dtype),
                    layers.wv(p["wo"], x.dtype))
   return out[:, None, :], new_cache
@@ -147,9 +148,9 @@ def dense_block_forward(p: dict, x: Array, positions: Array, cfg
 
 
 def dense_block_prefill(p: dict, x: Array, positions: Array, cfg,
-                        pq_cache_cfg) -> Tuple[Array, Any]:
+                        policy, lengths=None) -> Tuple[Array, Any]:
   h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
-  attn, kv_cache = _attn_prefill(p["attn"], h, positions, cfg, pq_cache_cfg)
+  attn, kv_cache = _attn_prefill(p["attn"], h, positions, cfg, policy, lengths)
   if cfg.hybrid:
     s0 = ssm.init_state(x.shape[0], cfg.ssm_d_inner, cfg.ssm_state, x.dtype)
     ssm_out, ssm_state = ssm.ssm_forward(p["ssm"], h, s0)
@@ -167,19 +168,19 @@ def dense_block_prefill(p: dict, x: Array, positions: Array, cfg,
   return x + ffn, cache
 
 
-def dense_block_step(p: dict, x: Array, cache, length: Array, cfg,
-                     pq_cache_cfg) -> Tuple[Array, Any]:
+def dense_block_step(p: dict, x: Array, cache, lengths: Array, cfg,
+                     policy) -> Tuple[Array, Any]:
   h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
   if cfg.hybrid:
     kv_cache, ssm_state = cache
-    attn, new_kv = _attn_step(p["attn"], h, kv_cache, length, cfg, pq_cache_cfg)
+    attn, new_kv = _attn_step(p["attn"], h, kv_cache, lengths, cfg, policy)
     ssm_out, new_ssm = ssm.ssm_step(p["ssm"], h[:, 0], ssm_state)
     attn = 0.5 * (layers.rmsnorm(p["ln_attn_out"], attn, cfg.norm_eps)
                   + layers.rmsnorm(p["ln_ssm_out"], ssm_out[:, None],
                                    cfg.norm_eps))
     new_cache = (new_kv, new_ssm)
   else:
-    attn, new_cache = _attn_step(p["attn"], h, cache, length, cfg, pq_cache_cfg)
+    attn, new_cache = _attn_step(p["attn"], h, cache, lengths, cfg, policy)
   if cfg.parallel_block:
     ffn, _ = _ffn_apply(p, h, cfg)
     return x + attn + ffn, new_cache
@@ -276,10 +277,10 @@ def vlm_group_forward(p: dict, x: Array, vision: Array, positions: Array,
 
 
 def vlm_group_prefill(p: dict, x: Array, vision: Array, positions: Array,
-                      cfg, pq_cache_cfg) -> Tuple[Array, Any]:
+                      cfg, policy, lengths=None) -> Tuple[Array, Any]:
   x = _cross_layer(p, x, vision, cfg)
   def body(y, lp):
-    y, cache = dense_block_prefill(lp, y, positions, cfg, pq_cache_cfg)
+    y, cache = dense_block_prefill(lp, y, positions, cfg, policy, lengths)
     return y, cache
   def scan_body(carry, lp):
     y = carry
@@ -289,13 +290,13 @@ def vlm_group_prefill(p: dict, x: Array, vision: Array, positions: Array,
   return x, caches
 
 
-def vlm_group_step(p: dict, x: Array, vision: Array, caches, length: Array,
-                   cfg, pq_cache_cfg) -> Tuple[Array, Any]:
+def vlm_group_step(p: dict, x: Array, vision: Array, caches, lengths: Array,
+                   cfg, policy) -> Tuple[Array, Any]:
   x = _cross_layer(p, x, vision, cfg)
   def scan_body(carry, inp):
     y = carry
     lp, cache = inp
-    y, new_cache = dense_block_step(lp, y, cache, length, cfg, pq_cache_cfg)
+    y, new_cache = dense_block_step(lp, y, cache, lengths, cfg, policy)
     return y, new_cache
   x, new_caches = jax.lax.scan(scan_body, x, (p["selfs"], caches))
   return x, new_caches

@@ -1,0 +1,166 @@
+"""Unified CachePolicy API: registry, protocol conformance, equivalence with
+the kernel-level free functions, and per-request `lengths` semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache_api, cache_registry, kv_cache as kvc, pq
+from repro.core import pq_attention as pqa
+
+ALL_POLICIES = ("exact", "pq", "pqcache", "skvq", "snapkv", "streamingllm")
+
+
+def _pq_geo(d, sink=4, recent=8, body=32, m=4, k=16):
+  return kvc.PQCacheConfig(sink=sink, recent=recent, body_capacity=body,
+                           n_windows=1, pq=pq.PQConfig(m=m, k=k))
+
+
+def _spec(cap, d, **kw):
+  kw.setdefault("sink", 4)
+  kw.setdefault("recent", 8)
+  kw.setdefault("dtype", jnp.float32)
+  return cache_api.CacheSpec(capacity=cap, head_dim=d, **kw)
+
+
+def _inputs(rng, b, h, hq, n, d):
+  k = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+  v = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+  q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+  kn = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+  vn = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+  w = jnp.ones((b, h, n))
+  return k, v, q, kn, vn, w
+
+
+def test_registry_exposes_all_builtin_policies():
+  assert cache_registry.names() == tuple(sorted(ALL_POLICIES))
+  with pytest.raises(KeyError):
+    cache_registry.get("nope")
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_policy_protocol_end_to_end(name):
+  """init/prefill/append_and_attend/bytes on every registered policy,
+  with scalar and mixed (B,) lengths."""
+  rng = np.random.default_rng(0)
+  b, h, hq, n, cap, d = 2, 2, 4, 24, 48, 16
+  k, v, q, kn, vn, w = _inputs(rng, b, h, hq, n, d)
+  spec = _spec(cap, d, window=16, pq=_pq_geo(d))
+  policy = cache_registry.make(name, spec)
+
+  st0 = policy.init(b, h, d)
+  st = policy.prefill(k, v, w if policy.needs_weights else None)
+  # init and prefill states must be structurally interchangeable (the serve
+  # engine writes prefilled slots into an init'd batched tree)
+  assert (jax.tree_util.tree_structure(st0)
+          == jax.tree_util.tree_structure(st))
+  assert all(a.shape == b_.shape for a, b_ in
+             zip(jax.tree_util.tree_leaves(st0),
+                 jax.tree_util.tree_leaves(st)))
+
+  out, st2 = policy.append_and_attend(st, q, kn, vn, jnp.int32(n))
+  assert out.shape == (b, hq, d)
+  assert np.isfinite(np.asarray(out)).all()
+
+  out_m, _ = policy.append_and_attend(
+      st, q, kn, vn, jnp.asarray([n, n - 5], jnp.int32))
+  assert np.isfinite(np.asarray(out_m)).all()
+  np.testing.assert_allclose(np.asarray(out_m[0]), np.asarray(out[0]),
+                             rtol=1e-5, atol=1e-5)
+
+  by = policy.bytes(b, h, d)
+  for key in ("per_head_bytes", "total_bytes", "reduction_ratio"):
+    assert key in by, (name, by)
+
+
+def test_exact_policy_matches_free_functions():
+  rng = np.random.default_rng(1)
+  b, h, hq, n, cap, d = 2, 2, 4, 20, 40, 16
+  k, v, q, kn, vn, _ = _inputs(rng, b, h, hq, n, d)
+  policy = cache_registry.make("exact", _spec(cap, d))
+
+  st = policy.prefill(k, v)
+  ref = kvc.exact_cache_prefill(k, v, cap)
+  np.testing.assert_array_equal(np.asarray(st.k), np.asarray(ref.k))
+
+  out, _ = policy.append_and_attend(st, q, kn, vn, jnp.int32(n))
+  want, _ = kvc.exact_cache_append_and_attend(
+      ref, q, kn, vn, jnp.int32(n), d ** -0.5)
+  np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                             rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ("exact", "pq", "streamingllm", "snapkv"))
+def test_mixed_lengths_rows_match_single_requests(name):
+  """A batch with per-request lengths must reproduce each row's own b=1 run —
+  the invariant continuous batching rests on."""
+  rng = np.random.default_rng(2)
+  b, h, hq, n, cap, d = 3, 1, 2, 20, 40, 16
+  k, v, q, kn, vn, w = _inputs(rng, b, h, hq, n, d)
+  lengths = jnp.asarray([20, 14, 17], jnp.int32)
+  spec = _spec(cap, d, window=12, pq=_pq_geo(d))
+  policy = cache_registry.make(name, spec)
+
+  wts = w if policy.needs_weights else None
+  st = policy.prefill(k, v, wts, lengths)
+  out, _ = policy.append_and_attend(st, q, kn, vn, lengths)
+
+  for i in range(b):
+    st1 = policy.prefill(k[i:i + 1], v[i:i + 1],
+                         None if wts is None else wts[i:i + 1],
+                         lengths[i:i + 1])
+    out1, _ = policy.append_and_attend(
+        st1, q[i:i + 1], kn[i:i + 1], vn[i:i + 1], lengths[i])
+    np.testing.assert_allclose(np.asarray(out[i]), np.asarray(out1[0]),
+                               rtol=1e-5, atol=1e-5,
+                               err_msg=f"{name} row {i}")
+
+
+def test_streamingllm_ignores_evicted_tokens():
+  """Tokens outside sink+window must not influence the output (eviction)."""
+  rng = np.random.default_rng(3)
+  b, h, hq, n, cap, d = 1, 1, 2, 24, 32, 16
+  k, v, q, kn, vn, _ = _inputs(rng, b, h, hq, n, d)
+  policy = cache_registry.make("streamingllm", _spec(cap, d, window=8))
+
+  out_a, _ = policy.append_and_attend(policy.prefill(k, v), q, kn, vn,
+                                      jnp.int32(n))
+  # poison a mid-context token (outside sink=4, outside last-8 window)
+  k_p = k.at[:, :, 10].set(99.0)
+  v_p = v.at[:, :, 10].set(-99.0)
+  out_b, _ = policy.append_and_attend(policy.prefill(k_p, v_p), q, kn, vn,
+                                      jnp.int32(n))
+  np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                             rtol=1e-6, atol=1e-6)
+
+
+def test_model_config_builds_policy():
+  import dataclasses
+  from repro.configs import get_arch
+  cfg = get_arch("tinyllama-1.1b", reduced=True)
+  assert cfg.resolved_cache_policy() == "pq"
+  assert type(cfg.make_cache_policy(128)).name == "pq"
+  legacy = dataclasses.replace(cfg, pq_enabled=False)
+  assert legacy.resolved_cache_policy() == "exact"
+  swept = dataclasses.replace(cfg, cache_policy="streamingllm")
+  assert type(swept.make_cache_policy(128)).name == "streamingllm"
+  rwkv = get_arch("rwkv6-3b", reduced=True)
+  assert rwkv.make_cache_policy(128) is None
+
+
+def test_snapkv_keeps_generated_tokens():
+  """Appended (generated) tokens get +inf importance so aging out of the
+  recent window never evicts them in favor of prompt tokens (real SnapKV
+  compresses only the prompt)."""
+  rng = np.random.default_rng(4)
+  b, h, hq, n, cap, d = 1, 1, 2, 20, 64, 16
+  k, v, q, kn, vn, w = _inputs(rng, b, h, hq, n, d)
+  policy = cache_registry.make("snapkv", _spec(cap, d))
+  st = policy.prefill(k, v, w)
+  out, st2 = policy.append_and_attend(st, q, kn, vn, jnp.int32(n))
+  assert np.isposinf(np.asarray(st2.w)[0, 0, n])
+  # prompt weights untouched, positions beyond the appended token still zero
+  np.testing.assert_array_equal(np.asarray(st2.w)[0, 0, :n],
+                                np.asarray(st.w)[0, 0, :n])
+  assert (np.asarray(st2.w)[0, 0, n + 1:] == 0).all()

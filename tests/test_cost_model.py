@@ -13,6 +13,7 @@ import jax
 import pytest
 
 from benchmarks import cost_model
+from repro.common import compat
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.launch import steps as steps_lib
@@ -23,7 +24,8 @@ def _compiled_flops(cfg, shape):
   with mesh:
     progs = steps_lib.build_programs(cfg, shape, mesh, donate=False)
     compiled = progs.fn.lower(*progs.abstract_inputs).compile()
-    return float(compiled.cost_analysis().get("flops", 0.0))
+    ca = compat.normalize_cost_analysis(compiled.cost_analysis())
+    return float(ca.get("flops", 0.0))
 
 
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-moe-a2.7b",

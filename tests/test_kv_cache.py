@@ -112,3 +112,103 @@ def test_cache_byte_accounting():
   stats = kvc.pq_cache_bytes(cfg, b=1, h=8, d=128)
   # int16 indices: 64 B/token/side vs 256 B exact -> ~4x at large N
   assert 3.5 < stats["reduction_ratio"] < 4.5, stats
+
+
+def test_pq_ring_wrap_decode_matches_oracle():
+  """Decode far past sink+recent: every step's evict->encode must keep the
+  [sink | PQ body | ring] bookkeeping consistent with an exact oracle built
+  from the cache's own codebooks (the encode step is treated as ground truth;
+  bf16 codebook storage sets the tolerance)."""
+  rng = np.random.default_rng(7)
+  cfg = _cfg(sink=2, recent=4, body=32, nw=1, m=4, k=16)
+  b, h, hq, n, d = 1, 1, 2, 8, 8
+  s0, r = cfg.sink, cfg.recent
+  keys = [rng.normal(size=(d,)).astype(np.float32) for _ in range(n)]
+  vals = [rng.normal(size=(d,)).astype(np.float32) for _ in range(n)]
+  k0 = jnp.asarray(np.stack(keys))[None, None]
+  v0 = jnp.asarray(np.stack(vals))[None, None]
+  cache = kvc.pq_cache_prefill(k0, v0, jnp.ones((b, h, n)), cfg)
+  scale = 0.3
+
+  # 3 full ring revolutions past the wrap point
+  for pos in range(n, n + 3 * r + 2):
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    kn = rng.normal(size=(d,)).astype(np.float32)
+    vn = rng.normal(size=(d,)).astype(np.float32)
+    out, cache = kvc.pq_cache_append_and_attend(
+        cache, q, jnp.asarray(kn)[None, None], jnp.asarray(vn)[None, None],
+        jnp.int32(pos), cfg, scale)
+    keys.append(kn)
+    vals.append(vn)
+
+    n_tok = pos + 1
+    body_n = n_tok - s0 - r
+    assert body_n > 0  # evict->encode fired
+    kcb = cache.key_codebooks[0, 0, 0]
+    vcb = cache.value_codebooks[0, 0, 0]
+    body_k = pq.decode(cache.key_indices[0, 0, :body_n].astype(jnp.int32), kcb)
+    body_v = pq.decode(cache.value_indices[0, 0, :body_n].astype(jnp.int32),
+                       vcb)
+    true_k = np.stack(keys)
+    true_v = np.stack(vals)
+    k_all = jnp.concatenate(
+        [jnp.asarray(true_k[:s0]), body_k, jnp.asarray(true_k[s0 + body_n:])])
+    v_all = jnp.concatenate(
+        [jnp.asarray(true_v[:s0]), body_v, jnp.asarray(true_v[s0 + body_n:])])
+    want = pqa.exact_decode_attention(
+        q[0], k_all, v_all, jnp.ones((n_tok,), bool), scale)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want),
+                               rtol=2e-2, atol=2e-2, err_msg=f"pos={pos}")
+
+
+def test_pq_append_mixed_lengths_matches_per_row():
+  """(B,) lengths vector: each batched row must equal its own b=1 run."""
+  rng = np.random.default_rng(8)
+  cfg = _cfg(sink=2, recent=4, body=32, nw=1, m=4, k=8)
+  b, h, hq, n, d = 3, 2, 4, 16, 8
+  keys = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+  vals = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+  lengths = jnp.asarray([16, 9, 12], jnp.int32)
+  cache = kvc.pq_cache_prefill(keys, vals, jnp.ones((b, h, n)), cfg,
+                               length=lengths)
+  q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+  kn = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+  vn = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+  out, cache2 = kvc.pq_cache_append_and_attend(
+      cache, q, kn, vn, lengths, cfg, 0.25)
+
+  for i in range(b):
+    c1 = kvc.pq_cache_prefill(keys[i:i + 1], vals[i:i + 1],
+                              jnp.ones((1, h, n)), cfg,
+                              length=lengths[i:i + 1])
+    out1, _ = kvc.pq_cache_append_and_attend(
+        c1, q[i:i + 1], kn[i:i + 1], vn[i:i + 1], lengths[i], cfg, 0.25)
+    np.testing.assert_allclose(np.asarray(out[i]), np.asarray(out1[0]),
+                               rtol=1e-5, atol=1e-5, err_msg=f"row {i}")
+
+
+def test_pq_prefill_dynamic_length_matches_static_path():
+  """length=N through the per-request path must reproduce the static prefill
+  in the valid region (independent oracle for the dynamic ring/body math;
+  masked padding slots beyond the valid region may differ)."""
+  rng = np.random.default_rng(9)
+  cfg = _cfg(sink=2, recent=4, body=32, nw=1, m=4, k=8)
+  b, h, n, d = 2, 2, 16, 8
+  keys = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+  vals = jnp.asarray(rng.normal(size=(b, h, n, d)), jnp.float32)
+  w = jnp.ones((b, h, n))
+  static = kvc.pq_cache_prefill(keys, vals, w, cfg)
+  dyn = kvc.pq_cache_prefill(keys, vals, w, cfg,
+                             length=jnp.full((b,), n, jnp.int32))
+  np.testing.assert_allclose(np.asarray(dyn.sink_k), np.asarray(static.sink_k))
+  np.testing.assert_allclose(np.asarray(dyn.recent_k),
+                             np.asarray(static.recent_k))
+  np.testing.assert_allclose(np.asarray(dyn.recent_v),
+                             np.asarray(static.recent_v))
+  body_n = n - cfg.sink - cfg.recent
+  np.testing.assert_allclose(
+      np.asarray(dyn.key_codebooks, np.float32),
+      np.asarray(static.key_codebooks, np.float32), rtol=1e-3, atol=1e-3)
+  np.testing.assert_array_equal(
+      np.asarray(dyn.key_indices[:, :, :body_n]),
+      np.asarray(static.key_indices[:, :, :body_n]))

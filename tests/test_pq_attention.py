@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+  from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback shim
+  from hypothesis_compat import given, settings, strategies as st
 
 from repro.core import pq, pq_attention as pqa, windowed
 
