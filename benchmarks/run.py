@@ -5,12 +5,15 @@ the dry-run JSONs (python -m repro.launch.dryrun); other benches are
 self-contained.
 
 ``--json`` instead runs the serving benchmark (tinyllama reduced, `pq` vs
-`exact` cache policy through `repro.launch.serve.ServeRun`) and writes a
-``BENCH_serve.json`` with tok/s — the start of the serving perf trajectory.
+`exact` cache policy through `repro.launch.serve.ServeRun`) and *appends* a
+timestamped record to ``BENCH_serve.json`` (``{"runs": [...]}``), so the
+serving perf trajectory accumulates across PRs instead of overwriting.
 """
 import argparse
 import json
+import os
 import sys
+import time
 
 
 def run_csv() -> int:
@@ -43,34 +46,61 @@ def run_csv() -> int:
   return 1 if failures else 0
 
 
+def _load_history(out_path: str) -> list:
+  """Existing run records; a legacy single-record file becomes run 0.
+
+  An unparseable file is moved aside (never silently dropped — it is the
+  accumulated perf trajectory this mode exists to preserve)."""
+  if not os.path.exists(out_path):
+    return []
+  try:
+    with open(out_path) as f:
+      prev = json.load(f)
+  except (OSError, ValueError) as e:
+    backup = out_path + ".corrupt"
+    os.replace(out_path, backup)
+    print(f"WARNING: could not parse {out_path} ({e}); "
+          f"moved it to {backup} and starting a fresh trajectory")
+    return []
+  if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+    return prev["runs"]
+  if isinstance(prev, dict) and prev:
+    return [prev]
+  return []
+
+
 def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
                    batch: int = 2, prompt_len: int = 64, gen: int = 16) -> int:
   from repro.launch.serve import ServeRun
 
-  results = {"arch": arch, "reduced": True, "batch": batch,
-             "prompt_len": prompt_len, "gen": gen, "policies": {}}
+  record = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "arch": arch, "reduced": True, "batch": batch,
+            "prompt_len": prompt_len, "gen": gen, "policies": {}}
   for policy in ("pq", "exact"):
     run = ServeRun(arch=arch, reduced=True, batch=batch,
                    prompt_len=prompt_len, gen=gen, cache_policy=policy)
     res = run.run()
-    results["policies"][policy] = {
+    record["policies"][policy] = {
         "tok_per_s": round(res["tok_per_s"], 2),
         "prefill_s": round(res["prefill_s"], 4),
         "decode_s": round(res["decode_s"], 4),
     }
     print(f"serve[{policy}]: {res['tok_per_s']:.1f} tok/s "
           f"(prefill {res['prefill_s']:.2f}s, decode {res['decode_s']:.2f}s)")
+  history = _load_history(out_path)
+  history.append(record)
   with open(out_path, "w") as f:
-    json.dump(results, f, indent=2)
+    json.dump({"runs": history}, f, indent=2)
     f.write("\n")
-  print(f"wrote {out_path}")
+  print(f"appended run {len(history)} to {out_path}")
   return 0
 
 
 def main() -> None:
   ap = argparse.ArgumentParser(description=__doc__)
   ap.add_argument("--json", action="store_true",
-                  help="run the serve benchmark and write a JSON summary")
+                  help="run the serve benchmark and append a timestamped "
+                       "record to the JSON trajectory")
   ap.add_argument("--out", default="BENCH_serve.json",
                   help="output path for --json mode")
   ap.add_argument("--arch", default="tinyllama-1.1b")

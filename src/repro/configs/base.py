@@ -54,6 +54,14 @@ class ModelConfig:
   decode_cache_len: int = 4096     # exact-cache capacity for decode
   cache_policy: str = "pq"         # registry key: exact | pq | skvq | snapkv |
                                    # streamingllm | pqcache (core/cache_registry)
+  cache_layout: str = "contiguous"  # physical KV storage: contiguous | paged
+                                    # (core/cache_layout)
+  scheduler: str = "fifo"          # serve-engine admission: fifo | sjf | paged
+                                   # (launch/scheduler)
+  kv_block_size: int = 16          # paged-layout token-block granularity
+  stream_window: int = 512         # streamingllm sliding window (clamped to
+                                   # context; paged layout ring-reuses blocks
+                                   # that age out of it)
   pq_enabled: bool = True          # legacy toggle: False downgrades "pq"->"exact"
   pq_m: int = 32                   # paper Table II optimum
   pq_k: int = 512                  # paper Table III optimum
@@ -112,6 +120,10 @@ class ModelConfig:
     spec = cache_api.CacheSpec(
         capacity=context_len, head_dim=self.head_dim, dtype=self.dtype,
         sink=self.pq_sink, recent=self.pq_recent,
+        # the streaming window is clamped to small contexts (window ==
+        # capacity keeps everything, same effective behavior)
+        window=min(self.stream_window, context_len),
+        block=self.kv_block_size if self.cache_layout == "paged" else 0,
         pq=self.pq_cache_config(context_len) if name == "pq" else None)
     return cache_registry.make(name, spec)
 

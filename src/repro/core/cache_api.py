@@ -67,9 +67,36 @@ class CacheSpec:
   bits: int = 4              # skvq uniform-quant bits
   group: int = 32            # skvq channel-group size
   keep_frac: float = 0.25    # snapkv / pqcache kept-token fraction
+  block: int = 0             # paged-layout token-block size (0 = contiguous)
   pq: Optional[kvc.PQCacheConfig] = None   # aqpim geometry (policy "pq")
   pq_select: Optional[pqlib.PQConfig] = None  # pqcache ANN-index codec
   scale: Optional[float] = None            # softmax scale; None -> d^-0.5
+
+  def __post_init__(self):
+    # geometry errors surface here, with names, instead of deep inside a
+    # vmapped kernel as a shape/assert failure several layers down
+    if self.capacity <= 0:
+      raise ValueError(f"capacity must be positive, got {self.capacity}")
+    if self.sink < 0 or self.recent < 0:
+      raise ValueError(
+          f"sink/recent must be >= 0, got ({self.sink}, {self.recent})")
+    if not 0.0 < self.keep_frac <= 1.0:
+      raise ValueError(f"keep_frac must be in (0, 1], got {self.keep_frac}")
+    if not 0 < self.window <= self.capacity:
+      raise ValueError(
+          f"window must be in (0, capacity={self.capacity}], got "
+          f"{self.window}")
+    if self.block < 0:
+      raise ValueError(f"block must be >= 0, got {self.block}")
+    if self.block and self.capacity % self.block:
+      raise ValueError(
+          f"capacity {self.capacity} not divisible by block size "
+          f"{self.block} (paged layouts need whole token blocks)")
+    if (self.block and self.pq is not None
+        and self.pq.body_capacity % self.block):
+      raise ValueError(
+          f"pq body_capacity {self.pq.body_capacity} not divisible by "
+          f"block size {self.block}")
 
   @property
   def keep(self) -> int:
@@ -86,8 +113,22 @@ class WeightedLayerCache(NamedTuple):
   w: Array               # (B, H, N) f32
 
 
+# Sentinel for `CachePolicy.paged_axes`: the leaf has no token axis and stays
+# resident per slot (never paged).  An int sentinel — not None — because None
+# leaves collapse out of a pytree and the axes tree must keep the state's
+# exact structure.
+RESIDENT = -1
+
+
 class CachePolicy:
-  """Base class; subclasses register themselves under a string key."""
+  """Base class; subclasses register themselves under a string key.
+
+  Beyond the four storage methods, a policy is a *codec over a layout*: it
+  describes which leaves of its state carry a token axis (`paged_axes`) and
+  how many paged tokens a given cached length occupies (`token_extent`), so
+  `core.cache_layout.PagedLayout` can page any policy's state — AQPIM PQ
+  codes page exactly the way exact KV does — without knowing its internals.
+  """
   name: str = "base"
   needs_weights: bool = False
 
@@ -108,6 +149,31 @@ class CachePolicy:
 
   def bytes(self, b: int, h: int, d: int) -> dict:
     raise NotImplementedError
+
+  # -- paged-layout codec surface -------------------------------------------
+  def paged_axes(self):
+    """Pytree matching one *batched* state (leading dim B): per leaf, the
+    token-axis index, or RESIDENT for fixed-size leaves (codebooks, rings)."""
+    raise NotImplementedError(
+        f"{type(self).__name__} does not describe a paged layout")
+
+  def paged_capacity(self) -> int:
+    """Size of the paged token axis (the dense buffer the codec attends on)."""
+    return self.spec.capacity
+
+  def token_extent(self, length: int) -> int:
+    """Paged tokens that must be resident when `length` tokens are cached."""
+    return min(length, self.paged_capacity())
+
+  def pinned_tokens(self) -> int:
+    """Leading paged tokens that may never be reclaimed (attention sinks)."""
+    return 0
+
+  def dead_below(self, length: int) -> int:
+    """Paged-token positions < this are evicted by the policy's own masking
+    and may be reclaimed (ring-reuse); 0 means nothing is reclaimable."""
+    del length
+    return 0
 
   def __repr__(self) -> str:
     return f"{type(self).__name__}(capacity={self.spec.capacity})"
@@ -192,6 +258,12 @@ class _ExactStorePolicy(CachePolicy):
   def _valid_mask(self, n: int, length: Array) -> Array:
     return jnp.arange(n) < (length + 1)
 
+  def paged_axes(self):
+    # k/v (B, H, N, D) and w (B, H, N): token axis 2 on every leaf
+    if self.tracks_weights:
+      return WeightedLayerCache(k=2, v=2, w=2)
+    return kvc.ExactLayerCache(k=2, v=2)
+
 
 @cache_registry.register("exact")
 class ExactPolicy(_ExactStorePolicy):
@@ -218,6 +290,14 @@ class StreamingLLMPolicy(_ExactStorePolicy):
     return baselines.streaming_llm_decode_attention(
         q, k, v, length + 1, self.spec.sm_scale(q.shape[-1]),
         sink=self.spec.sink, window=self.spec.window)
+
+  def pinned_tokens(self) -> int:
+    return self.spec.sink
+
+  def dead_below(self, length: int) -> int:
+    # tokens below length-window are masked out forever -> their blocks can
+    # be recycled (the paged layout's ring-reuse for the streaming window)
+    return max(length - self.spec.window, 0)
 
   def bytes(self, b: int, h: int, d: int) -> dict:
     fp = 2
@@ -359,3 +439,21 @@ class PQPolicy(CachePolicy):
 
   def bytes(self, b: int, h: int, d: int) -> dict:
     return kvc.pq_cache_bytes(self.pq_cfg, b, h, d)
+
+  def paged_axes(self):
+    # only the per-token PQ codes page; sink/recent rings and the codebooks
+    # are fixed-size per request and stay resident
+    return kvc.PQLayerCache(
+        sink_k=RESIDENT, sink_v=RESIDENT,
+        recent_k=RESIDENT, recent_v=RESIDENT,
+        key_codebooks=RESIDENT, value_codebooks=RESIDENT,
+        key_indices=2, value_indices=2)
+
+  def paged_capacity(self) -> int:
+    return self.pq_cfg.body_capacity
+
+  def token_extent(self, length: int) -> int:
+    # body offsets are positions [sink, length - recent): the sink/recent
+    # tokens live in the resident rings, not in paged storage
+    used = length - self.pq_cfg.sink - self.pq_cfg.recent
+    return min(max(used, 0), self.pq_cfg.body_capacity)

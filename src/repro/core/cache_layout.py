@@ -1,0 +1,472 @@
+"""`CacheLayout` API: physical KV storage as fixed-size token blocks.
+
+AQPIM's point is breaking the PIM *capacity wall*: the KV cache has to fit
+and move inside banked memory, which means block-granular placement, not one
+monolithic `(B, H, N, D)` slab per request (paper §II/§IV; LoL-PIM/PIMphony
+make the same bank-partitioned, capacity-managed layout central to
+long-context PIM serving).  This module splits *what* is cached (a
+`CachePolicy` codec — exact, AQPIM pq, skvq, ...) from *where* it lives:
+
+  ``ContiguousLayout``  one capacity-sized slab per engine slot (PR 1
+                        behavior, the default);
+  ``PagedLayout``       a shared pool of fixed-size token blocks with a
+                        `BlockAllocator` and per-request block tables —
+                        alloc/free/gather/scatter, ring-reuse for the
+                        streaming window.
+
+A layout pages *any* policy's state through the codec surface on
+`CachePolicy` (`paged_axes` / `token_extent` / `paged_capacity`): AQPIM's
+PQ codes page exactly the way exact KV does, while its codebooks and
+sink/recent rings stay resident.  ``bytes()`` on a layout reports the *true
+allocated-block footprint*, not capacity.
+
+Layouts are selected by string key via `repro.core.cache_registry`
+(`make_layout("paged", model, max_batch)`); the serve engine exposes them as
+`--cache-layout` and drives admission through `repro.launch.scheduler`.
+
+The numerical core (blockify/unblockify/gather_blocks/scatter_blocks) lives
+in `core.kv_cache`; everything here composes those into three jitted
+programs (admit-scatter, gather->decode->scatter, plus the contiguous
+slot-insert) so paging adds no per-step recompilation.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache_registry
+from repro.core import kv_cache as kvc
+from repro.core.cache_api import RESIDENT
+
+
+class BlockAllocator:
+  """Free-list allocator over `num_blocks` physical token blocks.
+
+  Owners are opaque tags (the engine uses slot indices).  Every transition is
+  checked: allocating an owned block, freeing a free block, or freeing with
+  the wrong owner raises — the invariants the hypothesis suite drives.
+  """
+
+  def __init__(self, num_blocks: int):
+    if num_blocks <= 0:
+      raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+    self.num_blocks = num_blocks
+    self._free: collections.deque = collections.deque(range(num_blocks))
+    self._owner: Dict[int, Any] = {}
+
+  @property
+  def free_count(self) -> int:
+    return len(self._free)
+
+  @property
+  def allocated_count(self) -> int:
+    return len(self._owner)
+
+  def alloc(self, n: int, owner: Any = None) -> Optional[List[int]]:
+    """Allocate `n` blocks for `owner`; None (and no change) if unavailable."""
+    if n < 0:
+      raise ValueError(f"cannot allocate {n} blocks")
+    if n > len(self._free):
+      return None
+    ids = [self._free.popleft() for _ in range(n)]
+    for i in ids:
+      if i in self._owner:
+        raise AssertionError(f"free list returned owned block {i}")
+      self._owner[i] = owner
+    return ids
+
+  def free(self, ids: Sequence[int], owner: Any = None) -> None:
+    for i in ids:
+      if i not in self._owner:
+        raise ValueError(f"double free of block {i}")
+      if owner is not None and self._owner[i] != owner:
+        raise ValueError(
+            f"block {i} owned by {self._owner[i]!r}, freed by {owner!r}")
+      del self._owner[i]
+      self._free.append(i)
+
+  def owned(self, owner: Any) -> List[int]:
+    return [i for i, o in self._owner.items() if o == owner]
+
+  def check(self) -> None:
+    """Free list and owner map must partition [0, num_blocks) exactly."""
+    free = set(self._free)
+    owned = set(self._owner)
+    if len(free) != len(self._free):
+      raise AssertionError("duplicate ids in free list")
+    if free & owned:
+      raise AssertionError(f"blocks both free and owned: {free & owned}")
+    if free | owned != set(range(self.num_blocks)):
+      raise AssertionError("allocator leaked or invented blocks")
+
+
+class BlockTableManager:
+  """Host-side paged bookkeeping: per-slot block tables over an allocator.
+
+  Pure NumPy/Python — no device storage — so allocator/table invariants can
+  be property-tested against random admit/grow/reclaim/release traffic
+  without building a model.  Logical block j of a slot covers paged tokens
+  [j*block, (j+1)*block); unallocated entries hold the trash sentinel
+  (`num_blocks`), which physically exists in the pool so gathers/scatters of
+  not-yet-filled blocks stay in bounds and never touch another request.
+  """
+
+  def __init__(self, num_blocks: int, blocks_per_req: int, max_slots: int,
+               block: int, policy):
+    self.allocator = BlockAllocator(num_blocks)
+    self.block = block
+    self.blocks_per_req = blocks_per_req
+    self.trash = num_blocks
+    self.tables = np.full((max_slots, blocks_per_req), self.trash, np.int32)
+    self._hwm = np.zeros(max_slots, np.int64)   # logical blocks ever grown to
+    self.policy = policy
+    self.peak_allocated = 0
+
+  @property
+  def free_count(self) -> int:
+    return self.allocator.free_count
+
+  @property
+  def allocated_count(self) -> int:
+    return self.allocator.allocated_count
+
+  def blocks_for(self, length: int) -> int:
+    """Blocks needed to hold `length` cached tokens under this codec."""
+    return -(-self.policy.token_extent(int(length)) // self.block)
+
+  def need_blocks(self, slot: int, length: int) -> int:
+    return max(self.blocks_for(length) - int(self._hwm[slot]), 0)
+
+  def admit(self, slot: int, length: int) -> bool:
+    if self._hwm[slot] != 0 or (self.tables[slot] != self.trash).any():
+      raise AssertionError(f"slot {slot} admitted while occupied")
+    return self.ensure(slot, length)
+
+  def ensure(self, slot: int, length: int) -> bool:
+    """Grow slot to cover `length` tokens; False (no change) on exhaustion."""
+    need = self.need_blocks(slot, length)
+    if need == 0:
+      return True
+    ids = self.allocator.alloc(need, owner=slot)
+    if ids is None:
+      return False
+    hwm = int(self._hwm[slot])
+    self.tables[slot, hwm:hwm + need] = ids
+    self._hwm[slot] = hwm + need
+    self.peak_allocated = max(self.peak_allocated, self.allocated_count)
+    return True
+
+  def reclaim(self, slot: int, length: int) -> int:
+    """Ring-reuse: free blocks the codec has masked out forever (e.g. the
+    streaming window's aged-out tokens).  Returns blocks freed."""
+    dead = self.policy.dead_below(int(length))
+    if dead <= 0:
+      return 0
+    first = -(-self.policy.pinned_tokens() // self.block)
+    last = min(dead // self.block, int(self._hwm[slot]))
+    freed = 0
+    for j in range(first, last):
+      pid = int(self.tables[slot, j])
+      if pid != self.trash:
+        self.allocator.free([pid], owner=slot)
+        self.tables[slot, j] = self.trash
+        freed += 1
+    return freed
+
+  def release(self, slot: int) -> None:
+    ids = [int(x) for x in self.tables[slot] if x != self.trash]
+    if ids:
+      self.allocator.free(ids, owner=slot)
+    self.tables[slot, :] = self.trash
+    self._hwm[slot] = 0
+
+  def check_invariants(self) -> None:
+    self.allocator.check()
+    live = self.tables[self.tables != self.trash]
+    if len(set(live.tolist())) != live.size:
+      raise AssertionError("physical block mapped by two table entries")
+    for slot in range(self.tables.shape[0]):
+      row = set(self.tables[slot][self.tables[slot] != self.trash].tolist())
+      if row != set(self.allocator.owned(slot)):
+        raise AssertionError(
+            f"slot {slot} table/owner mismatch: {row} vs "
+            f"{set(self.allocator.owned(slot))}")
+
+
+class CacheLayout:
+  """Physical-storage protocol between a built `Model` and the serve engine.
+
+  The engine never touches cache trees directly anymore; it asks the layout
+  to `admit` a prefilled request into a slot, `ensure` growth room before a
+  decode step, `decode` one batched step over the layout's own storage, and
+  `release` on finish.  Block-pool methods are no-ops for layouts without a
+  pool, so schedulers can query them uniformly.
+  """
+  name: str = "base"
+
+  # -- admission / lifetime --------------------------------------------------
+  def fits(self, total_len: int, prompt_len: int = 0) -> bool:
+    """Can a request of `total_len` cached tokens ever be served alone?"""
+    return True
+
+  def can_admit(self, prompt_len: int, total_len: Optional[int] = None
+                ) -> bool:
+    """Is there storage to admit a prompt of this length right now?
+    `total_len` (prompt + max new tokens) lets pooled layouts keep one
+    block of growth headroom and avoid admit->preempt thrash."""
+    return True
+
+  def admit(self, slot: int, slot_cache: Any, prompt_len: int) -> None:
+    raise NotImplementedError
+
+  def release(self, slot: int) -> None:
+    raise NotImplementedError
+
+  # -- per-step growth -------------------------------------------------------
+  def need_blocks(self, slot: int, target_len: int) -> int:
+    return 0
+
+  def ensure(self, slot: int, target_len: int) -> bool:
+    return True
+
+  def reclaim(self, slot: int, length: int) -> int:
+    return 0
+
+  @property
+  def free_blocks(self) -> int:
+    return 0
+
+  # -- compute ---------------------------------------------------------------
+  def decode(self, params: Any, cur: np.ndarray, lengths: np.ndarray):
+    """Run one batched decode step over this layout's storage; returns logits."""
+    raise NotImplementedError
+
+  def bytes(self, active_slots: int = 0) -> dict:
+    raise NotImplementedError
+
+  def __repr__(self) -> str:
+    return f"{type(self).__name__}()"
+
+
+@cache_registry.register_layout("contiguous")
+class ContiguousLayout(CacheLayout):
+  """PR 1 storage: one capacity-sized slab per slot, batched tree (L, B, ...).
+
+  Admission writes a prefilled slot cache into batch row `slot` via a donated
+  dynamic-update; decode donates the whole tree.  `bytes()` is honest about
+  what this layout costs: every slot pays full capacity whether or not a
+  short request sits in it — the number paging exists to shrink.
+  """
+
+  def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
+               num_blocks: Optional[int] = None):
+    del block_size, num_blocks   # no block pool
+    self.model = model
+    self.max_batch = max_batch
+    self.storage = model.init_cache(max_batch)
+    self._decode_fused = jax.jit(model.decode_step, donate_argnums=(2,))
+    self._insert = jax.jit(
+        lambda cache, c1, slot: jax.tree_util.tree_map(
+            lambda c, x: jax.lax.dynamic_update_slice_in_dim(
+                c, x.astype(c.dtype), slot, axis=1), cache, c1),
+        donate_argnums=(0,))
+
+  def admit(self, slot: int, slot_cache: Any, prompt_len: int) -> None:
+    del prompt_len  # slabs are capacity-sized regardless
+    self.storage = self._insert(self.storage, slot_cache,
+                                jnp.asarray(slot, jnp.int32))
+
+  def release(self, slot: int) -> None:
+    pass  # the slab is overwritten by the next admit
+
+  def decode(self, params, cur, lengths):
+    logits, self.storage = self._decode_fused(
+        params, jnp.asarray(cur), self.storage, jnp.asarray(lengths))
+    return logits
+
+  def bytes(self, active_slots: int = 0) -> dict:
+    total = sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(self.storage))
+    per_slot = total // max(self.max_batch, 1)
+    return dict(kind="contiguous", total_bytes=total,
+                per_slot_bytes=per_slot, capacity_bytes=total,
+                active_bytes=active_slots * per_slot)
+
+
+@cache_registry.register_layout("paged")
+class PagedLayout(CacheLayout):
+  """Block-pooled storage: per-request block tables over a shared pool.
+
+  Every token-axis leaf of the policy state (exact K/V slabs, snapkv weights,
+  AQPIM PQ code rows) is stored as `(P+1, ..., block, ...)` physical blocks —
+  index P is the trash block backing unallocated table entries — while
+  resident leaves (codebooks, sink/recent rings) stay per-slot.  One jitted
+  program fuses block-gather -> decode_step -> block-scatter, so the dense
+  per-request view the vmapped cores consume never materializes outside the
+  compiled step.
+  """
+
+  def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
+               num_blocks: Optional[int] = None):
+    policy = model.cache_policy
+    if policy is None:
+      raise ValueError("paged layout needs a KV cache policy "
+                       "(attn-free families have no KV cache)")
+    self.model = model
+    self.max_batch = max_batch
+    self.block = int(block_size or policy.spec.block or 16)
+    cap = policy.paged_capacity()
+    if self.block <= 0 or cap % self.block:
+      raise ValueError(
+          f"paged token capacity {cap} not divisible by block size "
+          f"{self.block} ({type(policy).__name__})")
+    self.blocks_per_req = cap // self.block
+    self.num_blocks = int(num_blocks or max_batch * self.blocks_per_req)
+    self.manager = BlockTableManager(
+        self.num_blocks, self.blocks_per_req, max_batch, self.block, policy)
+    self._axes = policy.paged_axes()
+
+    template = model.init_cache(max_batch)
+
+    def storage_leaf(ax, leaf):
+      if ax == RESIDENT:
+        return jnp.array(leaf)       # (L, B, ...) per-slot resident
+      # (L, B, ..., N at ax, ...) -> pool (P+1, L, ..., block, ...)
+      slot_shape = leaf.shape[:1] + leaf.shape[2:]
+      pool_shape = ((self.num_blocks + 1,) + slot_shape[:ax] + (self.block,)
+                    + slot_shape[ax + 1:])
+      return jnp.zeros(pool_shape, leaf.dtype)
+
+    self.storage = jax.tree_util.tree_map(storage_leaf, self._axes, template)
+
+    def gather(storage, tables):
+      def one(ax, st):
+        if ax == RESIDENT:
+          return st
+        dense = jax.vmap(lambda t: kvc.gather_blocks(st, t, ax))(tables)
+        return jnp.moveaxis(dense, 0, 1)          # (B, L, ...) -> (L, B, ...)
+      return jax.tree_util.tree_map(one, self._axes, storage)
+
+    def scatter(storage, tables, new_caches):
+      flat = tables.reshape(-1)
+      def one(ax, st, dense):
+        if ax == RESIDENT:
+          return dense.astype(st.dtype)
+        per_slot = jnp.moveaxis(dense, 1, 0)      # (B, L, ...)
+        blocks = jax.vmap(lambda x: kvc.blockify(x, ax, self.block))(per_slot)
+        blocks = blocks.reshape((-1,) + blocks.shape[2:])   # (B*nb, ...)
+        # duplicate indices only ever collide on the trash block, whose
+        # content is never read
+        return st.at[flat].set(blocks.astype(st.dtype))
+      return jax.tree_util.tree_map(one, self._axes, storage, new_caches)
+
+    def decode_fused(params, cur, storage, tables, lengths):
+      caches = gather(storage, tables)
+      logits, new_caches = model.decode_step(params, cur, caches, lengths)
+      return logits, scatter(storage, tables, new_caches)
+
+    def admit_fused(storage, slot_cache, table, slot):
+      def one(ax, st, sc):
+        if ax == RESIDENT:
+          return jax.lax.dynamic_update_slice_in_dim(
+              st, sc.astype(st.dtype), slot, axis=1)
+        blocks = kvc.blockify(sc[:, 0], ax, self.block)
+        return st.at[table].set(blocks.astype(st.dtype))
+      return jax.tree_util.tree_map(one, self._axes, storage, slot_cache)
+
+    self._decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
+    self._admit_fused = jax.jit(admit_fused, donate_argnums=(0,))
+
+  # -- admission / lifetime --------------------------------------------------
+  def fits(self, total_len: int, prompt_len: int = 0) -> bool:
+    return self._peak_blocks(total_len, prompt_len) <= self.num_blocks
+
+  def _peak_blocks(self, total_len: int, prompt_len: int = 0) -> int:
+    """Worst-case simultaneously-held blocks over a solo request's life.
+
+    Accounts for ring-reuse: a streaming-window codec reclaims aged-out
+    blocks every step, so its working set is ~window-sized even when
+    `blocks_for(total_len)` exceeds the pool.  Admission itself transiently
+    holds the full prompt extent (reclaim only runs after the first step),
+    hence the `prompt_len` floor.
+    """
+    mgr = self.manager
+    pol = mgr.policy
+    pinned = -(-pol.pinned_tokens() // self.block)
+    start = max(prompt_len, 1)
+    peak = mgr.blocks_for(start)
+    for n in range(start + 1, total_len + 1):
+      freed = max(pol.dead_below(n - 1) // self.block - pinned, 0)
+      peak = max(peak, mgr.blocks_for(n) - freed)
+    return peak
+
+  def can_admit(self, prompt_len: int, total_len: Optional[int] = None
+                ) -> bool:
+    need = self.manager.blocks_for(prompt_len)
+    if total_len is not None:
+      # one block of growth headroom (vLLM-style watermark), capped at the
+      # request's true worst case so admission can never become impossible
+      need = min(need + 1, self.manager.blocks_for(total_len))
+    return need <= self.manager.free_count
+
+  def admit(self, slot: int, slot_cache: Any, prompt_len: int) -> None:
+    if not self.manager.admit(slot, prompt_len):
+      raise RuntimeError(
+          f"block pool exhausted admitting {prompt_len}-token prompt "
+          f"(free={self.manager.free_count})")
+    self.storage = self._admit_fused(
+        self.storage, slot_cache, jnp.asarray(self.manager.tables[slot]),
+        jnp.asarray(slot, jnp.int32))
+
+  def release(self, slot: int) -> None:
+    self.manager.release(slot)
+
+  # -- per-step growth -------------------------------------------------------
+  def need_blocks(self, slot: int, target_len: int) -> int:
+    return self.manager.need_blocks(slot, target_len)
+
+  def ensure(self, slot: int, target_len: int) -> bool:
+    return self.manager.ensure(slot, target_len)
+
+  def reclaim(self, slot: int, length: int) -> int:
+    return self.manager.reclaim(slot, length)
+
+  @property
+  def free_blocks(self) -> int:
+    return self.manager.free_count
+
+  # -- compute ---------------------------------------------------------------
+  def decode(self, params, cur, lengths):
+    logits, self.storage = self._decode_fused(
+        params, jnp.asarray(cur), self.storage,
+        jnp.asarray(self.manager.tables), jnp.asarray(lengths))
+    return logits
+
+  def bytes(self, active_slots: int = 0) -> dict:
+    """True allocated-block footprint (what paging buys), not capacity."""
+    block_bytes = 0
+    resident_total = 0
+    for ax, leaf in zip(jax.tree_util.tree_leaves(self._axes),
+                        jax.tree_util.tree_leaves(self.storage)):
+      if ax == RESIDENT:
+        resident_total += leaf.nbytes
+      else:
+        block_bytes += leaf.nbytes // (self.num_blocks + 1)
+    per_slot_resident = resident_total // max(self.max_batch, 1)
+    allocated = self.manager.allocated_count
+    return dict(
+        kind="paged", block=self.block, num_blocks=self.num_blocks,
+        allocated_blocks=allocated, peak_blocks=self.manager.peak_allocated,
+        block_bytes=block_bytes,
+        resident_bytes_per_slot=per_slot_resident,
+        total_bytes=(allocated * block_bytes
+                     + active_slots * per_slot_resident),
+        capacity_bytes=(self.num_blocks * block_bytes
+                        + self.max_batch * per_slot_resident))
+
+  def __repr__(self) -> str:
+    return (f"PagedLayout(block={self.block}, num_blocks={self.num_blocks}, "
+            f"free={self.free_blocks})")

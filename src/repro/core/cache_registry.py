@@ -1,4 +1,4 @@
-"""String-keyed registry of KV-cache policies.
+"""String-keyed registries of KV-cache policies and cache layouts.
 
 Every method the paper sweeps (AQPIM PQ, exact, SKVQ/SnapKV/StreamingLLM/
 PQCache baselines — §IV-A/B, Fig. 10) registers itself here under a short
@@ -8,6 +8,12 @@ policy by name:
     from repro.core import cache_registry
     policy = cache_registry.make("pq", spec)
 
+A second namespace holds *cache layouts* (`core.cache_layout`): how policy
+state is physically stored — `contiguous` per-slot slabs or `paged`
+fixed-size token blocks:
+
+    layout = cache_registry.make_layout("paged", model, max_batch)
+
 Kept import-light (stdlib only) so it can sit below both `core.cache_api`
 and `configs.base` without cycles.
 """
@@ -16,6 +22,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Tuple
 
 _REGISTRY: Dict[str, type] = {}
+_LAYOUTS: Dict[str, type] = {}
 
 
 def register(name: str) -> Callable[[type], type]:
@@ -51,3 +58,42 @@ def names() -> Tuple[str, ...]:
 def _ensure_builtin() -> None:
   # registration happens at class definition; importing cache_api is enough
   from repro.core import cache_api  # noqa: F401  (cycle-safe: lazy)
+
+
+# ---------------------------------------------------------------------------
+# cache layouts
+# ---------------------------------------------------------------------------
+
+def register_layout(name: str) -> Callable[[type], type]:
+  """Class decorator: `@register_layout("paged") class PagedLayout(...)`."""
+  def deco(cls: type) -> type:
+    if name in _LAYOUTS and _LAYOUTS[name] is not cls:
+      raise ValueError(f"cache layout {name!r} already registered")
+    _LAYOUTS[name] = cls
+    cls.name = name
+    return cls
+  return deco
+
+
+def get_layout(name: str) -> type:
+  _ensure_builtin_layouts()
+  try:
+    return _LAYOUTS[name]
+  except KeyError:
+    raise KeyError(
+        f"unknown cache layout {name!r}; available: {layout_names()}"
+    ) from None
+
+
+def make_layout(name: str, model, max_batch: int, **kwargs):
+  """Instantiate the layout registered under `name` for a built Model."""
+  return get_layout(name)(model, max_batch, **kwargs)
+
+
+def layout_names() -> Tuple[str, ...]:
+  _ensure_builtin_layouts()
+  return tuple(sorted(_LAYOUTS))
+
+
+def _ensure_builtin_layouts() -> None:
+  from repro.core import cache_layout  # noqa: F401  (cycle-safe: lazy)

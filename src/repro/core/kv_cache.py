@@ -36,6 +36,52 @@ def as_lengths(length, b: int) -> Array:
   return ln.reshape(b)
 
 
+# ---------------------------------------------------------------------------
+# Block-indexed storage primitives (paged KV memory)
+#
+# A *paged* cache stores a token-axis leaf as fixed-size blocks in a shared
+# physical pool instead of one contiguous per-request slab; a per-request
+# block table maps logical token-block j -> physical pool block.  These four
+# primitives are the numerical core the `core.cache_layout.PagedLayout`
+# builds on; they are shape-static and vmap/jit-safe, so the gather -> decode
+# -> scatter round trip lowers into one compiled step.
+# ---------------------------------------------------------------------------
+
+def blockify(x: Array, axis: int, block: int) -> Array:
+  """Split token axis `axis` of a dense leaf into leading blocks.
+
+  (..., N, ...) with N = nb*block  ->  (nb, ..., block, ...)
+  """
+  n = x.shape[axis]
+  assert n % block == 0, f"token axis {n} not divisible by block {block}"
+  x = x.reshape(x.shape[:axis] + (n // block, block) + x.shape[axis + 1:])
+  return jnp.moveaxis(x, axis, 0)
+
+
+def unblockify(blocks: Array, axis: int) -> Array:
+  """Inverse of `blockify`: (nb, ..., block, ...) -> dense (..., N, ...)."""
+  x = jnp.moveaxis(blocks, 0, axis)
+  return x.reshape(x.shape[:axis] + (x.shape[axis] * x.shape[axis + 1],)
+                   + x.shape[axis + 2:])
+
+
+def gather_blocks(pool: Array, table: Array, axis: int) -> Array:
+  """Materialize one request's dense leaf view from the physical pool.
+
+  pool (P, ...block leaf...) indexed by table (nb,) int32 -> dense leaf whose
+  token axis sits at `axis`.  Unallocated logical blocks point at the pool's
+  trash block; their garbage rows land at positions >= the request's length
+  and are masked inside every policy's attend path.
+  """
+  return unblockify(pool[table], axis)
+
+
+def scatter_blocks(pool: Array, table: Array, dense: Array, axis: int) -> Array:
+  """Write a request's dense leaf back into its pool blocks (inverse gather)."""
+  block = pool.shape[axis + 1]
+  return pool.at[table].set(blockify(dense, axis, block).astype(pool.dtype))
+
+
 class PQCacheConfig(NamedTuple):
   """Static geometry of a PQ cache."""
   sink: int = 8            # exact sink tokens (paper §IV-A)

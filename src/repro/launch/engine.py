@@ -1,4 +1,4 @@
-"""Continuous-batching serve engine on top of the unified CachePolicy API.
+"""Continuous-batching serve engine over CacheLayout storage + a Scheduler.
 
 The fixed-batch demo loop in `launch.serve` decodes B requests in lockstep:
 all prompts share one length and all finish together.  Real serving (the
@@ -13,19 +13,32 @@ module provides:
     while engine.has_work:
       for done in engine.step():
         print(done.rid, done.tokens)
+    print(engine.stats.summary())
+
+Storage and policy are split along the PR 2 API boundary:
+
+- *What* is cached is the `CachePolicy` codec (`cfg.cache_policy`: exact,
+  AQPIM pq, skvq, ...).
+- *Where* it lives is the `CacheLayout` (`cfg.cache_layout` /
+  `cache_layout=` kwarg): `contiguous` capacity-sized slabs per slot, or
+  `paged` fixed-size token blocks from a shared `BlockAllocator` pool.
+- *Who runs next* is the `Scheduler` (`cfg.scheduler` / `scheduler=`):
+  `fifo`, `sjf`, or `paged` (admit-on-available-blocks, preempt-and-requeue
+  on pool exhaustion — recompute preemption: a preempted request is re-
+  prefilled from its prompt and, under greedy decoding, regenerates the
+  identical tokens).
 
 Mechanics
 ---------
-- One jitted batch=1 prefill (prompts right-padded to `prompt_capacity`),
-  one jitted batch=`max_batch` decode step, and one jitted donated
-  slot-insert — three compiles total, regardless of how many requests
-  stream through.
-- The decode cache is a single batched tree (leaves (L, B, ...)); admitting
-  a request writes its prefilled slot-cache into batch row `slot`, so
-  requests at different positions coexist in one `decode_step` thanks to the
-  per-request `lengths` vector threaded through the CachePolicy API.
-- Greedy sampling; inactive slots decode garbage that is simply discarded
-  (their rows are overwritten at the next admit).
+- One jitted batch=1 prefill (prompts right-padded to `prompt_capacity`)
+  plus the layout's own compiled programs (slot-insert and decode for
+  contiguous; admit-scatter and gather->decode->scatter for paged) — a
+  fixed number of compiles regardless of how many requests stream through.
+- Per-request `lengths` thread through the CachePolicy API so requests at
+  different positions coexist in one decode step.
+- Greedy sampling.  Inactive slots still burn a decode lane; `engine.stats`
+  now counts that waste (occupancy, wasted slot-steps, admits/preempts)
+  instead of letting it pass silently.
 
 Families with sequence-recurrent prefill state (ssm/hybrid) or extra modal
 streams (vlm/audio) are not admitted — right-padded prefill would corrupt
@@ -35,13 +48,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import cache_registry
+from repro.launch import scheduler as scheduler_lib
 from repro.models import Model
 
 
@@ -56,10 +71,44 @@ class RequestHandle:
   slot: Optional[int] = None
   admitted_step: Optional[int] = None
   finished_step: Optional[int] = None
+  preempt_count: int = 0
 
   @property
   def prompt_len(self) -> int:
     return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class EngineStats:
+  """Per-run engine counters (the wasted-compute blind spot, quantified)."""
+  max_batch: int
+  steps: int = 0                 # step() calls, including idle ones
+  decode_steps: int = 0          # batched decode launches
+  busy_slot_steps: int = 0       # slot-steps that advanced a live request
+  wasted_slot_steps: int = 0     # slot-steps that decoded garbage (idle lane)
+  admits: int = 0
+  preempts: int = 0
+  finished: int = 0
+  blocks_reclaimed: int = 0      # ring-reuse frees (paged streaming window)
+
+  @property
+  def occupancy(self) -> float:
+    """Fraction of decode lanes that did useful work."""
+    lanes = self.decode_steps * self.max_batch
+    return self.busy_slot_steps / lanes if lanes else 0.0
+
+  def as_dict(self) -> dict:
+    d = dataclasses.asdict(self)
+    d["occupancy"] = round(self.occupancy, 4)
+    return d
+
+  def summary(self) -> str:
+    return (f"occupancy {100 * self.occupancy:.1f}% "
+            f"({self.busy_slot_steps}/{self.decode_steps * self.max_batch} "
+            f"slot-steps, {self.wasted_slot_steps} wasted) | "
+            f"admits {self.admits}, preempts {self.preempts}, "
+            f"finished {self.finished}, reclaimed {self.blocks_reclaimed} "
+            f"blocks")
 
 
 class ServeEngine:
@@ -67,7 +116,11 @@ class ServeEngine:
 
   def __init__(self, cfg: ModelConfig, *, context_len: int = 256,
                max_batch: int = 4, prompt_capacity: Optional[int] = None,
-               params: Any = None, seed: int = 0):
+               params: Any = None, seed: int = 0,
+               cache_layout: Optional[str] = None,
+               scheduler: Optional[str] = None,
+               block_size: Optional[int] = None,
+               num_blocks: Optional[int] = None):
     if cfg.family not in ("dense", "moe"):
       raise ValueError(
           f"ServeEngine supports dense/moe attention families, got "
@@ -88,26 +141,27 @@ class ServeEngine:
       raise ValueError(
           f"pq policy needs prompt_capacity >= sink+recent "
           f"({cfg.pq_sink}+{cfg.pq_recent}), got {self.prompt_capacity}")
-    self.model = Model(cfg, context_len=context_len)
 
+    layout_name = cache_layout or cfg.cache_layout
+    sched_name = scheduler or cfg.scheduler
+    self.scheduler = scheduler_lib.make(sched_name)
+    if self.scheduler.preemptive and layout_name != "paged":
+      raise ValueError(
+          f"scheduler {sched_name!r} gates admission on the block pool; "
+          f"it requires cache_layout='paged', got {layout_name!r}")
+
+    self.model = Model(cfg, context_len=context_len)
     if params is None:
       params = jax.jit(self.model.init)(jax.random.PRNGKey(seed))
     self.params = params
     self._prefill = jax.jit(
         lambda p, t, ln: self.model.prefill(p, t, None, lengths=ln))
-    # caches are donated on both hot paths: decode updates in place instead
-    # of reallocating the full (L, B, context) KV tree every token
-    self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
-    # slot is a traced operand (one compile covers every slot) and the batched
-    # cache is donated, so admission updates buffers in place instead of
-    # copying the whole tree per admit
-    self._insert = jax.jit(
-        lambda cache, c1, slot: jax.tree_util.tree_map(
-            lambda c, x: jax.lax.dynamic_update_slice_in_dim(
-                c, x.astype(c.dtype), slot, axis=1), cache, c1),
-        donate_argnums=(0,))
+    # physical cache storage + its compiled admit/decode programs
+    self.layout = cache_registry.make_layout(
+        layout_name, self.model, max_batch,
+        block_size=block_size, num_blocks=num_blocks)
 
-    self.cache = self.model.init_cache(max_batch)
+    self.stats = EngineStats(max_batch=max_batch)
     self._lengths = np.zeros((max_batch,), np.int32)
     self._cur = np.zeros((max_batch,), np.int32)
     self._slots: List[Optional[RequestHandle]] = [None] * max_batch
@@ -129,6 +183,11 @@ class ServeEngine:
       raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
     if prompt.shape[0] + max_new_tokens > self.context_len:
       raise ValueError("prompt + max_new_tokens exceeds context capacity")
+    if not self.layout.fits(prompt.shape[0] + max_new_tokens,
+                            prompt.shape[0]):
+      raise ValueError(
+          f"request needs more KV blocks than the whole pool holds "
+          f"({self.layout!r}); raise num_blocks or shorten the request")
     req = RequestHandle(rid=self._next_rid, prompt=prompt,
                         max_new_tokens=max_new_tokens)
     self._next_rid += 1
@@ -143,18 +202,33 @@ class ServeEngine:
   def active_count(self) -> int:
     return sum(r is not None for r in self._slots)
 
+  @property
+  def active_requests(self) -> List[Tuple[int, RequestHandle]]:
+    """(slot, request) pairs currently decoding — scheduler's read view."""
+    return [(s, r) for s, r in enumerate(self._slots) if r is not None]
+
   def step(self) -> List[RequestHandle]:
     """Admit queued requests into free slots, run one batched decode step,
     and return the requests that finished this step."""
     finished = self._admit()
     if self.active_count == 0:
       self._step_no += 1
+      self.stats.steps += 1
       return finished
 
-    logits, self.cache = self._decode(
-        self.params, jnp.asarray(self._cur), self.cache,
-        jnp.asarray(self._lengths))
+    # every active row grows by one token this step; secure its block first
+    # (may preempt-and-requeue under the paged scheduler)
+    self._ensure_blocks()
+    if self.active_count == 0:            # everything preempted back to queue
+      self._step_no += 1
+      self.stats.steps += 1
+      return finished
+
+    logits = self.layout.decode(self.params, self._cur, self._lengths)
     next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    self.stats.decode_steps += 1
+    self.stats.busy_slot_steps += self.active_count
+    self.stats.wasted_slot_steps += self.max_batch - self.active_count
 
     for slot, req in enumerate(self._slots):
       if req is None:
@@ -167,7 +241,12 @@ class ServeEngine:
       if (len(req.tokens) >= req.max_new_tokens
           or int(self._lengths[slot]) + 1 >= self.context_len):
         finished.append(self._finish(slot, req))
+      else:
+        # ring-reuse: hand back blocks the policy's own masking retired
+        self.stats.blocks_reclaimed += self.layout.reclaim(
+            slot, int(self._lengths[slot]))
     self._step_no += 1
+    self.stats.steps += 1
     return finished
 
   def run_to_completion(self, max_steps: int = 10_000) -> List[RequestHandle]:
@@ -186,19 +265,25 @@ class ServeEngine:
   # -------------------------------------------------------------------------
 
   def _admit(self) -> List[RequestHandle]:
-    """Prefill queued requests into free slots (one compile: fixed pad)."""
+    """Prefill scheduler-picked requests into free slots."""
     finished = []
-    for slot in range(self.max_batch):
-      if self._slots[slot] is not None or not self._queue:
-        continue
-      req = self._queue.popleft()
+    free_slots = [s for s, r in enumerate(self._slots) if r is None]
+    while free_slots and self._queue:
+      idx = self.scheduler.pick(self._queue, self)
+      if idx is None:
+        break
+      req = self._queue[idx]
+      if not self.layout.can_admit(req.prompt_len,
+                                   req.prompt_len + req.max_new_tokens):
+        break                       # wait for running requests to free blocks
+      del self._queue[idx]
+      slot = free_slots.pop(0)
       padded = np.zeros((1, self.prompt_capacity), np.int32)
       padded[0, :req.prompt_len] = req.prompt
       logits, slot_cache = self._prefill(
           self.params, jnp.asarray(padded),
           jnp.asarray([req.prompt_len], jnp.int32))
-      self.cache = self._insert(self.cache, slot_cache,
-                                jnp.asarray(slot, jnp.int32))
+      self.layout.admit(slot, slot_cache, req.prompt_len)
       first = int(np.asarray(jnp.argmax(logits[0], axis=-1)))
       req.slot = slot
       req.admitted_step = self._step_no
@@ -206,14 +291,57 @@ class ServeEngine:
       self._slots[slot] = req
       self._lengths[slot] = req.prompt_len
       self._cur[slot] = first
+      self.stats.admits += 1
       if len(req.tokens) >= req.max_new_tokens:
         finished.append(self._finish(slot, req))
+        free_slots.insert(0, slot)
     return finished
+
+  def _ensure_blocks(self) -> None:
+    """Grow every active slot's block table to hold this step's token,
+    preempting (scheduler permitting) when the pool runs dry."""
+    while True:
+      growers = [(slot, self.layout.need_blocks(slot, int(ln) + 1))
+                 for slot, ln in enumerate(self._lengths)
+                 if self._slots[slot] is not None]
+      total_need = sum(n for _, n in growers)
+      if total_need <= self.layout.free_blocks:
+        for slot, need in growers:
+          if need and not self.layout.ensure(
+              slot, int(self._lengths[slot]) + 1):
+            raise AssertionError("pool accounting drifted during growth")
+        return
+      victim = self.scheduler.on_exhausted(self)
+      if victim is None:
+        raise RuntimeError(
+            f"KV block pool exhausted (need {total_need}, free "
+            f"{self.layout.free_blocks}) and scheduler "
+            f"{self.scheduler.name!r} cannot preempt; use --scheduler paged "
+            f"or a larger --num-blocks")
+      self._preempt(victim)
+
+  def _preempt(self, slot: int) -> None:
+    """Recompute preemption: release the slot, requeue the request; greedy
+    decoding regenerates its tokens identically on re-admission."""
+    req = self._slots[slot]
+    assert req is not None, f"preempting empty slot {slot}"
+    req.tokens = []
+    req.slot = None
+    req.admitted_step = None
+    req.preempt_count += 1
+    self.layout.release(slot)
+    self._slots[slot] = None
+    self._lengths[slot] = 0
+    self._cur[slot] = 0
+    self._queue.appendleft(req)
+    self.stats.preempts += 1
 
   def _finish(self, slot: int, req: RequestHandle) -> RequestHandle:
     req.done = True
     req.finished_step = self._step_no
+    self.layout.release(slot)
     self._slots[slot] = None
     self._lengths[slot] = 0
     self._cur[slot] = 0
+    self.stats.finished += 1
     return req

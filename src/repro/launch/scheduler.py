@@ -1,0 +1,126 @@
+"""Pluggable request schedulers for the continuous-batching serve engine.
+
+PR 1's `ServeEngine` hard-coded FIFO admission; the ROADMAP names "a
+scheduler smarter than FIFO" as an open scale item.  This module makes the
+admit/preempt decision a string-keyed protocol, mirroring how KV methods
+are `CachePolicy` keys and storage is a `CacheLayout` key:
+
+    from repro.launch import scheduler
+    sched = scheduler.make("paged")
+
+| key     | admit order                  | on block exhaustion            |
+|---------|------------------------------|--------------------------------|
+| `fifo`  | submission order             | error (cannot preempt)         |
+| `sjf`   | shortest prompt first        | error (cannot preempt)         |
+| `paged` | first request whose prompt   | preempt-and-requeue the        |
+|         | fits the free block pool     | youngest running request       |
+
+Schedulers see the engine read-only: the queue of `RequestHandle`s, the
+active slots, and the layout's block pool.  The engine performs the actual
+prefill/admit/preempt; a scheduler only answers "which request next?" and
+"who yields when the pool runs dry?".
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+_SCHEDULERS: Dict[str, type] = {}
+
+
+def register(name: str) -> Callable[[type], type]:
+  def deco(cls: type) -> type:
+    if name in _SCHEDULERS and _SCHEDULERS[name] is not cls:
+      raise ValueError(f"scheduler {name!r} already registered")
+    _SCHEDULERS[name] = cls
+    cls.name = name
+    return cls
+  return deco
+
+
+def get(name: str) -> type:
+  try:
+    return _SCHEDULERS[name]
+  except KeyError:
+    raise KeyError(
+        f"unknown scheduler {name!r}; available: {names()}") from None
+
+
+def make(name: str):
+  return get(name)()
+
+
+def names() -> Tuple[str, ...]:
+  return tuple(sorted(_SCHEDULERS))
+
+
+class Scheduler:
+  """Admission-order + preemption protocol driving `ServeEngine.step`."""
+  name: str = "base"
+  #: True if this scheduler gates admission on the layout's block pool and
+  #: resolves exhaustion by preempting (requires a paged layout to matter).
+  preemptive: bool = False
+
+  def pick(self, queue: Sequence, engine) -> Optional[int]:
+    """Index into `queue` of the next request to admit, or None to wait."""
+    raise NotImplementedError
+
+  def on_exhausted(self, engine) -> Optional[int]:
+    """Block pool ran dry mid-decode: slot to preempt-and-requeue, or None
+    if this scheduler cannot preempt (the engine then raises)."""
+    del engine
+    return None
+
+  def __repr__(self) -> str:
+    return f"{type(self).__name__}()"
+
+
+@register("fifo")
+class FIFOScheduler(Scheduler):
+  """Strict submission order (PR 1 behavior)."""
+
+  def pick(self, queue, engine):
+    del engine
+    return 0 if queue else None
+
+
+@register("sjf")
+class SJFScheduler(Scheduler):
+  """Shortest-prompt-first: minimizes mean wait under mixed prompt lengths
+  (classic shortest-job-first, with prompt length as the job-size proxy)."""
+
+  def pick(self, queue, engine):
+    del engine
+    if not queue:
+      return None
+    return min(range(len(queue)), key=lambda i: (queue[i].prompt_len,
+                                                 queue[i].rid))
+
+
+@register("paged")
+class PagedScheduler(Scheduler):
+  """Admit-on-available-blocks with preempt-and-requeue on exhaustion.
+
+  Admission walks the queue in submission order and admits the first request
+  whose prompt fits the free block pool (short requests may overtake one
+  stuck long prompt, but nothing starves: blocks free monotonically as
+  running requests finish).  When a decode step cannot grow every running
+  request by a block, the *youngest* running request yields — it has the
+  least work to redo under recompute-preemption — and is requeued at the
+  queue head.  Never preempts the last running request: a request that fits
+  the pool alone (checked at submit) can always finish solo.
+  """
+  preemptive = True
+
+  def pick(self, queue, engine):
+    for i, req in enumerate(queue):
+      if engine.layout.can_admit(req.prompt_len,
+                                 req.prompt_len + req.max_new_tokens):
+        return i
+    return None
+
+  def on_exhausted(self, engine):
+    active = [(req.admitted_step, req.rid, slot)
+              for slot, req in engine.active_requests]
+    if len(active) <= 1:
+      return None
+    return max(active)[2]

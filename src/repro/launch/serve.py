@@ -13,7 +13,12 @@ evictions and attends directly on compressed data.
 
 `--engine` runs the same architecture through the continuous-batching
 `ServeEngine` instead: staggered prompt lengths admitted into one batch,
-finishing at different steps.
+finishing at different steps.  Engine storage and admission are pluggable:
+`--cache-layout {contiguous,paged}` picks the physical KV layout (paged =
+fixed-size token blocks from a shared pool, `--kv-block-size`/`--num-blocks`)
+and `--scheduler {fifo,sjf,paged}` the admission policy (`paged` admits on
+available blocks and preempts-and-requeues on pool exhaustion).  Per-run
+occupancy/waste/preempt counters print from `engine.stats`.
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ from repro.common.timing import Stopwatch
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.core import cache_registry
+from repro.launch import scheduler as scheduler_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh
 from repro.parallel import sharding as shd
@@ -118,10 +124,14 @@ def run_engine_demo(args) -> None:
   """Continuous batching: mixed prompt lengths, staggered finishes."""
   from repro.launch.engine import ServeEngine
   cfg = get_arch(args.arch, reduced=args.reduced)
-  cfg = dataclasses.replace(cfg, cache_policy=args.cache_policy)
+  cfg = dataclasses.replace(cfg, cache_policy=args.cache_policy,
+                            cache_layout=args.cache_layout,
+                            scheduler=args.scheduler,
+                            kv_block_size=args.kv_block_size)
   context = args.prompt_len + args.gen
   engine = ServeEngine(cfg, context_len=context, max_batch=args.batch,
-                       prompt_capacity=args.prompt_len)
+                       prompt_capacity=args.prompt_len,
+                       num_blocks=args.num_blocks)
   key = jax.random.PRNGKey(0)
   # drain one throwaway request so the three jit compiles land outside the
   # timed section (same reason ServeRun has warmup) — it must ask for >= 2
@@ -141,10 +151,21 @@ def run_engine_demo(args) -> None:
     done = engine.run_to_completion()
   n_tok = sum(len(r.tokens) for r in done)
   print(f"engine: {len(done)} requests, {n_tok} tokens in {sw.seconds:.2f}s "
-        f"({n_tok / max(sw.seconds, 1e-9):.1f} tok/s)")
+        f"({n_tok / max(sw.seconds, 1e-9):.1f} tok/s) "
+        f"[layout={args.cache_layout} scheduler={args.scheduler}]")
+  print(f"engine stats: {engine.stats.summary()}")
+  by = engine.layout.bytes(active_slots=engine.active_count)
+  if by["kind"] == "paged":
+    print(f"kv memory: peak {by['peak_blocks']}/{by['num_blocks']} blocks "
+          f"x {by['block_bytes']} B (+{by['resident_bytes_per_slot']} B/slot "
+          f"resident), pool capacity {by['capacity_bytes']} B")
+  else:
+    print(f"kv memory: {by['total_bytes']} B contiguous "
+          f"({by['per_slot_bytes']} B/slot x {args.batch} slots)")
   for r in done:
     print(f"  rid={r.rid} prompt_len={r.prompt_len} admitted@{r.admitted_step}"
-          f" finished@{r.finished_step} tokens={r.tokens[:8]}")
+          f" finished@{r.finished_step} preempts={r.preempt_count} "
+          f"tokens={r.tokens[:8]}")
 
 
 def main():
@@ -156,6 +177,19 @@ def main():
   ap.add_argument("--gen", type=int, default=32)
   ap.add_argument("--cache-policy", default="pq",
                   choices=cache_registry.names())
+  ap.add_argument("--cache-layout", default="contiguous",
+                  choices=cache_registry.layout_names(),
+                  help="physical KV storage (engine mode): contiguous slabs "
+                       "or paged token blocks")
+  ap.add_argument("--scheduler", default="fifo",
+                  choices=scheduler_lib.names(),
+                  help="engine admission policy "
+                       "(paged requires --cache-layout paged)")
+  ap.add_argument("--kv-block-size", type=int, default=16,
+                  help="paged-layout token-block granularity")
+  ap.add_argument("--num-blocks", type=int, default=None,
+                  help="paged-layout pool size (default: batch * "
+                       "capacity/block, i.e. contiguous-equivalent)")
   ap.add_argument("--no-pq", action="store_true",
                   help="legacy alias for --cache-policy exact")
   ap.add_argument("--engine", action="store_true",

@@ -20,6 +20,9 @@ def _spec(cap, d, **kw):
   kw.setdefault("sink", 4)
   kw.setdefault("recent", 8)
   kw.setdefault("dtype", jnp.float32)
+  # the spec-level default window (512) exceeds these smoke capacities, which
+  # CacheSpec now rejects at construction
+  kw.setdefault("window", cap)
   return cache_api.CacheSpec(capacity=cap, head_dim=d, **kw)
 
 

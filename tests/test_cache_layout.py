@@ -1,0 +1,228 @@
+"""Paged KV memory: allocator/table invariants, block gather/scatter
+round trips, CacheSpec construction-time validation, and allocated-block
+(not capacity) byte reporting under paging."""
+import dataclasses
+
+try:
+  from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback shim
+  from hypothesis_compat import given, settings, strategies as st
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import cache_api, cache_layout, cache_registry
+from repro.core import kv_cache as kvc
+from repro.core import pq as pqlib
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator / BlockTableManager invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), num_blocks=st.integers(1, 24))
+def test_allocator_random_traffic_never_double_allocates_or_leaks(
+    seed, num_blocks):
+  rng = np.random.default_rng(seed)
+  alloc = cache_layout.BlockAllocator(num_blocks)
+  held = {}  # owner -> list of ids
+  for _ in range(200):
+    if rng.random() < 0.5:
+      owner = int(rng.integers(0, 4))
+      n = int(rng.integers(0, num_blocks + 2))
+      ids = alloc.alloc(n, owner=owner)
+      if n > num_blocks - sum(len(v) for v in held.values()):
+        assert ids is None  # over-ask must fail atomically
+      else:
+        assert ids is not None and len(ids) == n
+        flat = [i for v in held.values() for i in v]
+        assert not set(ids) & set(flat), "double allocation"
+        held.setdefault(owner, []).extend(ids)
+    elif held:
+      owner = list(held)[int(rng.integers(0, len(held)))]
+      ids = held.pop(owner)
+      k = int(rng.integers(0, len(ids) + 1))
+      alloc.free(ids[:k], owner=owner)
+      if ids[k:]:
+        held[owner] = ids[k:]
+    alloc.check()
+  assert alloc.free_count + alloc.allocated_count == num_blocks
+
+
+def test_allocator_rejects_double_free_and_wrong_owner():
+  alloc = cache_layout.BlockAllocator(4)
+  ids = alloc.alloc(2, owner="a")
+  with pytest.raises(ValueError):
+    alloc.free(ids, owner="b")        # wrong owner
+  alloc.free(ids, owner="a")
+  with pytest.raises(ValueError):
+    alloc.free(ids, owner="a")        # double free
+
+
+class _FakeCodec:
+  """Minimal codec surface for host-side table tests (no model needed)."""
+
+  def __init__(self, sink=0, window=0, capacity=64):
+    self._sink, self._window, self._cap = sink, window, capacity
+
+  def token_extent(self, n):
+    return min(n, self._cap)
+
+  def pinned_tokens(self):
+    return self._sink
+
+  def dead_below(self, n):
+    return max(n - self._window, 0) if self._window else 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), num_blocks=st.integers(2, 20),
+       window=st.sampled_from([0, 24]))
+def test_table_manager_random_admit_grow_reclaim_release(
+    seed, num_blocks, window):
+  """Random admit/grow/reclaim/preempt traffic: tables never map one physical
+  block twice, and a full drain returns every block to the free list."""
+  rng = np.random.default_rng(seed)
+  block, slots, cap = 8, 3, 64
+  mgr = cache_layout.BlockTableManager(
+      num_blocks, cap // block, slots, block,
+      _FakeCodec(sink=4, window=window, capacity=cap))
+  lengths = [0] * slots
+  for _ in range(150):
+    slot = int(rng.integers(0, slots))
+    op = rng.random()
+    if lengths[slot] == 0 and op < 0.5:
+      want = int(rng.integers(1, cap))
+      if mgr.admit(slot, want):
+        lengths[slot] = want
+    elif lengths[slot] > 0:
+      if op < 0.5 and lengths[slot] < cap:
+        if mgr.ensure(slot, lengths[slot] + 1):
+          lengths[slot] += 1
+      elif op < 0.75:
+        mgr.reclaim(slot, lengths[slot])
+      else:
+        mgr.release(slot)          # finish or preempt-and-requeue
+        lengths[slot] = 0
+    mgr.check_invariants()
+  for slot in range(slots):
+    mgr.release(slot)
+  assert mgr.free_count == num_blocks, "blocks leaked after drain"
+
+
+# ---------------------------------------------------------------------------
+# block gather/scatter numerical core
+# ---------------------------------------------------------------------------
+
+def test_blockify_gather_scatter_roundtrip(rng):
+  h, n, d, block = 2, 48, 4, 8
+  nb = n // block
+  dense = jnp.asarray(rng.normal(size=(h, n, d)), jnp.float32)
+  blocks = kvc.blockify(dense, 1, block)
+  assert blocks.shape == (nb, h, block, d)
+  np.testing.assert_array_equal(np.asarray(kvc.unblockify(blocks, 1)),
+                                np.asarray(dense))
+
+  # scatter into a shuffled pool, gather back through the same table
+  pool = jnp.zeros((nb + 1, h, block, d), jnp.float32)  # +1 trash block
+  table = jnp.asarray(rng.permutation(nb), jnp.int32)
+  pool = kvc.scatter_blocks(pool, table, dense, 1)
+  out = kvc.gather_blocks(pool, table, 1)
+  np.testing.assert_array_equal(np.asarray(out), np.asarray(dense))
+
+
+def test_two_tables_in_one_pool_stay_disjoint(rng):
+  """Scattering request B never touches request A's blocks (the 'corrupt
+  another request's tokens' invariant, at the primitive level)."""
+  h, n, d, block = 1, 32, 4, 8
+  nb = n // block
+  pool = jnp.zeros((2 * nb + 1, h, block, d), jnp.float32)
+  a = jnp.asarray(rng.normal(size=(h, n, d)), jnp.float32)
+  b = jnp.asarray(rng.normal(size=(h, n, d)), jnp.float32)
+  t_a = jnp.asarray([0, 2, 4, 6], jnp.int32)
+  t_b = jnp.asarray([7, 5, 3, 1], jnp.int32)
+  pool = kvc.scatter_blocks(pool, t_a, a, 1)
+  pool = kvc.scatter_blocks(pool, t_b, b, 1)
+  np.testing.assert_array_equal(np.asarray(kvc.gather_blocks(pool, t_a, 1)),
+                                np.asarray(a))
+  np.testing.assert_array_equal(np.asarray(kvc.gather_blocks(pool, t_b, 1)),
+                                np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# CacheSpec construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_cachespec_rejects_bad_geometry():
+  ok = dict(capacity=64, head_dim=16, window=64)
+  cache_api.CacheSpec(**ok)  # sanity
+  with pytest.raises(ValueError, match="divisible by block"):
+    cache_api.CacheSpec(capacity=100, head_dim=16, window=64, block=16)
+  with pytest.raises(ValueError, match="keep_frac"):
+    cache_api.CacheSpec(capacity=64, head_dim=16, window=64, keep_frac=0.0)
+  with pytest.raises(ValueError, match="keep_frac"):
+    cache_api.CacheSpec(capacity=64, head_dim=16, window=64, keep_frac=-0.5)
+  with pytest.raises(ValueError, match="window"):
+    cache_api.CacheSpec(capacity=64, head_dim=16, window=65)
+  with pytest.raises(ValueError, match="capacity"):
+    cache_api.CacheSpec(capacity=0, head_dim=16, window=1)
+  with pytest.raises(ValueError, match="body_capacity"):
+    cache_api.CacheSpec(
+        capacity=96, head_dim=16, window=96, block=16,
+        pq=kvc.PQCacheConfig(sink=8, recent=32, body_capacity=56,
+                             pq=pqlib.PQConfig(m=4, k=16)))
+
+
+def test_policy_codec_surface():
+  """token_extent / paged_capacity / paged_axes drive layout geometry."""
+  spec = cache_api.CacheSpec(capacity=64, head_dim=16, window=32, sink=4,
+                             recent=8,
+                             pq=kvc.PQCacheConfig(
+                                 sink=4, recent=8, body_capacity=64,
+                                 pq=pqlib.PQConfig(m=4, k=16)))
+  exact = cache_registry.make("exact", spec)
+  assert exact.paged_capacity() == 64
+  assert exact.token_extent(10) == 10
+  assert exact.dead_below(50) == 0
+  assert exact.paged_axes() == kvc.ExactLayerCache(k=2, v=2)
+
+  stream = cache_registry.make("streamingllm", spec)
+  assert stream.pinned_tokens() == 4
+  assert stream.dead_below(50) == 50 - 32
+
+  pq = cache_registry.make("pq", spec)
+  assert pq.paged_capacity() == 64
+  assert pq.token_extent(10) == 0          # sink+recent live in the rings
+  assert pq.token_extent(20) == 8
+  axes = pq.paged_axes()
+  assert axes.key_indices == 2 and axes.sink_k == cache_api.RESIDENT
+
+
+# ---------------------------------------------------------------------------
+# allocated-block byte reporting (acceptance: not capacity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ("exact", "pq"))
+def test_paged_bytes_report_allocated_blocks_not_capacity(policy):
+  from repro.launch.engine import ServeEngine
+  dtype = "float32" if policy == "exact" else "bfloat16"
+  cfg = dataclasses.replace(get_arch("tinyllama-1.1b", reduced=True),
+                            cache_policy=policy, dtype_str=dtype)
+  eng = ServeEngine(cfg, context_len=96, max_batch=2, prompt_capacity=64,
+                    cache_layout="paged", scheduler="paged")
+  eng.submit(list(range(2, 60)), max_new_tokens=4)
+  eng.step()                                   # admit + one decode step
+  by = eng.layout.bytes(active_slots=eng.active_count)
+  assert by["kind"] == "paged"
+  assert by["allocated_blocks"] == eng.layout.manager.allocated_count > 0
+  # one short request must cost less than the full pool capacity
+  assert by["total_bytes"] < by["capacity_bytes"]
+  expected = (by["allocated_blocks"] * by["block_bytes"]
+              + eng.active_count * by["resident_bytes_per_slot"])
+  assert by["total_bytes"] == expected
+  eng.run_to_completion()
+  assert eng.layout.bytes()["allocated_blocks"] == 0   # all freed on finish
+  eng.layout.manager.check_invariants()
