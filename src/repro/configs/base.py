@@ -55,10 +55,17 @@ class ModelConfig:
   cache_policy: str = "pq"         # registry key: exact | pq | skvq | snapkv |
                                    # streamingllm | pqcache (core/cache_registry)
   cache_layout: str = "contiguous"  # physical KV storage: contiguous | paged
-                                    # (core/cache_layout)
+                                    # | tiered (core/cache_layout)
   scheduler: str = "fifo"          # serve-engine admission: fifo | sjf | paged
-                                   # (launch/scheduler)
+                                   # | tiered (launch/scheduler)
   kv_block_size: int = 16          # paged-layout token-block granularity
+  host_blocks: Optional[int] = None  # tiered-layout host (tier 1) pool size
+                                     # in blocks; None -> layout default (4x
+                                     # device), 0 -> no host tier (exhaustion
+                                     # falls back to recompute preemption)
+  spill_codec: str = "raw"         # tiered-layout exact-KV spill codec:
+                                   # raw | int8 (PQ codes always spill
+                                   # verbatim — they ARE the compressed form)
   stream_window: int = 512         # streamingllm sliding window (clamped to
                                    # context; paged layout ring-reuses blocks
                                    # that age out of it)
@@ -123,7 +130,9 @@ class ModelConfig:
         # the streaming window is clamped to small contexts (window ==
         # capacity keeps everything, same effective behavior)
         window=min(self.stream_window, context_len),
-        block=self.kv_block_size if self.cache_layout == "paged" else 0,
+        block=(self.kv_block_size
+               if self.cache_layout in ("paged", "tiered") else 0),
+        spill_codec=self.spill_codec,
         pq=self.pq_cache_config(context_len) if name == "pq" else None)
     return cache_registry.make(name, spec)
 

@@ -68,6 +68,9 @@ class CacheSpec:
   group: int = 32            # skvq channel-group size
   keep_frac: float = 0.25    # snapkv / pqcache kept-token fraction
   block: int = 0             # paged-layout token-block size (0 = contiguous)
+  spill_codec: str = "raw"   # tiered-layout float-KV spill codec: raw | int8
+                             # (int8 reuses the skvq per-group machinery and
+                             # is lossy — PQ code rows always spill verbatim)
   pq: Optional[kvc.PQCacheConfig] = None   # aqpim geometry (policy "pq")
   pq_select: Optional[pqlib.PQConfig] = None  # pqcache ANN-index codec
   scale: Optional[float] = None            # softmax scale; None -> d^-0.5
@@ -88,6 +91,9 @@ class CacheSpec:
           f"{self.window}")
     if self.block < 0:
       raise ValueError(f"block must be >= 0, got {self.block}")
+    if self.spill_codec not in ("raw", "int8"):
+      raise ValueError(
+          f"spill_codec must be 'raw' or 'int8', got {self.spill_codec!r}")
     if self.block and self.capacity % self.block:
       raise ValueError(
           f"capacity {self.capacity} not divisible by block size "
@@ -174,6 +180,15 @@ class CachePolicy:
     and may be reclaimed (ring-reuse); 0 means nothing is reclaimable."""
     del length
     return 0
+
+  def spill_codecs(self):
+    """Pytree of spill-codec keys, same structure as `paged_axes()`: how each
+    *paged* buffer crosses the device->host tier boundary (`core.tiers`).
+    RESIDENT leaves (rings, codebooks) always spill raw — they must survive a
+    swap-out bit-exactly.  Default: everything spills verbatim, which for
+    AQPIM's PQ code rows *is* the compressed representation — the point of
+    the paper's communication claim."""
+    return jax.tree_util.tree_map(lambda ax: "raw", self.paged_axes())
 
   def __repr__(self) -> str:
     return f"{type(self).__name__}(capacity={self.spec.capacity})"
@@ -263,6 +278,15 @@ class _ExactStorePolicy(CachePolicy):
     if self.tracks_weights:
       return WeightedLayerCache(k=2, v=2, w=2)
     return kvc.ExactLayerCache(k=2, v=2)
+
+  def spill_codecs(self):
+    # exact KV may spill raw or int8 (CacheSpec.spill_codec); importance
+    # weights drive top-k selection and always spill raw — quantizing them
+    # would perturb snapkv's eviction choices across a swap
+    c = self.spec.spill_codec
+    if self.tracks_weights:
+      return WeightedLayerCache(k=c, v=c, w="raw")
+    return kvc.ExactLayerCache(k=c, v=c)
 
 
 @cache_registry.register("exact")

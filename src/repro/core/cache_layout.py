@@ -12,7 +12,14 @@ long-context PIM serving).  This module splits *what* is cached (a
   ``PagedLayout``       a shared pool of fixed-size token blocks with a
                         `BlockAllocator` and per-request block tables —
                         alloc/free/gather/scatter, ring-reuse for the
-                        streaming window.
+                        streaming window;
+  ``TieredLayout``      paged storage over a *two-tier* refcounted pool
+                        (`core.tiers`): device tier 0 + large host tier 1,
+                        compressed spill/fetch through each policy's
+                        per-buffer spill codecs, residency state machine,
+                        and a `TransferLedger` measuring tier-boundary
+                        bytes (the paper's compressed-vs-raw traffic
+                        claim, measured).
 
 A layout pages *any* policy's state through the codec surface on
 `CachePolicy` (`paged_axes` / `token_extent` / `paged_capacity`): AQPIM's
@@ -40,6 +47,7 @@ import numpy as np
 
 from repro.core import cache_registry
 from repro.core import kv_cache as kvc
+from repro.core import tiers as tiersmod
 from repro.core.cache_api import RESIDENT
 
 
@@ -116,8 +124,11 @@ class BlockTableManager:
   """
 
   def __init__(self, num_blocks: int, blocks_per_req: int, max_slots: int,
-               block: int, policy):
-    self.allocator = BlockAllocator(num_blocks)
+               block: int, policy, allocator=None):
+    # any BlockAllocator-shaped pool works; TieredLayout passes a device-tier
+    # view of a refcounted `tiers.TieredBlockPool`
+    self.allocator = allocator if allocator is not None else BlockAllocator(
+        num_blocks)
     self.block = block
     self.blocks_per_req = blocks_per_req
     self.trash = num_blocks
@@ -137,6 +148,24 @@ class BlockTableManager:
   def blocks_for(self, length: int) -> int:
     """Blocks needed to hold `length` cached tokens under this codec."""
     return -(-self.policy.token_extent(int(length)) // self.block)
+
+  def high_water(self, slot: int) -> int:
+    """Logical blocks this slot has ever grown to (restored on swap-in)."""
+    return int(self._hwm[slot])
+
+  def adopt(self, slot: int, pairs, hwm: int) -> None:
+    """Install already-allocated blocks into an empty slot's table (fetch
+    completion): `pairs` are (logical_j, physical_id) with ring-reuse holes
+    preserved.  The blocks must already be owned by `slot`."""
+    if self._hwm[slot] != 0 or (self.tables[slot] != self.trash).any():
+      raise AssertionError(f"slot {slot} adopted into while occupied")
+    owned = set(self.allocator.owned(slot))
+    for j, pid in pairs:
+      if pid not in owned:
+        raise AssertionError(f"adopting block {pid} not owned by slot {slot}")
+      self.tables[slot, j] = pid
+    self._hwm[slot] = hwm
+    self.peak_allocated = max(self.peak_allocated, self.allocated_count)
 
   def need_blocks(self, slot: int, length: int) -> int:
     return max(self.blocks_for(length) - int(self._hwm[slot]), 0)
@@ -207,6 +236,10 @@ class CacheLayout:
   pool, so schedulers can query them uniformly.
   """
   name: str = "base"
+  #: True if this layout manages a shared block pool (pool-gating schedulers
+  #: require one); `spills` additionally marks a host spill tier.
+  pooled: bool = False
+  spills: bool = False
 
   # -- admission / lifetime --------------------------------------------------
   def fits(self, total_len: int, prompt_len: int = 0) -> bool:
@@ -263,8 +296,9 @@ class ContiguousLayout(CacheLayout):
   """
 
   def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
-               num_blocks: Optional[int] = None):
-    del block_size, num_blocks   # no block pool
+               num_blocks: Optional[int] = None,
+               host_blocks: Optional[int] = None):
+    del block_size, num_blocks, host_blocks   # no block pool, no host tier
     self.model = model
     self.max_batch = max_batch
     self.storage = model.init_cache(max_batch)
@@ -309,8 +343,12 @@ class PagedLayout(CacheLayout):
   compiled step.
   """
 
+  pooled = True
+
   def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
-               num_blocks: Optional[int] = None):
+               num_blocks: Optional[int] = None,
+               host_blocks: Optional[int] = None):
+    del host_blocks   # single-tier pool; TieredLayout consumes it
     policy = model.cache_policy
     if policy is None:
       raise ValueError("paged layout needs a KV cache policy "
@@ -326,7 +364,8 @@ class PagedLayout(CacheLayout):
     self.blocks_per_req = cap // self.block
     self.num_blocks = int(num_blocks or max_batch * self.blocks_per_req)
     self.manager = BlockTableManager(
-        self.num_blocks, self.blocks_per_req, max_batch, self.block, policy)
+        self.num_blocks, self.blocks_per_req, max_batch, self.block, policy,
+        allocator=self._make_allocator(self.num_blocks))
     self._axes = policy.paged_axes()
 
     template = model.init_cache(max_batch)
@@ -379,6 +418,11 @@ class PagedLayout(CacheLayout):
 
     self._decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
     self._admit_fused = jax.jit(admit_fused, donate_argnums=(0,))
+
+  def _make_allocator(self, num_blocks: int):
+    """Pool-construction hook: TieredLayout substitutes a device-tier view
+    of a refcounted two-tier pool."""
+    return BlockAllocator(num_blocks)
 
   # -- admission / lifetime --------------------------------------------------
   def fits(self, total_len: int, prompt_len: int = 0) -> bool:
@@ -470,3 +514,236 @@ class PagedLayout(CacheLayout):
   def __repr__(self) -> str:
     return (f"PagedLayout(block={self.block}, num_blocks={self.num_blocks}, "
             f"free={self.free_blocks})")
+
+
+@cache_registry.register_layout("tiered")
+class TieredLayout(PagedLayout):
+  """Two-tier block storage: device pool (tier 0) + large host pool (tier 1).
+
+  Same decodable storage as `PagedLayout`, but pool exhaustion no longer
+  forces preempt-and-recompute: a victim request's blocks *spill* to the
+  host tier through its policy's per-buffer `spill_codecs()` (PQ code rows
+  verbatim, exact KV raw or int8 via the SKVQ machinery), its per-slot
+  resident leaves (rings, codebooks) are saved bit-exactly, and a later
+  `fetch` restores everything and resumes decoding where it left off — with
+  the `TransferLedger` counting the bytes that crossed in each direction.
+
+  Residency state machine per spilled request's blocks:
+  RESIDENT -spill-> SPILLED -prefetch-> IN_FLIGHT -fetch-> RESIDENT.
+  `decode` asserts every table-mapped block is RESIDENT — touching a
+  SPILLED or IN_FLIGHT block is the corruption this machinery must never
+  allow, and the invariant the test suite drives.
+  """
+  spills = True
+
+  def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
+               num_blocks: Optional[int] = None,
+               host_blocks: Optional[int] = None):
+    self._host_blocks_arg = host_blocks       # consumed by _make_allocator
+    super().__init__(model, max_batch, block_size=block_size,
+                     num_blocks=num_blocks)
+    policy = model.cache_policy
+    codec_tree = policy.spill_codecs()
+    if (jax.tree_util.tree_structure(codec_tree)
+        != jax.tree_util.tree_structure(self._axes)):
+      raise ValueError(
+          f"{type(policy).__name__}.spill_codecs() structure does not match "
+          f"paged_axes()")
+    self._axes_leaves = jax.tree_util.tree_leaves(self._axes)
+    self._codec_leaves = jax.tree_util.tree_leaves(codec_tree)
+    for ck in self._codec_leaves:
+      tiersmod.get_codec(ck)                  # fail fast on unknown keys
+    self.ledger = tiersmod.TransferLedger()
+    self.records: Dict[int, tiersmod.SpillRecord] = {}
+
+  def _make_allocator(self, num_blocks: int):
+    host = self._host_blocks_arg
+    # "large host pool": default 4x the device pool, the capacity-wall gap
+    # the host tier exists to absorb.  An explicit 0 is honored (no host
+    # tier: exhaustion falls back to recompute preemption).
+    self.host_blocks = 4 * num_blocks if host is None else int(host)
+    self.pool = tiersmod.TieredBlockPool(num_blocks, self.host_blocks)
+    return tiersmod.TierView(self.pool, tiersmod.DEVICE)
+
+  # -- spill / fetch ---------------------------------------------------------
+  def _live_row(self, slot: int):
+    """(logical_j, device_id) pairs of a slot's table, trash holes skipped."""
+    row = self.manager.tables[slot]
+    return [(j, int(row[j])) for j in range(self.blocks_per_req)
+            if row[j] != self.manager.trash]
+
+  def can_spill(self, slot: int) -> bool:
+    return len(self._live_row(slot)) <= self.pool.free_count(tiersmod.HOST)
+
+  def spill(self, slot: int, rid: int, length: int) -> int:
+    """Swap a slot out: encode its blocks to the host tier, save its
+    resident leaves, free its device blocks.  Returns device blocks freed."""
+    if rid in self.records:
+      raise ValueError(f"request {rid} already spilled")
+    mgr = self.manager
+    live = self._live_row(slot)
+    dev_ids = [pid for _, pid in live]
+    n = len(dev_ids)
+    host_ids = self.pool.alloc(n, owner=rid, tier=tiersmod.HOST)
+    if host_ids is None:
+      raise RuntimeError(
+          f"host pool exhausted spilling slot {slot} "
+          f"(need {n}, free {self.pool.free_count(tiersmod.HOST)})")
+    hwm = mgr.high_water(slot)
+    padded = np.full((self.blocks_per_req,), mgr.trash, np.int32)
+    padded[:n] = dev_ids
+    padded_j = jnp.asarray(padded)
+    payloads: list = []
+    resident_rows: list = []
+    nbytes = raw = 0
+    for ax, ck, st in zip(self._axes_leaves, self._codec_leaves,
+                          jax.tree_util.tree_leaves(self.storage)):
+      if ax == RESIDENT:
+        # per-slot leaves (rings, codebooks) would be overwritten by the
+        # slot's next tenant; they cross the boundary raw (bit-exact)
+        rowv = np.asarray(st[:, slot])
+        payloads.append(None)
+        resident_rows.append(rowv)
+        nbytes += rowv.nbytes
+        raw += rowv.nbytes
+      else:
+        arr = np.asarray(st[padded_j])[:n]
+        enc, nb = tiersmod.get_codec(ck).encode(arr)
+        payloads.append((ck, enc, arr.shape, arr.dtype))
+        resident_rows.append(None)
+        nbytes += nb
+        raw += arr.nbytes
+    mgr.release(slot)                   # device refs -> 0, blocks freed
+    rec = tiersmod.SpillRecord(
+        rid=rid, length=length, hwm=hwm,
+        pairs=[(j, hid) for (j, _), hid in zip(live, host_ids)],
+        payloads=payloads, resident_rows=resident_rows)
+    rec.nbytes, rec.raw_bytes = nbytes, raw
+    self.records[rid] = rec
+    self.ledger.record_spill(nbytes, raw, n)
+    return n
+
+  def can_fetch(self, rid: int, total_len: Optional[int] = None) -> bool:
+    rec = self.records[rid]
+    if rec.state == tiersmod.BLOCK_IN_FLIGHT:
+      return True                       # destination blocks already held
+    need = rec.n_blocks
+    if total_len is not None:
+      # one growth-headroom block (mirrors can_admit), capped at the true
+      # worst case so re-admission can never become impossible
+      need = max(min(need + 1, self.manager.blocks_for(total_len)),
+                 rec.n_blocks)
+    return need <= self.manager.free_count
+
+  def prefetch(self, rid: int) -> bool:
+    """Fetch-ahead hint: allocate IN_FLIGHT destination blocks and stage the
+    decoded payloads now, so the admit on the *next* step only finalizes.
+    Returns False (no change) when the request is not spilled or the device
+    pool cannot hold it yet — it is a hint, never an obligation."""
+    rec = self.records.get(rid)
+    if rec is None or rec.state != tiersmod.BLOCK_SPILLED:
+      return False
+    # same growth-headroom watermark can_fetch applies to the SPILLED path:
+    # starting a transfer into a pool with zero slack would admit a request
+    # whose first growth immediately spills someone else (an avoidable
+    # device<->host round trip)
+    if min(rec.n_blocks + 1, self.num_blocks) > self.manager.free_count:
+      return False
+    ids = self.pool.alloc(rec.n_blocks, owner=("fetch", rid),
+                          state=tiersmod.BLOCK_IN_FLIGHT)
+    if ids is None:
+      return False
+    rec.device_ids = ids
+    rec.staged = self._decode_payloads(rec)
+    rec.state = tiersmod.BLOCK_IN_FLIGHT
+    self.ledger.record_fetch(rec.nbytes, rec.raw_bytes, rec.n_blocks)
+    return True
+
+  def fetch(self, rid: int, slot: int) -> None:
+    """Swap a request back in: blocks RESIDENT, table adopted into `slot`,
+    storage leaves restored, host blocks freed."""
+    rec = self.records.pop(rid)
+    mgr = self.manager
+    if rec.state == tiersmod.BLOCK_SPILLED:   # no fetch-ahead happened
+      ids = self.pool.alloc(rec.n_blocks, owner=("fetch", rid),
+                            state=tiersmod.BLOCK_IN_FLIGHT)
+      if ids is None:
+        self.records[rid] = rec               # restore; caller gated wrongly
+        raise RuntimeError(
+            f"device pool exhausted fetching request {rid} "
+            f"(need {rec.n_blocks}, free {mgr.free_count})")
+      rec.device_ids = ids
+      rec.staged = self._decode_payloads(rec)
+      self.ledger.record_fetch(rec.nbytes, rec.raw_bytes, rec.n_blocks)
+    dev_ids = list(rec.device_ids or [])
+    self.pool.set_state(dev_ids, tiersmod.BLOCK_RESIDENT)
+    self.pool.reassign(dev_ids, ("fetch", rid), slot)
+    mgr.adopt(slot, [(j, did) for (j, _), did in zip(rec.pairs, dev_ids)],
+              rec.hwm)
+    padded = np.full((self.blocks_per_req,), mgr.trash, np.int32)
+    padded[:len(dev_ids)] = dev_ids
+    padded_j = jnp.asarray(padded)
+    leaves, treedef = jax.tree_util.tree_flatten(self.storage)
+    out = []
+    for ax, st, staged, rowv in zip(self._axes_leaves, leaves, rec.staged,
+                                    rec.resident_rows):
+      if ax == RESIDENT:
+        st = st.at[:, slot].set(jnp.asarray(rowv).astype(st.dtype))
+      else:
+        # pad with zero blocks aimed at the trash block: fixed shapes keep
+        # the dispatch cache warm, and trash content is never read
+        pad_shape = (self.blocks_per_req,) + tuple(st.shape[1:])
+        vals = np.zeros(pad_shape, staged.dtype)
+        vals[:len(dev_ids)] = staged
+        st = st.at[padded_j].set(jnp.asarray(vals).astype(st.dtype))
+      out.append(st)
+    self.storage = jax.tree_util.tree_unflatten(treedef, out)
+    self.pool.unref(rec.host_ids, owner=rid, tier=tiersmod.HOST)
+
+  def _decode_payloads(self, rec):
+    return [None if p is None else
+            tiersmod.get_codec(p[0]).decode(p[1], p[2], p[3])
+            for p in rec.payloads]
+
+  # -- compute ---------------------------------------------------------------
+  def decode(self, params, cur, lengths):
+    # the invariant this tier system must never break: a decode step only
+    # touches RESIDENT device blocks (SPILLED/IN_FLIGHT payloads are not in
+    # decodable storage)
+    tables = self.manager.tables
+    live = [int(x) for x in tables[tables != self.manager.trash]]
+    self.pool.assert_state(live, tiersmod.BLOCK_RESIDENT)
+    self.pool.touch(live)               # LRU clock for cold-victim selection
+    return super().decode(params, cur, lengths)
+
+  def lru_victim(self, active, tiebreak=None) -> Optional[int]:
+    """Coldest active slot by last block touch (LRU cold-victim selection).
+
+    `active` is (slot, request) pairs; `tiebreak(request)` orders equally-
+    cold slots (every decoding slot is touched each step, so ties are the
+    common case).  The pool stays a layout-private detail — schedulers call
+    this instead of reaching into it.
+    """
+    active = list(active)
+    if not active:
+      return None
+    if tiebreak is None:
+      tiebreak = lambda req: 0                    # noqa: E731
+    return min(active, key=lambda sr: (self.pool.owner_last_touch(sr[0]),
+                                       tiebreak(sr[1])))[0]
+
+  def bytes(self, active_slots: int = 0) -> dict:
+    d = super().bytes(active_slots)
+    # NOTE: the transfer ledger is deliberately not embedded here — callers
+    # that want it read `layout.ledger.as_dict()` (one source of truth)
+    d.update(
+        kind="tiered", host_blocks=self.host_blocks,
+        host_allocated_blocks=self.pool.allocated_count(tiersmod.HOST),
+        spilled_requests=len(self.records),
+        spilled_payload_bytes=sum(r.nbytes for r in self.records.values()))
+    return d
+
+  def __repr__(self) -> str:
+    return (f"TieredLayout(block={self.block}, num_blocks={self.num_blocks}, "
+            f"host_blocks={self.host_blocks}, free={self.free_blocks}, "
+            f"spilled={len(self.records)})")

@@ -1,0 +1,461 @@
+"""Tiered KV block pools: device tier + host tier with compressed spill/fetch.
+
+The paper's headline systems claim is that moving *raw* activations between
+GPU and CPU accounts for 90-98.5% of decoding latency, and that moving
+*compressed* KV instead is what breaks the capacity wall (abstract, Fig. 13
+`gpu+cpu`).  PR 2's `PagedLayout` still assumes one flat device-resident
+pool, so the only answer to exhaustion is preempt-and-recompute.  This
+module adds the missing memory tier:
+
+  ``TieredBlockPool``   generalizes `cache_layout.BlockAllocator` into a
+                        *refcounted* allocator over two tiers — tier 0 is
+                        the device/PIM pool, tier 1 a large host pool —
+                        with a per-block residency state machine
+                        (BLOCK_RESIDENT / BLOCK_SPILLED / BLOCK_IN_FLIGHT)
+                        and LRU cold-victim selection.  Refcounts are the
+                        groundwork for prefix sharing (copy-on-write block
+                        tables, the next ROADMAP rung): today the engine
+                        holds exactly one reference per block, and the
+                        invariant suite checks counts return to zero.
+  ``SpillCodec``        per-buffer encode/decode applied when a block
+                        crosses the tier boundary: ``raw`` copies verbatim
+                        (AQPIM PQ code rows are already ~int8 codes —
+                        spilling them raw *is* the compressed traffic);
+                        ``int8`` per-block asymmetric uniform quantization
+                        reusing the SKVQ machinery in `core.baselines`.
+  ``TransferLedger``    counts bytes crossing the tier boundary in each
+                        direction (plus the raw-equivalent bytes), making
+                        the paper's compressed-vs-raw traffic ratio a
+                        directly measured quantity, and models the PCIe
+                        time those transfers would cost.
+
+`core.cache_layout.TieredLayout` composes these under the `CacheLayout`
+protocol; `launch.scheduler.TieredScheduler` drives spill-instead-of-
+recompute preemption on top.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Residency states of a physical block's payload.  Device blocks are
+# BLOCK_RESIDENT (decodable) or BLOCK_IN_FLIGHT (a fetch is materializing
+# them; decoding would read garbage).  Host blocks are always BLOCK_SPILLED.
+# Legal transitions: RESIDENT -spill-> SPILLED -prefetch-> IN_FLIGHT
+# -fetch-complete-> RESIDENT.
+BLOCK_RESIDENT = "RESIDENT"
+BLOCK_SPILLED = "SPILLED"
+BLOCK_IN_FLIGHT = "IN_FLIGHT"
+
+DEVICE = 0   # tier 0: device/PIM block pool (decodable storage)
+HOST = 1     # tier 1: large host pool (spill target, never decoded from)
+
+_TIER_STATES = {DEVICE: (BLOCK_RESIDENT, BLOCK_IN_FLIGHT),
+                HOST: (BLOCK_SPILLED,)}
+
+
+@dataclasses.dataclass
+class _BlockMeta:
+  owner: Any
+  refs: int
+  state: str
+  last_touch: int
+
+
+class TieredBlockPool:
+  """Refcounted free-list allocator over two block tiers.
+
+  Owners are opaque tags (the engine uses slot indices on tier 0 and request
+  ids on tier 1).  `alloc` hands out blocks with refcount 1; `ref`/`unref`
+  adjust it and a block returns to the free list only at zero.  Every
+  transition is checked: double alloc, unref of a free block, wrong owner,
+  or an illegal residency transition raises — the invariants the hypothesis
+  suite drives.
+  """
+
+  def __init__(self, device_blocks: int, host_blocks: int):
+    if device_blocks <= 0:
+      raise ValueError(f"device_blocks must be positive, got {device_blocks}")
+    if host_blocks < 0:
+      raise ValueError(f"host_blocks must be >= 0, got {host_blocks}")
+    self.num_blocks = {DEVICE: device_blocks, HOST: host_blocks}
+    self._free: Dict[int, collections.deque] = {
+        DEVICE: collections.deque(range(device_blocks)),
+        HOST: collections.deque(range(host_blocks))}
+    self._meta: Dict[int, Dict[int, _BlockMeta]] = {DEVICE: {}, HOST: {}}
+    self._clock = 0
+
+  # -- accounting ------------------------------------------------------------
+  def free_count(self, tier: int = DEVICE) -> int:
+    return len(self._free[tier])
+
+  def allocated_count(self, tier: int = DEVICE) -> int:
+    return len(self._meta[tier])
+
+  def refcount(self, i: int, tier: int = DEVICE) -> int:
+    meta = self._meta[tier].get(i)
+    return 0 if meta is None else meta.refs
+
+  def state(self, i: int, tier: int = DEVICE) -> Optional[str]:
+    meta = self._meta[tier].get(i)
+    return None if meta is None else meta.state
+
+  def owned(self, owner: Any, tier: int = DEVICE) -> List[int]:
+    return [i for i, m in self._meta[tier].items() if m.owner == owner]
+
+  # -- allocation ------------------------------------------------------------
+  def alloc(self, n: int, owner: Any = None, tier: int = DEVICE,
+            state: Optional[str] = None) -> Optional[List[int]]:
+    """Allocate `n` blocks (refcount 1); None (and no change) if unavailable."""
+    if n < 0:
+      raise ValueError(f"cannot allocate {n} blocks")
+    state = state or (BLOCK_RESIDENT if tier == DEVICE else BLOCK_SPILLED)
+    if state not in _TIER_STATES[tier]:
+      raise ValueError(f"state {state} illegal on tier {tier}")
+    if n > len(self._free[tier]):
+      return None
+    ids = [self._free[tier].popleft() for _ in range(n)]
+    for i in ids:
+      if i in self._meta[tier]:
+        raise AssertionError(f"free list returned owned block {i}")
+      self._meta[tier][i] = _BlockMeta(owner=owner, refs=1, state=state,
+                                       last_touch=self._tick())
+    return ids
+
+  def ref(self, ids: Sequence[int], tier: int = DEVICE) -> None:
+    """Take an additional reference (prefix-sharing groundwork)."""
+    for i in ids:
+      meta = self._require(i, tier)
+      meta.refs += 1
+
+  def unref(self, ids: Sequence[int], owner: Any = None, tier: int = DEVICE
+            ) -> List[int]:
+    """Drop one reference per id; blocks reaching zero return to the free
+    list.  Returns the ids actually freed."""
+    freed = []
+    for i in ids:
+      meta = self._meta[tier].get(i)
+      if meta is None:
+        raise ValueError(f"unref of free tier-{tier} block {i} (double free)")
+      if owner is not None and meta.owner != owner:
+        raise ValueError(
+            f"tier-{tier} block {i} owned by {meta.owner!r}, "
+            f"unreffed by {owner!r}")
+      meta.refs -= 1
+      if meta.refs < 0:
+        raise AssertionError(f"negative refcount on tier-{tier} block {i}")
+      if meta.refs == 0:
+        del self._meta[tier][i]
+        self._free[tier].append(i)
+        freed.append(i)
+    return freed
+
+  # BlockAllocator-compatible alias (TierView delegates here)
+  def free(self, ids: Sequence[int], owner: Any = None, tier: int = DEVICE
+           ) -> None:
+    self.unref(ids, owner=owner, tier=tier)
+
+  def reassign(self, ids: Sequence[int], old_owner: Any, new_owner: Any,
+               tier: int = DEVICE) -> None:
+    """Hand blocks between owners (fetch completion adopts prefetched blocks
+    into the destination slot's table)."""
+    for i in ids:
+      meta = self._require(i, tier)
+      if meta.owner != old_owner:
+        raise ValueError(
+            f"tier-{tier} block {i} owned by {meta.owner!r}, "
+            f"reassigned from {old_owner!r}")
+      meta.owner = new_owner
+
+  # -- residency state machine ----------------------------------------------
+  def set_state(self, ids: Sequence[int], state: str, tier: int = DEVICE
+                ) -> None:
+    if state not in _TIER_STATES[tier]:
+      raise ValueError(f"state {state} illegal on tier {tier}")
+    for i in ids:
+      meta = self._require(i, tier)
+      if meta.state == state:
+        continue
+      legal = (meta.state, state) in ((BLOCK_IN_FLIGHT, BLOCK_RESIDENT),)
+      if not legal:
+        raise ValueError(
+            f"illegal residency transition {meta.state} -> {state} on "
+            f"tier-{tier} block {i}")
+      meta.state = state
+
+  def assert_state(self, ids: Sequence[int], state: str, tier: int = DEVICE
+                   ) -> None:
+    for i in ids:
+      got = self._require(i, tier).state
+      if got != state:
+        raise AssertionError(
+            f"tier-{tier} block {i} is {got}, expected {state}")
+
+  # -- LRU -------------------------------------------------------------------
+  def touch(self, ids: Sequence[int], tier: int = DEVICE) -> None:
+    t = self._tick()
+    for i in ids:
+      self._require(i, tier).last_touch = t
+
+  def owner_last_touch(self, owner: Any, tier: int = DEVICE) -> int:
+    """Most recent touch over the owner's blocks (-1 if it owns none)."""
+    touches = [m.last_touch for m in self._meta[tier].values()
+               if m.owner == owner]
+    return max(touches) if touches else -1
+
+  def lru_owner(self, owners: Sequence[Any], tier: int = DEVICE
+                ) -> Optional[Any]:
+    """Coldest owner: the one whose newest block touch is oldest."""
+    if not owners:
+      return None
+    return min(owners, key=lambda o: self.owner_last_touch(o, tier))
+
+  # -- invariants ------------------------------------------------------------
+  def check(self) -> None:
+    """Per tier: free list and meta map partition [0, num_blocks) exactly,
+    refcounts are positive, and every state is legal for its tier."""
+    for tier in (DEVICE, HOST):
+      free = set(self._free[tier])
+      owned = set(self._meta[tier])
+      if len(free) != len(self._free[tier]):
+        raise AssertionError(f"duplicate ids in tier-{tier} free list")
+      if free & owned:
+        raise AssertionError(
+            f"tier-{tier} blocks both free and owned: {free & owned}")
+      if free | owned != set(range(self.num_blocks[tier])):
+        raise AssertionError(f"tier-{tier} allocator leaked/invented blocks")
+      for i, meta in self._meta[tier].items():
+        if meta.refs <= 0:
+          raise AssertionError(f"tier-{tier} block {i} held with refs<=0")
+        if meta.state not in _TIER_STATES[tier]:
+          raise AssertionError(
+              f"tier-{tier} block {i} in illegal state {meta.state}")
+
+  def _require(self, i: int, tier: int) -> _BlockMeta:
+    meta = self._meta[tier].get(i)
+    if meta is None:
+      raise ValueError(f"tier-{tier} block {i} is not allocated")
+    return meta
+
+  def _tick(self) -> int:
+    self._clock += 1
+    return self._clock
+
+  def __repr__(self) -> str:
+    return (f"TieredBlockPool(device={self.allocated_count(DEVICE)}/"
+            f"{self.num_blocks[DEVICE]}, host={self.allocated_count(HOST)}/"
+            f"{self.num_blocks[HOST]})")
+
+
+class TierView:
+  """`BlockAllocator`-shaped view of one tier of a `TieredBlockPool`, so
+  `cache_layout.BlockTableManager` runs unchanged over the device tier."""
+
+  def __init__(self, pool: TieredBlockPool, tier: int = DEVICE):
+    self.pool = pool
+    self.tier = tier
+
+  @property
+  def num_blocks(self) -> int:
+    return self.pool.num_blocks[self.tier]
+
+  @property
+  def free_count(self) -> int:
+    return self.pool.free_count(self.tier)
+
+  @property
+  def allocated_count(self) -> int:
+    return self.pool.allocated_count(self.tier)
+
+  def alloc(self, n: int, owner: Any = None) -> Optional[List[int]]:
+    return self.pool.alloc(n, owner=owner, tier=self.tier)
+
+  def free(self, ids: Sequence[int], owner: Any = None) -> None:
+    self.pool.unref(ids, owner=owner, tier=self.tier)
+
+  def owned(self, owner: Any) -> List[int]:
+    return self.pool.owned(owner, tier=self.tier)
+
+  def check(self) -> None:
+    self.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# Spill codecs: what a buffer looks like while it lives on the host tier
+# ---------------------------------------------------------------------------
+
+class SpillCodec:
+  """Encode/decode one buffer's blocks across the tier boundary.
+
+  `encode` receives a stacked numpy array of blocks (n, ...) and returns an
+  opaque payload plus the byte count that actually crosses the boundary;
+  `decode` reconstructs the block stack.  Codecs are chosen *per buffer* by
+  `CachePolicy.spill_codecs()` — PQ code rows spill verbatim (they are the
+  compressed representation), exact KV spills raw or via int8.
+  """
+  key: str = "base"
+
+  def encode(self, arr: np.ndarray) -> Tuple[Any, int]:
+    raise NotImplementedError
+
+  def decode(self, payload: Any, shape: Tuple[int, ...], dtype) -> np.ndarray:
+    raise NotImplementedError
+
+
+class RawSpillCodec(SpillCodec):
+  """Verbatim copy: spilled bytes == resident bytes (lossless)."""
+  key = "raw"
+
+  def encode(self, arr: np.ndarray) -> Tuple[Any, int]:
+    payload = np.array(arr, copy=True)
+    return payload, payload.nbytes
+
+  def decode(self, payload: Any, shape, dtype) -> np.ndarray:
+    return np.asarray(payload, dtype=dtype).reshape(shape)
+
+
+class Int8SpillCodec(SpillCodec):
+  """Asymmetric int8 uniform quantization via the SKVQ machinery
+  (`baselines.uniform_quantize` at bits=8, identity channel permutation,
+  one quant group per trailing-axis row).  Lossy for float KV — opt-in via
+  `CacheSpec.spill_codec='int8'`; integer buffers should spill raw instead.
+  """
+  key = "int8"
+
+  def encode(self, arr: np.ndarray) -> Tuple[Any, int]:
+    from repro.core import baselines        # jax-importing; keep lazy so the
+    import jax.numpy as jnp                 # pool stays importable host-side
+    x = np.asarray(arr, np.float32)         # bf16 (ml_dtypes) upcasts cleanly
+    d = x.shape[-1]
+    uq = baselines.uniform_quantize(
+        jnp.asarray(x.reshape(-1, d)), bits=8, group=d, perm=jnp.arange(d))
+    payload = dict(q=np.asarray(uq.q), scale=np.asarray(uq.scale),
+                   zero=np.asarray(uq.zero))
+    nbytes = sum(v.nbytes for v in payload.values())
+    return payload, nbytes
+
+  def decode(self, payload: Any, shape, dtype) -> np.ndarray:
+    from repro.core import baselines
+    import jax.numpy as jnp
+    d = shape[-1]
+    uq = baselines.UniformQuantized(
+        q=jnp.asarray(payload["q"]), scale=jnp.asarray(payload["scale"]),
+        zero=jnp.asarray(payload["zero"]), perm=jnp.arange(d), bits=8)
+    rows = np.asarray(baselines.uniform_dequantize(uq, group=d))
+    return rows.reshape(shape).astype(dtype)
+
+
+SPILL_CODECS: Dict[str, SpillCodec] = {
+    c.key: c() for c in (RawSpillCodec, Int8SpillCodec)}
+
+
+def get_codec(key: str) -> SpillCodec:
+  try:
+    return SPILL_CODECS[key]
+  except KeyError:
+    raise KeyError(f"unknown spill codec {key!r}; available: "
+                   f"{tuple(sorted(SPILL_CODECS))}") from None
+
+
+# ---------------------------------------------------------------------------
+# Transfer ledger: the measured communication claim
+# ---------------------------------------------------------------------------
+
+#: Modeled host link bandwidth (PCIe 4.0 x16 effective ~16 GB/s), the link
+#: the paper's Fig. 11/13 latency model charges raw-activation movement to.
+PCIE_GBPS = 16.0
+
+
+@dataclasses.dataclass
+class TransferLedger:
+  """Bytes crossing the tier boundary, each direction, plus raw equivalents.
+
+  `*_bytes` is what actually crosses (post-codec); `*_raw_bytes` is what the
+  same traffic would cost uncompressed — their ratio is the paper's
+  compressed-vs-raw communication claim, measured instead of modeled.
+  """
+  spill_bytes: int = 0        # device -> host, post-codec
+  spill_raw_bytes: int = 0    # device -> host, uncompressed equivalent
+  fetch_bytes: int = 0        # host -> device, post-codec
+  fetch_raw_bytes: int = 0
+  spill_blocks: int = 0
+  fetch_blocks: int = 0
+  spill_events: int = 0       # swap-out operations (whole-request granularity)
+  fetch_events: int = 0
+  pcie_gbps: float = PCIE_GBPS
+
+  def record_spill(self, nbytes: int, raw_bytes: int, blocks: int) -> None:
+    self.spill_bytes += nbytes
+    self.spill_raw_bytes += raw_bytes
+    self.spill_blocks += blocks
+    self.spill_events += 1
+
+  def record_fetch(self, nbytes: int, raw_bytes: int, blocks: int) -> None:
+    self.fetch_bytes += nbytes
+    self.fetch_raw_bytes += raw_bytes
+    self.fetch_blocks += blocks
+    self.fetch_events += 1
+
+  @property
+  def total_bytes(self) -> int:
+    return self.spill_bytes + self.fetch_bytes
+
+  @property
+  def compression_ratio(self) -> float:
+    """Post-codec / raw bytes over all boundary traffic (1.0 = no savings)."""
+    raw = self.spill_raw_bytes + self.fetch_raw_bytes
+    return self.total_bytes / raw if raw else 1.0
+
+  @property
+  def modeled_pcie_s(self) -> float:
+    """Time the measured boundary traffic would occupy the host link."""
+    return self.total_bytes / (self.pcie_gbps * 1e9)
+
+  def as_dict(self) -> dict:
+    d = dataclasses.asdict(self)
+    d["total_bytes"] = self.total_bytes
+    d["compression_ratio"] = round(self.compression_ratio, 4)
+    d["modeled_pcie_s"] = self.modeled_pcie_s
+    return d
+
+  def summary(self) -> str:
+    return (f"spilled {self.spill_bytes} B ({self.spill_blocks} blocks, "
+            f"{self.spill_events} events), fetched {self.fetch_bytes} B "
+            f"({self.fetch_blocks} blocks, {self.fetch_events} events), "
+            f"{self.compression_ratio:.2f}x of raw, "
+            f"~{self.modeled_pcie_s * 1e3:.2f} ms PCIe")
+
+
+@dataclasses.dataclass
+class SpillRecord:
+  """Host-tier residue of one swapped-out request.
+
+  `pairs` preserves each spilled block's *logical* table index (ring-reuse
+  leaves trash holes mid-row); `payloads` holds one codec payload per paged
+  leaf; `resident_rows` the per-slot resident leaves (rings, codebooks) that
+  would otherwise be overwritten by the slot's next tenant.  While a
+  fetch-ahead is materializing the request, `device_ids`/`staged` hold the
+  IN_FLIGHT destination blocks and decoded arrays.
+  """
+  rid: int
+  length: int
+  hwm: int
+  pairs: List[Tuple[int, int]]          # (logical_j, host_block_id)
+  payloads: List[Optional[Tuple[str, Any, Tuple[int, ...], Any]]]
+  resident_rows: List[Optional[np.ndarray]]
+  state: str = BLOCK_SPILLED
+  nbytes: int = 0                       # post-codec bytes on the host tier
+  raw_bytes: int = 0                    # uncompressed-equivalent bytes
+  device_ids: Optional[List[int]] = None
+  staged: Optional[List[Optional[np.ndarray]]] = None
+
+  @property
+  def host_ids(self) -> List[int]:
+    return [hid for _, hid in self.pairs]
+
+  @property
+  def n_blocks(self) -> int:
+    return len(self.pairs)

@@ -20,13 +20,18 @@ Storage and policy are split along the PR 2 API boundary:
 - *What* is cached is the `CachePolicy` codec (`cfg.cache_policy`: exact,
   AQPIM pq, skvq, ...).
 - *Where* it lives is the `CacheLayout` (`cfg.cache_layout` /
-  `cache_layout=` kwarg): `contiguous` capacity-sized slabs per slot, or
-  `paged` fixed-size token blocks from a shared `BlockAllocator` pool.
+  `cache_layout=` kwarg): `contiguous` capacity-sized slabs per slot,
+  `paged` fixed-size token blocks from a shared `BlockAllocator` pool, or
+  `tiered` — paged storage over a two-tier refcounted pool (device + host)
+  with compressed spill/fetch through the policy's spill codecs.
 - *Who runs next* is the `Scheduler` (`cfg.scheduler` / `scheduler=`):
-  `fifo`, `sjf`, or `paged` (admit-on-available-blocks, preempt-and-requeue
+  `fifo`, `sjf`, `paged` (admit-on-available-blocks, preempt-and-requeue
   on pool exhaustion — recompute preemption: a preempted request is re-
   prefilled from its prompt and, under greedy decoding, regenerates the
-  identical tokens).
+  identical tokens), or `tiered` (swap preemption: the LRU-coldest victim's
+  KV spills to the host tier and a later fetch resumes it mid-decode — no
+  recompute; `engine.stats` counts spills/fetches, the bytes that crossed,
+  and the PCIe time they model).
 
 Mechanics
 ---------
@@ -71,7 +76,11 @@ class RequestHandle:
   slot: Optional[int] = None
   admitted_step: Optional[int] = None
   finished_step: Optional[int] = None
-  preempt_count: int = 0
+  preempt_count: int = 0             # recompute preemptions (KV discarded)
+  spilled: bool = False              # KV currently on the host tier
+  spill_count: int = 0               # swap-outs (KV preserved across them)
+  resume_len: int = 0                # cached length at swap-out
+  resume_cur: int = 0                # pending token at swap-out
 
   @property
   def prompt_len(self) -> int:
@@ -87,9 +96,16 @@ class EngineStats:
   busy_slot_steps: int = 0       # slot-steps that advanced a live request
   wasted_slot_steps: int = 0     # slot-steps that decoded garbage (idle lane)
   admits: int = 0
-  preempts: int = 0
+  preempts: int = 0              # recompute preemptions (tokens regenerated)
   finished: int = 0
   blocks_reclaimed: int = 0      # ring-reuse frees (paged streaming window)
+  # tiered-layout spill/fetch accounting (zero on single-tier layouts)
+  spills: int = 0                # swap-outs to the host tier (KV preserved)
+  fetches: int = 0               # swap-ins from the host tier
+  prefetches: int = 0            # fetch-ahead transfers started early
+  spill_bytes: int = 0           # device -> host, post-spill-codec
+  fetch_bytes: int = 0           # host -> device, post-spill-codec
+  modeled_pcie_s: float = 0.0    # time that traffic would occupy the link
 
   @property
   def occupancy(self) -> float:
@@ -103,12 +119,17 @@ class EngineStats:
     return d
 
   def summary(self) -> str:
-    return (f"occupancy {100 * self.occupancy:.1f}% "
-            f"({self.busy_slot_steps}/{self.decode_steps * self.max_batch} "
-            f"slot-steps, {self.wasted_slot_steps} wasted) | "
-            f"admits {self.admits}, preempts {self.preempts}, "
-            f"finished {self.finished}, reclaimed {self.blocks_reclaimed} "
-            f"blocks")
+    s = (f"occupancy {100 * self.occupancy:.1f}% "
+         f"({self.busy_slot_steps}/{self.decode_steps * self.max_batch} "
+         f"slot-steps, {self.wasted_slot_steps} wasted) | "
+         f"admits {self.admits}, preempts {self.preempts}, "
+         f"finished {self.finished}, reclaimed {self.blocks_reclaimed} "
+         f"blocks")
+    if self.spills or self.fetches:
+      s += (f" | spills {self.spills} ({self.spill_bytes} B), fetches "
+            f"{self.fetches} ({self.fetch_bytes} B, {self.prefetches} "
+            f"ahead), ~{self.modeled_pcie_s * 1e3:.2f} ms PCIe")
+    return s
 
 
 class ServeEngine:
@@ -120,7 +141,8 @@ class ServeEngine:
                cache_layout: Optional[str] = None,
                scheduler: Optional[str] = None,
                block_size: Optional[int] = None,
-               num_blocks: Optional[int] = None):
+               num_blocks: Optional[int] = None,
+               host_blocks: Optional[int] = None):
     if cfg.family not in ("dense", "moe"):
       raise ValueError(
           f"ServeEngine supports dense/moe attention families, got "
@@ -145,10 +167,16 @@ class ServeEngine:
     layout_name = cache_layout or cfg.cache_layout
     sched_name = scheduler or cfg.scheduler
     self.scheduler = scheduler_lib.make(sched_name)
-    if self.scheduler.preemptive and layout_name != "paged":
+    layout_cls = cache_registry.get_layout(layout_name)
+    if self.scheduler.preemptive and not layout_cls.pooled:
       raise ValueError(
           f"scheduler {sched_name!r} gates admission on the block pool; "
-          f"it requires cache_layout='paged', got {layout_name!r}")
+          f"it requires cache_layout='paged' or 'tiered', got "
+          f"{layout_name!r}")
+    if self.scheduler.spills and not layout_cls.spills:
+      raise ValueError(
+          f"scheduler {sched_name!r} spills victims to the host tier; "
+          f"it requires cache_layout='tiered', got {layout_name!r}")
 
     self.model = Model(cfg, context_len=context_len)
     if params is None:
@@ -159,7 +187,9 @@ class ServeEngine:
     # physical cache storage + its compiled admit/decode programs
     self.layout = cache_registry.make_layout(
         layout_name, self.model, max_batch,
-        block_size=block_size, num_blocks=num_blocks)
+        block_size=block_size, num_blocks=num_blocks,
+        host_blocks=host_blocks if host_blocks is not None
+        else cfg.host_blocks)
 
     self.stats = EngineStats(max_batch=max_batch)
     self._lengths = np.zeros((max_batch,), np.int32)
@@ -207,6 +237,11 @@ class ServeEngine:
     """(slot, request) pairs currently decoding — scheduler's read view."""
     return [(s, r) for s, r in enumerate(self._slots) if r is not None]
 
+  @property
+  def queue_view(self) -> Tuple[RequestHandle, ...]:
+    """Waiting requests in queue order — scheduler's read view."""
+    return tuple(self._queue)
+
   def step(self) -> List[RequestHandle]:
     """Admit queued requests into free slots, run one batched decode step,
     and return the requests that finished this step."""
@@ -245,6 +280,7 @@ class ServeEngine:
         # ring-reuse: hand back blocks the policy's own masking retired
         self.stats.blocks_reclaimed += self.layout.reclaim(
             slot, int(self._lengths[slot]))
+    self._fetch_ahead()
     self._step_no += 1
     self.stats.steps += 1
     return finished
@@ -265,7 +301,8 @@ class ServeEngine:
   # -------------------------------------------------------------------------
 
   def _admit(self) -> List[RequestHandle]:
-    """Prefill scheduler-picked requests into free slots."""
+    """Prefill (fresh) or fetch (spilled) scheduler-picked requests into
+    free slots."""
     finished = []
     free_slots = [s for s, r in enumerate(self._slots) if r is None]
     while free_slots and self._queue:
@@ -273,6 +310,25 @@ class ServeEngine:
       if idx is None:
         break
       req = self._queue[idx]
+      if req.spilled:
+        # swap-in: the request's KV survived on the host tier; restore it
+        # and resume decoding exactly where the swap-out left off
+        if not self.layout.can_fetch(req.rid,
+                                     req.prompt_len + req.max_new_tokens):
+          break                     # wait for running requests to free blocks
+        del self._queue[idx]
+        slot = free_slots.pop(0)
+        self.layout.fetch(req.rid, slot)
+        req.spilled = False
+        req.slot = slot
+        req.admitted_step = self._step_no
+        self._slots[slot] = req
+        self._lengths[slot] = req.resume_len
+        self._cur[slot] = req.resume_cur
+        self.stats.admits += 1
+        self.stats.fetches += 1
+        self._sync_transfer_stats()
+        continue
       if not self.layout.can_admit(req.prompt_len,
                                    req.prompt_len + req.max_new_tokens):
         break                       # wait for running requests to free blocks
@@ -316,9 +372,48 @@ class ServeEngine:
         raise RuntimeError(
             f"KV block pool exhausted (need {total_need}, free "
             f"{self.layout.free_blocks}) and scheduler "
-            f"{self.scheduler.name!r} cannot preempt; use --scheduler paged "
-            f"or a larger --num-blocks")
-      self._preempt(victim)
+            f"{self.scheduler.name!r} cannot preempt; use --scheduler "
+            f"paged/tiered or a larger --num-blocks")
+      if self.scheduler.spills and self.layout.can_spill(victim):
+        self._swap_out(victim)
+      else:
+        # host tier full (or single-tier layout): recompute preemption
+        self._preempt(victim)
+
+  def _swap_out(self, slot: int) -> None:
+    """Swap preemption: the victim's KV moves to the host tier through the
+    policy's spill codecs; its generated tokens are kept and decoding
+    resumes from the same position after a later fetch."""
+    req = self._slots[slot]
+    assert req is not None, f"swapping out empty slot {slot}"
+    req.resume_len = int(self._lengths[slot])
+    req.resume_cur = int(self._cur[slot])
+    self.layout.spill(slot, req.rid, req.resume_len)
+    req.spilled = True
+    req.slot = None
+    req.spill_count += 1
+    self._slots[slot] = None
+    self._lengths[slot] = 0
+    self._cur[slot] = 0
+    self._queue.appendleft(req)
+    self.stats.spills += 1
+    self._sync_transfer_stats()
+
+  def _fetch_ahead(self) -> None:
+    """One-step fetch-ahead: start materializing the next spilled request's
+    blocks (IN_FLIGHT) so its admit next step only finalizes — the modeled
+    PCIe transfer overlaps the step boundary instead of serializing."""
+    rid = self.scheduler.fetch_ahead(self)
+    if rid is not None and self.layout.prefetch(rid):
+      self.stats.prefetches += 1
+      self._sync_transfer_stats()
+
+  def _sync_transfer_stats(self) -> None:
+    ledger = getattr(self.layout, "ledger", None)
+    if ledger is not None:
+      self.stats.spill_bytes = ledger.spill_bytes
+      self.stats.fetch_bytes = ledger.fetch_bytes
+      self.stats.modeled_pcie_s = ledger.modeled_pcie_s
 
   def _preempt(self, slot: int) -> None:
     """Recompute preemption: release the slot, requeue the request; greedy

@@ -8,17 +8,22 @@ are `CachePolicy` keys and storage is a `CacheLayout` key:
     from repro.launch import scheduler
     sched = scheduler.make("paged")
 
-| key     | admit order                  | on block exhaustion            |
-|---------|------------------------------|--------------------------------|
-| `fifo`  | submission order             | error (cannot preempt)         |
-| `sjf`   | shortest prompt first        | error (cannot preempt)         |
-| `paged` | first request whose prompt   | preempt-and-requeue the        |
-|         | fits the free block pool     | youngest running request       |
+| key      | admit order                  | on block exhaustion            |
+|----------|------------------------------|--------------------------------|
+| `fifo`   | submission order             | error (cannot preempt)         |
+| `sjf`    | shortest prompt first        | error (cannot preempt)         |
+| `paged`  | first request whose prompt   | preempt-and-requeue the        |
+|          | fits the free block pool     | youngest running request       |
+| `tiered` | first admissible request     | *spill* the LRU-coldest        |
+|          | (fetch spilled, prefill new) | running request to the host    |
+|          |                              | tier (recompute only if the    |
+|          |                              | host pool is full)             |
 
 Schedulers see the engine read-only: the queue of `RequestHandle`s, the
 active slots, and the layout's block pool.  The engine performs the actual
-prefill/admit/preempt; a scheduler only answers "which request next?" and
-"who yields when the pool runs dry?".
+prefill/admit/preempt/spill/fetch; a scheduler only answers "which request
+next?", "who yields when the pool runs dry?", and (tiered) "whose spilled
+state should start fetching ahead of its admit?".
 """
 from __future__ import annotations
 
@@ -57,8 +62,12 @@ class Scheduler:
   """Admission-order + preemption protocol driving `ServeEngine.step`."""
   name: str = "base"
   #: True if this scheduler gates admission on the layout's block pool and
-  #: resolves exhaustion by preempting (requires a paged layout to matter).
+  #: resolves exhaustion by preempting (requires a pooled layout to matter).
   preemptive: bool = False
+  #: True if exhaustion victims should *spill* to the host tier (swap
+  #: preemption, KV preserved) instead of recompute-preempting (requires a
+  #: tiered layout).
+  spills: bool = False
 
   def pick(self, queue: Sequence, engine) -> Optional[int]:
     """Index into `queue` of the next request to admit, or None to wait."""
@@ -67,6 +76,12 @@ class Scheduler:
   def on_exhausted(self, engine) -> Optional[int]:
     """Block pool ran dry mid-decode: slot to preempt-and-requeue, or None
     if this scheduler cannot preempt (the engine then raises)."""
+    del engine
+    return None
+
+  def fetch_ahead(self, engine) -> Optional[int]:
+    """Rid of a spilled queued request whose transfer should start now (one
+    step before its admit), or None.  A hint: the engine may ignore it."""
     del engine
     return None
 
@@ -124,3 +139,50 @@ class PagedScheduler(Scheduler):
     if len(active) <= 1:
       return None
     return max(active)[2]
+
+
+@register("tiered")
+class TieredScheduler(Scheduler):
+  """Spill-don't-recompute admission over a two-tier block pool.
+
+  Admission walks the queue in submission order and admits the first
+  request that is servable *right now*: a spilled request whose blocks fit
+  back into the free device pool (fetch), or a fresh request whose prompt
+  fits (prefill).  On exhaustion the LRU-coldest running request yields —
+  its KV moves to the host tier through the spill codecs instead of being
+  thrown away, so resuming costs one fetch, not a re-prefill (recompute
+  preemption remains the engine's fallback when the host pool is full).
+  Never victimizes the last running request.  `fetch_ahead` points the
+  engine at the next spilled request one step before a slot frees for it,
+  so the (modeled) PCIe transfer overlaps the step boundary.
+  """
+  preemptive = True
+  spills = True
+
+  def pick(self, queue, engine):
+    for i, req in enumerate(queue):
+      total = req.prompt_len + req.max_new_tokens
+      if req.spilled:
+        if engine.layout.can_fetch(req.rid, total):
+          return i
+      elif engine.layout.can_admit(req.prompt_len, total):
+        return i
+    return None
+
+  def on_exhausted(self, engine):
+    active = engine.active_requests
+    if len(active) <= 1:
+      return None
+    # LRU cold-victim via the layout's selection hook; ties (every active
+    # slot is touched each decode step) fall back to youngest-admitted,
+    # matching the paged scheduler's least-work-lost choice
+    return engine.layout.lru_victim(
+        active, tiebreak=lambda req: (-(req.admitted_step or 0), -req.rid))
+
+  def fetch_ahead(self, engine):
+    if engine.active_count >= engine.max_batch:
+      return None                      # no slot will be free at next admit
+    for req in engine.queue_view:
+      if req.spilled:
+        return req.rid                 # layout.prefetch no-ops if unready
+    return None

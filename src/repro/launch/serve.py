@@ -14,16 +14,22 @@ evictions and attends directly on compressed data.
 `--engine` runs the same architecture through the continuous-batching
 `ServeEngine` instead: staggered prompt lengths admitted into one batch,
 finishing at different steps.  Engine storage and admission are pluggable:
-`--cache-layout {contiguous,paged}` picks the physical KV layout (paged =
-fixed-size token blocks from a shared pool, `--kv-block-size`/`--num-blocks`)
-and `--scheduler {fifo,sjf,paged}` the admission policy (`paged` admits on
-available blocks and preempts-and-requeues on pool exhaustion).  Per-run
-occupancy/waste/preempt counters print from `engine.stats`.
+`--cache-layout {contiguous,paged,tiered}` picks the physical KV layout
+(paged = fixed-size token blocks from a shared pool,
+`--kv-block-size`/`--num-blocks`; tiered adds a host spill tier,
+`--host-blocks`/`--spill-codec`) and `--scheduler {fifo,sjf,paged,tiered}`
+the admission policy (`paged` preempts-and-recomputes on pool exhaustion;
+`tiered` spills the LRU-coldest request's KV to the host tier instead and
+fetches it back later).  Per-run occupancy/waste/preempt/spill counters
+print from `engine.stats`; `--stats-json PATH` dumps them machine-readably
+(plus `layout_bytes` and the tier-boundary `transfer` ledger) so CI and
+benches can assert on them.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 from typing import Any
 
 import jax
@@ -120,18 +126,46 @@ class ServeRun:
     }
 
 
-def run_engine_demo(args) -> None:
-  """Continuous batching: mixed prompt lengths, staggered finishes."""
+def build_engine(args):
+  """Construct the ServeEngine exactly as the CLI flags describe it (kept
+  separate so tests can assert every flag reaches the engine/config)."""
   from repro.launch.engine import ServeEngine
   cfg = get_arch(args.arch, reduced=args.reduced)
+  # host_blocks passes through as-is: an explicit --host-blocks 0 (no host
+  # tier, recompute fallback only) is distinct from None (layout default)
   cfg = dataclasses.replace(cfg, cache_policy=args.cache_policy,
                             cache_layout=args.cache_layout,
                             scheduler=args.scheduler,
-                            kv_block_size=args.kv_block_size)
+                            kv_block_size=args.kv_block_size,
+                            host_blocks=args.host_blocks,
+                            spill_codec=args.spill_codec)
   context = args.prompt_len + args.gen
-  engine = ServeEngine(cfg, context_len=context, max_batch=args.batch,
-                       prompt_capacity=args.prompt_len,
-                       num_blocks=args.num_blocks)
+  return ServeEngine(cfg, context_len=context, max_batch=args.batch,
+                     prompt_capacity=args.prompt_len,
+                     num_blocks=args.num_blocks)
+
+
+def dump_stats_json(engine, path: str) -> None:
+  """Machine-readable run record: EngineStats.as_dict() + the layout's true
+  footprint + (tiered) the tier-boundary transfer ledger."""
+  payload = engine.stats.as_dict()
+  payload["layout"] = engine.layout.name
+  payload["scheduler"] = engine.scheduler.name
+  payload["layout_bytes"] = engine.layout.bytes(
+      active_slots=engine.active_count)
+  ledger = getattr(engine.layout, "ledger", None)
+  if ledger is not None:
+    payload["transfer"] = ledger.as_dict()
+  with open(path, "w") as f:
+    json.dump(payload, f, indent=2)
+    f.write("\n")
+
+
+def run_engine_demo(args) -> None:
+  """Continuous batching: mixed prompt lengths, staggered finishes."""
+  engine = build_engine(args)
+  cfg = engine.cfg
+  context = args.prompt_len + args.gen
   key = jax.random.PRNGKey(0)
   # drain one throwaway request so the three jit compiles land outside the
   # timed section (same reason ServeRun has warmup) — it must ask for >= 2
@@ -155,20 +189,28 @@ def run_engine_demo(args) -> None:
         f"[layout={args.cache_layout} scheduler={args.scheduler}]")
   print(f"engine stats: {engine.stats.summary()}")
   by = engine.layout.bytes(active_slots=engine.active_count)
-  if by["kind"] == "paged":
+  if by["kind"] in ("paged", "tiered"):
     print(f"kv memory: peak {by['peak_blocks']}/{by['num_blocks']} blocks "
           f"x {by['block_bytes']} B (+{by['resident_bytes_per_slot']} B/slot "
           f"resident), pool capacity {by['capacity_bytes']} B")
+    if by["kind"] == "tiered":
+      print(f"host tier: {by['host_allocated_blocks']}/{by['host_blocks']} "
+            f"blocks holding {by['spilled_requests']} spilled requests "
+            f"({by['spilled_payload_bytes']} B)")
+      print(f"transfer: {engine.layout.ledger.summary()}")
   else:
     print(f"kv memory: {by['total_bytes']} B contiguous "
           f"({by['per_slot_bytes']} B/slot x {args.batch} slots)")
   for r in done:
     print(f"  rid={r.rid} prompt_len={r.prompt_len} admitted@{r.admitted_step}"
           f" finished@{r.finished_step} preempts={r.preempt_count} "
-          f"tokens={r.tokens[:8]}")
+          f"spills={r.spill_count} tokens={r.tokens[:8]}")
+  if args.stats_json:
+    dump_stats_json(engine, args.stats_json)
+    print(f"stats written to {args.stats_json}")
 
 
-def main():
+def make_parser() -> argparse.ArgumentParser:
   ap = argparse.ArgumentParser(description=__doc__)
   ap.add_argument("--arch", default="tinyllama-1.1b")
   ap.add_argument("--reduced", action="store_true")
@@ -179,21 +221,37 @@ def main():
                   choices=cache_registry.names())
   ap.add_argument("--cache-layout", default="contiguous",
                   choices=cache_registry.layout_names(),
-                  help="physical KV storage (engine mode): contiguous slabs "
-                       "or paged token blocks")
+                  help="physical KV storage (engine mode): contiguous slabs, "
+                       "paged token blocks, or tiered (device + host pools "
+                       "with compressed spill/fetch)")
   ap.add_argument("--scheduler", default="fifo",
                   choices=scheduler_lib.names(),
-                  help="engine admission policy "
-                       "(paged requires --cache-layout paged)")
+                  help="engine admission policy (paged requires "
+                       "--cache-layout paged/tiered; tiered requires "
+                       "--cache-layout tiered)")
   ap.add_argument("--kv-block-size", type=int, default=16,
                   help="paged-layout token-block granularity")
   ap.add_argument("--num-blocks", type=int, default=None,
-                  help="paged-layout pool size (default: batch * "
+                  help="paged-layout device pool size (default: batch * "
                        "capacity/block, i.e. contiguous-equivalent)")
+  ap.add_argument("--host-blocks", type=int, default=None,
+                  help="tiered-layout host (tier 1) pool size in blocks "
+                       "(default: 4x the device pool)")
+  ap.add_argument("--spill-codec", default="raw", choices=("raw", "int8"),
+                  help="tiered-layout exact-KV spill codec; PQ code rows "
+                       "always spill verbatim (they are the compressed form)")
+  ap.add_argument("--stats-json", default=None, metavar="PATH",
+                  help="engine mode: dump EngineStats.as_dict() + layout "
+                       "footprint + transfer ledger as JSON")
   ap.add_argument("--no-pq", action="store_true",
                   help="legacy alias for --cache-policy exact")
   ap.add_argument("--engine", action="store_true",
                   help="run the continuous-batching ServeEngine demo")
+  return ap
+
+
+def main():
+  ap = make_parser()
   args = ap.parse_args()
   # --no-pq is an alias for --cache-policy exact; refuse a conflicting mix
   # rather than silently measuring the wrong policy
@@ -201,6 +259,8 @@ def main():
     if args.cache_policy not in ("pq", "exact"):
       ap.error(f"--no-pq conflicts with --cache-policy {args.cache_policy}")
     args.cache_policy = "exact"
+  if args.stats_json and not args.engine:
+    ap.error("--stats-json requires --engine (EngineStats are engine-mode)")
 
   if args.engine:
     run_engine_demo(args)

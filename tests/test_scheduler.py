@@ -17,12 +17,15 @@ def _cfg(policy="exact", dtype="float32", **kw):
 
 
 def test_registry_and_protocol():
-  assert scheduler_lib.names() == ("fifo", "paged", "sjf")
+  assert scheduler_lib.names() == ("fifo", "paged", "sjf", "tiered")
   assert scheduler_lib.make("sjf").name == "sjf"
   with pytest.raises(KeyError):
     scheduler_lib.make("priority")
   assert scheduler_lib.make("paged").preemptive
   assert not scheduler_lib.make("fifo").preemptive
+  assert scheduler_lib.make("tiered").preemptive
+  assert scheduler_lib.make("tiered").spills
+  assert not scheduler_lib.make("paged").spills
 
 
 def test_paged_scheduler_requires_paged_layout():

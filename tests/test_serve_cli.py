@@ -1,0 +1,94 @@
+"""Serve CLI arg plumbing: every --cache-policy/--cache-layout/--scheduler/
+--kv-block-size/--num-blocks/--host-blocks/--spill-codec flag must reach the
+constructed engine/ModelConfig (this path had no direct tests and rots
+silently), plus the --stats-json machine-readable dump."""
+import json
+
+import pytest
+
+from repro.launch import serve
+
+
+def _engine_for(argv):
+  args = serve.make_parser().parse_args(argv)
+  return args, serve.build_engine(args)
+
+
+BASE = ["--arch", "tinyllama-1.1b", "--reduced", "--engine",
+        "--batch", "2", "--prompt-len", "16", "--gen", "8"]
+
+
+@pytest.mark.parametrize("argv,layout,sched,policy", [
+    (BASE + ["--cache-policy", "exact"], "contiguous", "fifo", "exact"),
+    (BASE + ["--cache-policy", "pq", "--scheduler", "sjf"],
+     "contiguous", "sjf", "pq"),
+    (BASE + ["--cache-policy", "exact", "--cache-layout", "paged",
+             "--scheduler", "paged", "--kv-block-size", "8",
+             "--num-blocks", "12"], "paged", "paged", "exact"),
+    (BASE + ["--cache-policy", "exact", "--cache-layout", "tiered",
+             "--scheduler", "tiered", "--kv-block-size", "8",
+             "--num-blocks", "9", "--host-blocks", "20",
+             "--spill-codec", "int8"], "tiered", "tiered", "exact"),
+])
+def test_flags_reach_engine_and_config(argv, layout, sched, policy):
+  args, eng = _engine_for(argv)
+  assert eng.layout.name == layout
+  assert eng.scheduler.name == sched
+  assert eng.cfg.cache_policy == policy
+  assert eng.cfg.cache_layout == layout
+  assert eng.cfg.scheduler == sched
+  assert eng.max_batch == args.batch
+  assert eng.prompt_capacity == args.prompt_len
+  assert eng.context_len == args.prompt_len + args.gen
+  if layout in ("paged", "tiered"):
+    assert eng.layout.block == args.kv_block_size
+    assert eng.cfg.kv_block_size == args.kv_block_size
+    assert eng.layout.num_blocks == args.num_blocks
+  if layout == "tiered":
+    assert eng.layout.host_blocks == args.host_blocks
+    assert eng.cfg.host_blocks == args.host_blocks
+    assert eng.cfg.spill_codec == args.spill_codec
+    # the codec choice must reach the policy's per-buffer spill surface
+    codecs = eng.model.cache_policy.spill_codecs()
+    assert codecs.k == args.spill_codec
+
+
+def test_tiered_host_pool_defaults_to_4x_device():
+  _, eng = _engine_for(BASE + ["--cache-policy", "exact",
+                               "--cache-layout", "tiered",
+                               "--scheduler", "tiered",
+                               "--kv-block-size", "8",
+                               "--num-blocks", "6"])
+  assert eng.layout.host_blocks == 24
+
+
+def test_tiered_explicit_zero_host_blocks_is_honored():
+  """--host-blocks 0 means *no* host tier (recompute fallback only), not
+  'use the default' — 0 must survive the CLI -> engine -> layout plumbing."""
+  _, eng = _engine_for(BASE + ["--cache-policy", "exact",
+                               "--cache-layout", "tiered",
+                               "--scheduler", "tiered",
+                               "--kv-block-size", "8",
+                               "--num-blocks", "6",
+                               "--host-blocks", "0"])
+  assert eng.layout.host_blocks == 0
+
+
+def test_stats_json_dump_is_machine_readable(tmp_path):
+  _, eng = _engine_for(BASE + ["--cache-policy", "exact",
+                               "--cache-layout", "tiered",
+                               "--scheduler", "tiered",
+                               "--kv-block-size", "8"])
+  eng.submit([1, 2, 3, 4], max_new_tokens=3)
+  eng.run_to_completion()
+  path = tmp_path / "stats.json"
+  serve.dump_stats_json(eng, str(path))
+  got = json.loads(path.read_text())
+  # the keys CI and benches assert on
+  for key in ("occupancy", "admits", "preempts", "finished", "spills",
+              "fetches", "spill_bytes", "modeled_pcie_s"):
+    assert key in got, key
+  assert got["layout"] == "tiered" and got["scheduler"] == "tiered"
+  assert got["layout_bytes"]["kind"] == "tiered"
+  assert got["transfer"]["total_bytes"] == 0      # nothing spilled here
+  assert got["finished"] == 1
