@@ -1,0 +1,155 @@
+"""Dashboard over the BENCH_serve.json serving-perf trajectory.
+
+`benchmarks/run.py --json` appends one timestamped record per run (pq vs
+exact tok/s, tiered spill traffic, shared-prefix cache savings).  This
+renders that trajectory two ways:
+
+  terminal   a per-run table plus unicode sparklines — the quick "did this
+             PR move serve perf" view, zero dependencies;
+  PNG        a small matplotlib figure (tok/s trend, pq-vs-exact spill
+             ratio, prefix-cache savings) when matplotlib is installed —
+             skipped gracefully when it is not (CI installs only jax+numpy).
+
+    python benchmarks/plot_trend.py                 # terminal + PNG
+    python benchmarks/plot_trend.py --no-png        # terminal only
+    python benchmarks/plot_trend.py --json BENCH_serve.json --png trend.png
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values):
+  vals = [v for v in values if v is not None]
+  if not vals:
+    return ""
+  lo, hi = min(vals), max(vals)
+  span = (hi - lo) or 1.0
+  out = []
+  for v in values:
+    if v is None:
+      out.append(" ")
+    else:
+      out.append(SPARK[min(int((v - lo) / span * (len(SPARK) - 1)),
+                           len(SPARK) - 1)])
+  return "".join(out)
+
+
+def load_runs(path: str) -> list:
+  with open(path) as f:
+    data = json.load(f)
+  runs = data.get("runs") if isinstance(data, dict) else None
+  if not isinstance(runs, list):
+    raise SystemExit(f"{path} is not a {{'runs': [...]}} trajectory")
+  return runs
+
+
+def _policy_toks(run: dict, policy: str):
+  return run.get("policies", {}).get(policy, {}).get("tok_per_s")
+
+
+def _spill_ratio(run: dict):
+  return (run.get("tiered") or {}).get("pq_vs_exact_raw_spill")
+
+
+def _prefix_saved(run: dict, policy: str = "exact"):
+  pol = ((run.get("prefix") or {}).get("policies", {})).get(policy, {})
+  return pol.get("prefill_tokens_saved_frac")
+
+
+def _prefix_hit_rate(run: dict, policy: str):
+  pol = ((run.get("prefix") or {}).get("policies", {})).get(policy, {})
+  return pol.get("prefix_hit_rate")
+
+
+def render_terminal(runs: list) -> None:
+  def fmt(v, pat="{:8.1f}", blank="       —"):
+    return blank if v is None else pat.format(v)
+
+  print(f"{'run':>3} {'sha':>8} {'timestamp':>20} {'pq tok/s':>9} "
+        f"{'exact tok/s':>11} {'spill pq/raw':>12} {'prefix saved':>12} "
+        f"{'hit(pq)':>8}")
+  for i, run in enumerate(runs):
+    print(f"{i:>3} {run.get('git_sha', '?'):>8} "
+          f"{run.get('timestamp', '?'):>20} "
+          f"{fmt(_policy_toks(run, 'pq'), '{:9.1f}', '        —')} "
+          f"{fmt(_policy_toks(run, 'exact'), '{:11.1f}', '          —')} "
+          f"{fmt(_spill_ratio(run), '{:12.3f}', '           —')} "
+          f"{fmt(_prefix_saved(run), '{:12.2%}', '           —')} "
+          f"{fmt(_prefix_hit_rate(run, 'pq'), '{:8.2f}', '       —')}")
+  print()
+  for label, series in (
+      ("pq tok/s      ", [_policy_toks(r, "pq") for r in runs]),
+      ("exact tok/s   ", [_policy_toks(r, "exact") for r in runs]),
+      ("spill pq/raw  ", [_spill_ratio(r) for r in runs]),
+      ("prefix saved  ", [_prefix_saved(r) for r in runs]),
+  ):
+    vals = [v for v in series if v is not None]
+    if vals:
+      print(f"{label} {sparkline(series)}  (last {vals[-1]:.3g})")
+
+
+def render_png(runs: list, path: str) -> bool:
+  try:
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+  except ImportError:
+    print("matplotlib not installed; skipping PNG (terminal view above is "
+          "the dashboard)")
+    return False
+  xs = list(range(len(runs)))
+  fig, axes = plt.subplots(3, 1, figsize=(8, 8), sharex=True)
+  axes[0].plot(xs, [_policy_toks(r, "pq") for r in runs], marker="o",
+               label="pq")
+  axes[0].plot(xs, [_policy_toks(r, "exact") for r in runs], marker="s",
+               label="exact")
+  axes[0].set_ylabel("serve tok/s")
+  axes[0].legend(loc="best")
+  axes[0].set_title("BENCH_serve.json trajectory")
+  axes[1].plot(xs, [_spill_ratio(r) for r in runs], marker="o", color="tab:red")
+  axes[1].axhline(0.25, ls="--", lw=1, color="gray")
+  axes[1].set_ylabel("tiered spill\npq / exact raw")
+  axes[2].plot(xs, [_prefix_saved(r) for r in runs], marker="o",
+               color="tab:green", label="exact prefill saved")
+  axes[2].plot(xs, [_prefix_hit_rate(r, "pq") for r in runs], marker="s",
+               color="tab:olive", label="pq hit rate")
+  axes[2].axhline(0.5, ls="--", lw=1, color="gray")
+  axes[2].set_ylabel("prefix cache")
+  axes[2].set_xlabel("run")
+  axes[2].legend(loc="best")
+  fig.tight_layout()
+  fig.savefig(path, dpi=120)
+  plt.close(fig)
+  print(f"wrote {path}")
+  return True
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser(description=__doc__)
+  ap.add_argument("--json", default="BENCH_serve.json",
+                  help="trajectory file written by benchmarks/run.py --json")
+  ap.add_argument("--png", default="BENCH_trend.png",
+                  help="output figure path")
+  ap.add_argument("--no-png", action="store_true",
+                  help="terminal dashboard only")
+  args = ap.parse_args()
+  if not os.path.exists(args.json):
+    raise SystemExit(f"{args.json} not found — run "
+                     f"`python benchmarks/run.py --json` first")
+  runs = load_runs(args.json)
+  if not runs:
+    raise SystemExit("trajectory is empty")
+  render_terminal(runs)
+  if not args.no_png:
+    render_png(runs, args.png)
+  sys.exit(0)
+
+
+if __name__ == "__main__":
+  main()

@@ -140,6 +140,82 @@ def run_tiered_transfer(arch: str = "tinyllama-1.1b", prompt_len: int = 352,
   return out
 
 
+def run_prefix_trace(arch: str = "tinyllama-1.1b", prompt_len: int = 64,
+                     gen: int = 16, block: int = 16, num_blocks: int = 24,
+                     users: int = 4, repeats: int = 2) -> dict:
+  """Shared-prefix serving trace through the prefix cache, per policy.
+
+  N users share one long system prompt with distinct short suffixes, plus
+  `repeats` exact resubmissions (retry/regenerate traffic).  Each policy
+  runs the identical trace twice — prefix cache off, then on — asserting
+  token-identical outputs and recording what the cache saved: prefill
+  tokens computed, hit rate, peak *mapped* KV blocks (a shared block counts
+  once), dedup bytes, and COW forks.  `pq_vs_exact_block_bytes` is the
+  footprint of one shared-prefix block under AQPIM PQ codes vs exact KV —
+  the reason one cached prefix serves many more users inside the same
+  device pool.
+  """
+  import dataclasses
+  from repro.configs import get_arch
+  from repro.launch.engine import ServeEngine
+
+  sys_prompt = list(range(3, 3 + prompt_len - block))   # whole shared blocks
+  trace = [(sys_prompt + [997 - 7 * u] * (block // 2), gen)
+           for u in range(users)]
+  trace += [trace[u % users] for u in range(repeats)]   # exact resubmits
+  out = {"cache_layout": "paged", "kv_block_size": block,
+         "num_blocks": num_blocks, "batch": 2, "prompt_len": prompt_len,
+         "gen": gen, "users": users, "repeats": repeats, "policies": {}}
+  for policy in ("pq", "exact"):
+    cfg = dataclasses.replace(
+        get_arch(arch, reduced=True), cache_policy=policy,
+        dtype_str="bfloat16", cache_layout="paged", kv_block_size=block)
+    off = ServeEngine(cfg, context_len=prompt_len + gen, max_batch=2,
+                      prompt_capacity=prompt_len, num_blocks=num_blocks,
+                      scheduler="paged")
+    on = ServeEngine(cfg, context_len=prompt_len + gen, max_batch=2,
+                     prompt_capacity=prompt_len, num_blocks=num_blocks,
+                     scheduler="prefix", prefix_cache=True,
+                     params=off.params)
+    want = [off.submit(p, max_new_tokens=m) for p, m in trace]
+    got = [on.submit(p, max_new_tokens=m) for p, m in trace]
+    off.run_to_completion()
+    on.run_to_completion()
+    identical = all(w.tokens == g.tokens for w, g in zip(want, got))
+    by_on = on.layout.bytes()
+    by_off = off.layout.bytes()
+    saved = 1.0 - (on.stats.prefill_tokens
+                   / max(off.stats.prefill_tokens, 1))
+    out["policies"][policy] = {
+        "tokens_identical": identical,
+        "prefill_tokens_nocache": off.stats.prefill_tokens,
+        "prefill_tokens": on.stats.prefill_tokens,
+        "prefill_tokens_saved_frac": round(saved, 4),
+        "prefix_hits": on.stats.prefix_hits,
+        "prefix_full_hits": on.stats.prefix_full_hits,
+        "prefix_hit_rate": round(on.stats.prefix_hit_rate, 4),
+        "forked_blocks": on.stats.forked_blocks,
+        "dedup_bytes": on.stats.dedup_bytes,
+        "block_bytes": by_on["block_bytes"],
+        "peak_mapped_blocks": by_on["peak_mapped_blocks"],
+        "peak_mapped_blocks_nocache": by_off["peak_mapped_blocks"],
+        "peak_mapped_bytes": by_on["peak_mapped_bytes"],
+        "peak_mapped_bytes_nocache": by_off["peak_mapped_bytes"],
+    }
+    print(f"prefix[{policy}]: prefill tokens {off.stats.prefill_tokens} -> "
+          f"{on.stats.prefill_tokens} ({100 * saved:.0f}% saved), hit rate "
+          f"{on.stats.prefix_hit_rate:.2f}, peak mapped blocks "
+          f"{by_off['peak_mapped_blocks']} -> {by_on['peak_mapped_blocks']}"
+          f"{'' if identical else '  TOKENS DIVERGED'}")
+  exact_bb = out["policies"]["exact"]["block_bytes"]
+  pq_bb = out["policies"]["pq"]["block_bytes"]
+  out["pq_vs_exact_block_bytes"] = (round(pq_bb / exact_bb, 4)
+                                    if exact_bb else None)
+  print(f"prefix: pq shared-prefix block footprint = "
+        f"{out['pq_vs_exact_block_bytes']} of exact")
+  return out
+
+
 def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
                    batch: int = 2, prompt_len: int = 64, gen: int = 16) -> int:
   from repro.launch.serve import ServeRun
@@ -170,6 +246,12 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
     # families; keep the timed record instead of dying on the extra section
     record["tiered"] = None
     print(f"tiered: skipped ({arch} family not engine-servable)")
+  if get_arch(arch, reduced=True).family == "dense":
+    record["prefix"] = run_prefix_trace(arch)
+  else:
+    # chain sharing needs causal per-position prefill (dense family)
+    record["prefix"] = None
+    print(f"prefix: skipped ({arch} family has no chunked suffix prefill)")
   history = _load_history(out_path)
   history.append(record)
   with open(out_path, "w") as f:

@@ -66,6 +66,13 @@ class ModelConfig:
   spill_codec: str = "raw"         # tiered-layout exact-KV spill codec:
                                    # raw | int8 (PQ codes always spill
                                    # verbatim — they ARE the compressed form)
+  prefix_cache: bool = False       # share prompt-prefix KV blocks across
+                                   # requests (copy-on-write tables +
+                                   # suffix-only prefill; paged/tiered
+                                   # layouts only, token-exact under greedy)
+  prefix_cache_blocks: Optional[int] = None  # device blocks the prefix index
+                                             # may pin (refcount+LRU budget);
+                                             # None -> half the device pool
   stream_window: int = 512         # streamingllm sliding window (clamped to
                                    # context; paged layout ring-reuses blocks
                                    # that age out of it)

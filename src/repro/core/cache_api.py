@@ -137,6 +137,17 @@ class CachePolicy:
   """
   name: str = "base"
   needs_weights: bool = False
+  #: True if this policy's prefilled per-position state is *causal* — a paged
+  #: token's stored bytes depend only on prompt tokens at or before it — so
+  #: whole prefix blocks may be shared copy-on-write across requests with
+  #: different suffixes (core.prefix_index).  Weighted/clustered states
+  #: (snapkv importance, AQPIM codebooks) couple positions and must be False.
+  prefix_shareable: bool = False
+  #: True if a *full-prompt* snapshot (blocks + resident leaves + first
+  #: greedy token) is a bit-exact resume for an identical prompt.  Holds for
+  #: every deterministic policy; full entries are how non-shareable policies
+  #: (pq, snapkv) still hit on repeated prompts.
+  prefix_cacheable: bool = True
 
   def __init__(self, spec: CacheSpec):
     self.spec = spec
@@ -207,6 +218,10 @@ class _ExactStorePolicy(CachePolicy):
   (i.e. valid positions are < length + 1).
   """
   tracks_weights = False
+  # plain exact stores are causal per position -> prefix blocks shareable;
+  # weight-tracking (snapkv) and ring-reusing (streamingllm) subclasses
+  # override back to False
+  prefix_shareable = True
 
   def init(self, b: int, h: int, d: int) -> Any:
     base = kvc.exact_cache_init(b, h, self.spec.capacity, d, self.spec.dtype)
@@ -309,6 +324,9 @@ class ExactPolicy(_ExactStorePolicy):
 @cache_registry.register("streamingllm")
 class StreamingLLMPolicy(_ExactStorePolicy):
   """Static sink + sliding window; everything else evicted (masked)."""
+  # ring-reuse retires prefix blocks mid-decode; sharing them would pin what
+  # the window machinery exists to recycle
+  prefix_shareable = False
 
   def _attend(self, q, k, v, w, length):
     return baselines.streaming_llm_decode_attention(
@@ -369,6 +387,9 @@ class SnapKVPolicy(_ExactStorePolicy):
   append) are never evicted in favor of prompt tokens."""
   needs_weights = True
   tracks_weights = True
+  # Eq. 1 importance at a prefix position is observed by *later* queries —
+  # suffix-dependent, so prefix blocks are not shareable (full entries only)
+  prefix_shareable = False
 
   def _attend(self, q, k, v, w, length):
     mask = baselines.snapkv_select(
@@ -435,6 +456,11 @@ class PQPolicy(CachePolicy):
   """AQPIM: sink/recent exact, PQ-compressed body, attention on compressed
   data (paper Fig. 3a/5).  Wraps the kv_cache.py kernel-level core."""
   needs_weights = True
+  # codebooks cluster over the whole prompt body: a prefix's code rows are
+  # suffix-dependent, so sharing is full-prompt entries only — which is
+  # where the PQ footprint advantage compounds (one cached prompt's code
+  # rows are 5-8x smaller than the exact KV it replaces)
+  prefix_shareable = False
 
   def __init__(self, spec: CacheSpec):
     super().__init__(spec)

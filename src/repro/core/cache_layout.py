@@ -25,7 +25,18 @@ A layout pages *any* policy's state through the codec surface on
 `CachePolicy` (`paged_axes` / `token_extent` / `paged_capacity`): AQPIM's
 PQ codes page exactly the way exact KV does, while its codebooks and
 sink/recent rings stay resident.  ``bytes()`` on a layout reports the *true
-allocated-block footprint*, not capacity.
+allocated-block footprint*, not capacity — counting a prefix-shared block
+once, plus what sharing deduplicated.
+
+Since PR 4 the pooled layouts are also **prefix-sharing**: with
+``prefix_cache=True`` block tables are copy-on-write over a
+`core.prefix_index.PrefixIndex` — admission `ref()`s every block of the
+longest published prompt prefix into the new request's table, `cow_fork`
+gives a request a private copy of any block it could write (the partial
+tail block), and `prefill_chunk` runs the suffix-only prefill the engine
+drives (fixed chunk shapes, one compile).  `TieredLayout` keeps shared
+blocks device-resident across swap-outs: a shared prefix spills zero
+times, not once per request.
 
 Layouts are selected by string key via `repro.core.cache_registry`
 (`make_layout("paged", model, max_batch)`); the serve engine exposes them as
@@ -47,6 +58,7 @@ import numpy as np
 
 from repro.core import cache_registry
 from repro.core import kv_cache as kvc
+from repro.core import prefix_index as pfx
 from repro.core import tiers as tiersmod
 from repro.core.cache_api import RESIDENT
 
@@ -54,9 +66,14 @@ from repro.core.cache_api import RESIDENT
 class BlockAllocator:
   """Free-list allocator over `num_blocks` physical token blocks.
 
-  Owners are opaque tags (the engine uses slot indices).  Every transition is
-  checked: allocating an owned block, freeing a free block, or freeing with
-  the wrong owner raises — the invariants the hypothesis suite drives.
+  Owners are opaque tags (the engine uses slot indices; the prefix index a
+  sentinel).  Since PR 4 a block may be held by *several* owners at once —
+  copy-on-write prefix sharing `ref()`s a published block into every request
+  that matches it — so ownership is a multiset of holders and a block only
+  returns to the free list when the last holder lets go.  Every transition
+  is checked: allocating a held block, freeing a free block, or freeing a
+  hold the owner does not have raises — the invariants the hypothesis suite
+  drives.
   """
 
   def __init__(self, num_blocks: int):
@@ -64,7 +81,7 @@ class BlockAllocator:
       raise ValueError(f"num_blocks must be positive, got {num_blocks}")
     self.num_blocks = num_blocks
     self._free: collections.deque = collections.deque(range(num_blocks))
-    self._owner: Dict[int, Any] = {}
+    self._holders: Dict[int, collections.Counter] = {}
 
   @property
   def free_count(self) -> int:
@@ -72,7 +89,7 @@ class BlockAllocator:
 
   @property
   def allocated_count(self) -> int:
-    return len(self._owner)
+    return len(self._holders)
 
   def alloc(self, n: int, owner: Any = None) -> Optional[List[int]]:
     """Allocate `n` blocks for `owner`; None (and no change) if unavailable."""
@@ -82,34 +99,68 @@ class BlockAllocator:
       return None
     ids = [self._free.popleft() for _ in range(n)]
     for i in ids:
-      if i in self._owner:
+      if i in self._holders:
         raise AssertionError(f"free list returned owned block {i}")
-      self._owner[i] = owner
+      self._holders[i] = collections.Counter({owner: 1})
     return ids
 
-  def free(self, ids: Sequence[int], owner: Any = None) -> None:
+  def ref(self, ids: Sequence[int], owner: Any = None) -> None:
+    """Take an additional hold on allocated blocks (prefix sharing)."""
     for i in ids:
-      if i not in self._owner:
+      if i not in self._holders:
+        raise ValueError(f"ref of free block {i}")
+      self._holders[i][owner] += 1
+
+  def refcount(self, i: int) -> int:
+    h = self._holders.get(i)
+    return 0 if h is None else sum(h.values())
+
+  def holder_count(self, i: int, owner: Any) -> int:
+    h = self._holders.get(i)
+    return 0 if h is None else h.get(owner, 0)
+
+  def free(self, ids: Sequence[int], owner: Any = None) -> None:
+    """Drop one hold per id; blocks with no holds left return to the free
+    list.  `owner=None` (legacy single-holder callers) drops the sole
+    holder's hold and refuses on a shared block (ambiguous)."""
+    for i in ids:
+      holders = self._holders.get(i)
+      if holders is None:
         raise ValueError(f"double free of block {i}")
-      if owner is not None and self._owner[i] != owner:
+      key = owner
+      if key is None and None not in holders:
+        if len(holders) != 1:
+          raise ValueError(
+              f"block {i} held by {sorted(map(repr, holders))}; "
+              f"anonymous free is ambiguous")
+        key = next(iter(holders))
+      if holders.get(key, 0) <= 0:
         raise ValueError(
-            f"block {i} owned by {self._owner[i]!r}, freed by {owner!r}")
-      del self._owner[i]
-      self._free.append(i)
+            f"block {i} owned by {sorted(map(repr, holders))}, "
+            f"freed by {owner!r}")
+      holders[key] -= 1
+      if holders[key] == 0:
+        del holders[key]
+      if not holders:
+        del self._holders[i]
+        self._free.append(i)
 
   def owned(self, owner: Any) -> List[int]:
-    return [i for i, o in self._owner.items() if o == owner]
+    return [i for i, h in self._holders.items() if h.get(owner, 0) > 0]
 
   def check(self) -> None:
-    """Free list and owner map must partition [0, num_blocks) exactly."""
+    """Free list and holder map must partition [0, num_blocks) exactly."""
     free = set(self._free)
-    owned = set(self._owner)
+    owned = set(self._holders)
     if len(free) != len(self._free):
       raise AssertionError("duplicate ids in free list")
     if free & owned:
       raise AssertionError(f"blocks both free and owned: {free & owned}")
     if free | owned != set(range(self.num_blocks)):
       raise AssertionError("allocator leaked or invented blocks")
+    for i, holders in self._holders.items():
+      if any(c <= 0 for c in holders.values()) or not holders:
+        raise AssertionError(f"block {i} held with non-positive hold count")
 
 
 class BlockTableManager:
@@ -136,6 +187,10 @@ class BlockTableManager:
     self._hwm = np.zeros(max_slots, np.int64)   # logical blocks ever grown to
     self.policy = policy
     self.peak_allocated = 0
+    # peak *distinct table-mapped* blocks: the concurrent working set, which
+    # counts a prefix-shared block once and excludes index-pinned blocks no
+    # request currently maps — the honest "KV bytes needed to serve" number
+    self.peak_mapped = 0
 
   @property
   def free_count(self) -> int:
@@ -165,7 +220,21 @@ class BlockTableManager:
         raise AssertionError(f"adopting block {pid} not owned by slot {slot}")
       self.tables[slot, j] = pid
     self._hwm[slot] = hwm
-    self.peak_allocated = max(self.peak_allocated, self.allocated_count)
+    self._note_peaks()
+
+  def share(self, slot: int, ids: Sequence[int]) -> None:
+    """Copy-on-write admission: install someone else's live blocks as this
+    empty slot's leading table entries, taking one hold per block.  The
+    slot may then `ensure` exclusive growth blocks behind them; it must
+    never write content into positions the shared blocks cover (the engine
+    guarantees writes start at the first unshared token)."""
+    if self._hwm[slot] != 0 or (self.tables[slot] != self.trash).any():
+      raise AssertionError(f"slot {slot} shared into while occupied")
+    self.allocator.ref(ids, owner=slot)
+    for j, pid in enumerate(ids):
+      self.tables[slot, j] = pid
+    self._hwm[slot] = len(ids)
+    self._note_peaks()
 
   def need_blocks(self, slot: int, length: int) -> int:
     return max(self.blocks_for(length) - int(self._hwm[slot]), 0)
@@ -186,7 +255,7 @@ class BlockTableManager:
     hwm = int(self._hwm[slot])
     self.tables[slot, hwm:hwm + need] = ids
     self._hwm[slot] = hwm + need
-    self.peak_allocated = max(self.peak_allocated, self.allocated_count)
+    self._note_peaks()
     return True
 
   def reclaim(self, slot: int, length: int) -> int:
@@ -213,13 +282,22 @@ class BlockTableManager:
     self.tables[slot, :] = self.trash
     self._hwm[slot] = 0
 
+  def _note_peaks(self) -> None:
+    self.peak_allocated = max(self.peak_allocated, self.allocated_count)
+    live = self.tables[self.tables != self.trash]
+    self.peak_mapped = max(self.peak_mapped, len(set(live.tolist())))
+
   def check_invariants(self) -> None:
     self.allocator.check()
-    live = self.tables[self.tables != self.trash]
-    if len(set(live.tolist())) != live.size:
-      raise AssertionError("physical block mapped by two table entries")
+    # a physical block may be mapped by several *slots* (prefix sharing),
+    # but never twice within one slot's table, and every mapping must be
+    # backed by a hold that slot actually has
     for slot in range(self.tables.shape[0]):
-      row = set(self.tables[slot][self.tables[slot] != self.trash].tolist())
+      row_list = self.tables[slot][self.tables[slot] != self.trash].tolist()
+      row = set(row_list)
+      if len(row) != len(row_list):
+        raise AssertionError(
+            f"slot {slot} maps a physical block twice: {sorted(row_list)}")
       if row != set(self.allocator.owned(slot)):
         raise AssertionError(
             f"slot {slot} table/owner mismatch: {row} vs "
@@ -297,8 +375,15 @@ class ContiguousLayout(CacheLayout):
 
   def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
                num_blocks: Optional[int] = None,
-               host_blocks: Optional[int] = None):
+               host_blocks: Optional[int] = None,
+               prefix_cache: bool = False,
+               prefix_cache_blocks: Optional[int] = None):
     del block_size, num_blocks, host_blocks   # no block pool, no host tier
+    del prefix_cache_blocks
+    if prefix_cache:
+      raise ValueError(
+          "prefix cache requires a pooled layout: contiguous slabs have no "
+          "shareable blocks — use --cache-layout paged or tiered")
     self.model = model
     self.max_batch = max_batch
     self.storage = model.init_cache(max_batch)
@@ -347,7 +432,9 @@ class PagedLayout(CacheLayout):
 
   def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
                num_blocks: Optional[int] = None,
-               host_blocks: Optional[int] = None):
+               host_blocks: Optional[int] = None,
+               prefix_cache: bool = False,
+               prefix_cache_blocks: Optional[int] = None):
     del host_blocks   # single-tier pool; TieredLayout consumes it
     policy = model.cache_policy
     if policy is None:
@@ -416,8 +503,261 @@ class PagedLayout(CacheLayout):
         return st.at[table].set(blocks.astype(st.dtype))
       return jax.tree_util.tree_map(one, self._axes, storage, slot_cache)
 
+    self._gather = gather
+    self._scatter = scatter
     self._decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
     self._admit_fused = jax.jit(admit_fused, donate_argnums=(0,))
+    self._init_prefix_cache(prefix_cache, prefix_cache_blocks)
+
+  # -- prefix sharing (copy-on-write block tables) ---------------------------
+  def _init_prefix_cache(self, enabled: bool,
+                         budget_blocks: Optional[int]) -> None:
+    self.prefix_enabled = bool(enabled)
+    self.prefix_index: Optional[pfx.PrefixIndex] = None
+    self.forked_blocks = 0          # cow_fork count (EngineStats mirrors it)
+    # padded prefill extent the chunk path must attend over; the engine
+    # sets it (set_prompt_capacity) before the first prefill_chunk
+    self._kv_extent = self.manager.policy.paged_capacity()
+    policy = self.manager.policy
+    # chain (partial-prefix) sharing additionally needs causal per-position
+    # prefill numerics: exact-store policies over the dense family (MoE
+    # capacity routing couples positions across the sequence)
+    self.prefix_shareable = bool(
+        self.prefix_enabled and policy.prefix_shareable
+        and self.model.cfg.family == "dense")
+    if not self.prefix_enabled:
+      return
+    budget = (int(budget_blocks) if budget_blocks is not None
+              else max(self.num_blocks // 2, 1))
+    self.prefix_index = pfx.PrefixIndex(self.block, budget)
+
+    def fork_fused(storage, src, dst):
+      def one(ax, st):
+        if ax == RESIDENT:
+          return st
+        return st.at[dst].set(st[src])
+      return jax.tree_util.tree_map(one, self._axes, storage)
+
+    def chunk_fused(params, storage, table, tokens, start, kv_extent):
+      caches = self._gather(storage, table[None])
+      logits, new_caches = self.model.prefill_chunk(
+          params, tokens, caches, start, kv_extent)
+      return logits, self._scatter(storage, table[None], new_caches)
+
+    self._fork_fused = jax.jit(fork_fused, donate_argnums=(0,))
+    self._chunk_fused = jax.jit(chunk_fused, donate_argnums=(1,),
+                                static_argnums=(5,))
+
+  def _require_prefix(self) -> pfx.PrefixIndex:
+    if self.prefix_index is None:
+      raise RuntimeError("prefix cache is disabled on this layout")
+    return self.prefix_index
+
+  def _block_in_tables(self, bid: int) -> bool:
+    """Is this physical block mapped by any slot's table right now?"""
+    return bool((self.tables_view() == bid).any())
+
+  def tables_view(self) -> np.ndarray:
+    return self.manager.tables
+
+  def prefix_plan(self, tokens: Sequence[int], total_len: int,
+                  touch: bool = False) -> dict:
+    """Admission plan for a prompt under the prefix cache.
+
+    kind 'full'  — an identical prompt's snapshot is live: zero prefill,
+                   `need` covers only the COW tail fork + growth headroom;
+    kind 'chain' — `match` leading blocks are shared; prefill only the
+                   suffix (need = remaining blocks + headroom);
+    kind 'none'  — no published prefix (or sharing gated off): full
+                   prefill, same need as `can_admit`.
+
+    `touch=True` (the engine's actual admission) refreshes the matched
+    entries' LRU recency; scheduler probes stay read-only.
+    """
+    mgr = self.manager
+    prompt_len = len(tokens)
+
+    def headroom(need: int, shared: int) -> int:
+      # one growth-headroom block (mirrors can_admit), capped at the true
+      # worst case so admission can never become impossible
+      cap = max(mgr.blocks_for(total_len) - shared, need)
+      return min(need + 1, cap)
+
+    if self.prefix_enabled:
+      idx = self._require_prefix()
+      entry = idx.get_full(tokens, touch=touch)
+      if entry is not None:
+        fork = 0 if entry.tail_j is None else 1
+        return dict(kind="full", entry=entry, match=[],
+                    matched_tokens=prompt_len,
+                    need=headroom(fork, len(entry.pairs) - fork))
+      if self.prefix_shareable:
+        match = idx.match(tokens, max_tokens=prompt_len - 1, touch=touch)
+        if match:
+          need = mgr.blocks_for(prompt_len) - len(match)
+          return dict(kind="chain", entry=None, match=match,
+                      matched_tokens=len(match) * self.block,
+                      need=headroom(need, len(match)))
+    return dict(kind="none", entry=None, match=[], matched_tokens=0,
+                need=headroom(mgr.blocks_for(prompt_len), 0))
+
+  def admit_shared(self, slot: int, match: Sequence[int], prompt_len: int
+                   ) -> None:
+    """COW admission: ref the matched chain blocks into this slot's table,
+    then allocate exclusive blocks for the remainder of the prompt."""
+    mgr = self.manager
+    mgr.share(slot, list(match))
+    if not mgr.ensure(slot, prompt_len):
+      mgr.release(slot)               # drop the shared holds we just took
+      raise RuntimeError(
+          f"block pool exhausted admitting shared-prefix prompt "
+          f"({prompt_len} tokens, {len(match)} shared blocks, "
+          f"free={mgr.free_count})")
+
+  def admit_from_full(self, slot: int, entry: pfx.FullEntry) -> None:
+    """Full-prompt hit: map the snapshot's blocks shared, fork the partial
+    tail block (the donor keeps writing it), restore resident leaves."""
+    mgr = self.manager
+    ids = [bid for _, bid in sorted(entry.pairs)]
+    mgr.share(slot, ids)
+    if entry.tail_j is not None:
+      self.cow_fork(slot, entry.tail_j)
+    if mgr.high_water(slot) != entry.hwm:
+      raise AssertionError(
+          f"full-entry hwm drifted: {mgr.high_water(slot)} vs {entry.hwm}")
+    if any(row is not None for row in entry.resident_rows):
+      leaves, treedef = jax.tree_util.tree_flatten(self.storage)
+      out = []
+      for ax, st, row in zip(jax.tree_util.tree_leaves(self._axes), leaves,
+                             entry.resident_rows):
+        if ax == RESIDENT:
+          st = st.at[:, slot].set(jnp.asarray(row).astype(st.dtype))
+        out.append(st)
+      self.storage = jax.tree_util.tree_unflatten(treedef, out)
+
+  def cow_fork(self, slot: int, j: int) -> int:
+    """Copy-on-write fork: give `slot` a private copy of logical block `j`
+    (alloc + device copy + unref the shared original).  The freed hold never
+    aliases: the new block is exclusively owned and the shared block's
+    payload is untouched."""
+    mgr = self.manager
+    old = int(mgr.tables[slot, j])
+    if old == mgr.trash:
+      raise ValueError(f"cow_fork of unallocated logical block {j}")
+    new = mgr.allocator.alloc(1, owner=slot)
+    if new is None:
+      mgr.release(slot)
+      raise RuntimeError(f"block pool exhausted forking block {old}")
+    self.storage = self._fork_fused(
+        self.storage, jnp.asarray(old, jnp.int32),
+        jnp.asarray(new[0], jnp.int32))
+    mgr.tables[slot, j] = new[0]
+    mgr.allocator.free([old], owner=slot)
+    mgr._note_peaks()
+    self.forked_blocks += 1
+    return new[0]
+
+  def prefill_chunk(self, params, slot: int, tokens: np.ndarray, start: int):
+    """Run one fixed-shape suffix-prefill chunk over this slot's storage
+    (gather -> Model.prefill_chunk -> scatter, one compile per chunk shape).
+    Returns per-row logits; the engine picks the true last token's row."""
+    logits, self.storage = self._chunk_fused(
+        params, self.storage, jnp.asarray(self.manager.tables[slot]),
+        jnp.asarray(tokens), jnp.asarray(start, jnp.int32),
+        int(self._kv_extent))
+    return logits
+
+  def set_prompt_capacity(self, prompt_capacity: int) -> None:
+    """The engine's padded prefill extent — the chunk path must attend over
+    exactly this many key positions to stay bit-identical with it."""
+    self._kv_extent = int(prompt_capacity)
+
+  def prefix_publish(self, slot: int, tokens: Sequence[int],
+                     first_token: int) -> None:
+    """Publish this freshly-prefilled slot into the index: whole prompt
+    blocks as a shareable chain (causal policies), plus a full-prompt entry
+    (any deterministic policy) under the refcount+LRU block budget."""
+    if not self.prefix_enabled:
+      return
+    idx = self._require_prefix()
+    mgr = self.manager
+    policy = mgr.policy
+    tokens = tuple(int(t) for t in tokens)
+    prompt_len = len(tokens)
+    live = [(j, int(mgr.tables[slot, j])) for j in range(self.blocks_per_req)
+            if mgr.tables[slot, j] != mgr.trash]
+
+    chain_ids: List[int] = []
+    if self.prefix_shareable:
+      # exact-store codecs: paged token j*block..(j+1)*block-1 are prompt
+      # positions verbatim (token_extent is the identity)
+      n_whole = prompt_len // self.block
+      by_j = dict(live)
+      chain_ids = [by_j[j] for j in range(n_whole) if j in by_j]
+      if len(chain_ids) != n_whole:
+        chain_ids = []                # ring holes (shouldn't happen pre-decode)
+
+    extent = policy.token_extent(prompt_len)
+    tail_j = (extent // self.block) if extent % self.block else None
+    if tail_j is not None and tail_j not in dict(live):
+      tail_j = None
+    entry = None
+    if policy.prefix_cacheable:
+      resident_rows = []
+      for ax, st in zip(jax.tree_util.tree_leaves(self._axes),
+                        jax.tree_util.tree_leaves(self.storage)):
+        resident_rows.append(np.asarray(st[:, slot]) if ax == RESIDENT
+                             else None)
+      entry = pfx.FullEntry(tokens=tokens, pairs=list(live),
+                            hwm=mgr.high_water(slot),
+                            resident_rows=resident_rows,
+                            first_token=int(first_token), tail_j=tail_j)
+
+    # budget pressure is measured in *new distinct holds* only: most of a
+    # shared prompt's blocks are usually index-held already (chain nodes
+    # keep existing holds), and counting them would over-evict hot entries
+    # or refuse to publish prompts whose prefix is entirely cached
+    candidate = set(chain_ids) | {b for _, b in (entry.pairs if entry
+                                                 else [])}
+    incoming = sum(1 for b in candidate if idx.holds(b) == 0)
+    if incoming > idx.budget_blocks:
+      return                          # prompt alone overflows the budget
+    released = idx.evict_for(incoming, in_use=self._block_in_tables)
+    if released:
+      mgr.allocator.free(released, owner=pfx.INDEX_OWNER)
+    if chain_ids:
+      new_holds = idx.extend(tokens, chain_ids)
+      if new_holds:
+        mgr.allocator.ref(new_holds, owner=pfx.INDEX_OWNER)
+    if entry is not None:
+      holds = idx.put_full(entry)
+      if holds:
+        mgr.allocator.ref(holds, owner=pfx.INDEX_OWNER)
+
+  def prefix_evict_one(self) -> bool:
+    """Starvation valve: evict the coldest index unit so its blocks can
+    serve admission.  The engine calls this when the pool is idle (no
+    active requests) yet nothing in the queue is admissible — the only
+    thing holding blocks then is the cache itself."""
+    if self.prefix_index is None or self.prefix_index.held_blocks == 0:
+      return False
+    released = self.prefix_index.shrink_to(
+        self.prefix_index.held_blocks - 1, in_use=self._block_in_tables)
+    if not released:
+      return False
+    self.manager.allocator.free(released, owner=pfx.INDEX_OWNER)
+    return True
+
+  def prefix_clear(self) -> int:
+    """Drop every cached prefix (all index holds back to the pool).
+    Returns the number of holds released — after all requests finish, this
+    is what takes every refcount back to zero."""
+    if self.prefix_index is None:
+      return 0
+    released = self.prefix_index.clear()
+    if released:
+      self.manager.allocator.free(released, owner=pfx.INDEX_OWNER)
+    return len(released)
 
   def _make_allocator(self, num_blocks: int):
     """Pool-construction hook: TieredLayout substitutes a device-tier view
@@ -501,11 +841,25 @@ class PagedLayout(CacheLayout):
         block_bytes += leaf.nbytes // (self.num_blocks + 1)
     per_slot_resident = resident_total // max(self.max_batch, 1)
     allocated = self.manager.allocated_count
+    # prefix sharing: `allocated_blocks * block_bytes` counts each physical
+    # block ONCE however many tables map it; `dedup_bytes` is what per-
+    # request copies of the multiply-mapped blocks would have cost on top
+    tables = self.manager.tables
+    live = tables[tables != self.manager.trash].tolist()
+    refs = collections.Counter(live)
+    shared_blocks = sum(1 for c in refs.values() if c > 1)
+    dedup_bytes = sum(c - 1 for c in refs.values() if c > 1) * block_bytes
     return dict(
         kind="paged", block=self.block, num_blocks=self.num_blocks,
         allocated_blocks=allocated, peak_blocks=self.manager.peak_allocated,
+        peak_mapped_blocks=self.manager.peak_mapped,
+        peak_mapped_bytes=self.manager.peak_mapped * block_bytes,
         block_bytes=block_bytes,
         resident_bytes_per_slot=per_slot_resident,
+        shared_blocks=shared_blocks, dedup_bytes=dedup_bytes,
+        prefix_index_blocks=(self.prefix_index.held_blocks
+                             if self.prefix_index is not None else 0),
+        forked_blocks=self.forked_blocks,
         total_bytes=(allocated * block_bytes
                      + active_slots * per_slot_resident),
         capacity_bytes=(self.num_blocks * block_bytes
@@ -538,10 +892,13 @@ class TieredLayout(PagedLayout):
 
   def __init__(self, model, max_batch: int, *, block_size: Optional[int] = None,
                num_blocks: Optional[int] = None,
-               host_blocks: Optional[int] = None):
+               host_blocks: Optional[int] = None,
+               prefix_cache: bool = False,
+               prefix_cache_blocks: Optional[int] = None):
     self._host_blocks_arg = host_blocks       # consumed by _make_allocator
     super().__init__(model, max_batch, block_size=block_size,
-                     num_blocks=num_blocks)
+                     num_blocks=num_blocks, prefix_cache=prefix_cache,
+                     prefix_cache_blocks=prefix_cache_blocks)
     policy = model.cache_policy
     codec_tree = policy.spill_codecs()
     if (jax.tree_util.tree_structure(codec_tree)
@@ -572,16 +929,30 @@ class TieredLayout(PagedLayout):
     return [(j, int(row[j])) for j in range(self.blocks_per_req)
             if row[j] != self.manager.trash]
 
+  def _split_shared(self, slot: int):
+    """Partition a slot's live blocks into (shared, exclusive) pairs.
+
+    A block with any hold beyond this slot's own (the prefix index, another
+    request's table, another spill record's pin) is *shared*: it must stay
+    device-resident across this slot's swap-out — a shared prefix block
+    spills zero times, not once per request."""
+    shared, excl = [], []
+    for j, pid in self._live_row(slot):
+      (shared if self.pool.refcount(pid) > 1 else excl).append((j, pid))
+    return shared, excl
+
   def can_spill(self, slot: int) -> bool:
-    return len(self._live_row(slot)) <= self.pool.free_count(tiersmod.HOST)
+    _, excl = self._split_shared(slot)
+    return len(excl) <= self.pool.free_count(tiersmod.HOST)
 
   def spill(self, slot: int, rid: int, length: int) -> int:
-    """Swap a slot out: encode its blocks to the host tier, save its
-    resident leaves, free its device blocks.  Returns device blocks freed."""
+    """Swap a slot out: encode its exclusive blocks to the host tier, pin
+    its shared (prefix) blocks device-resident, save its resident leaves,
+    release its table.  Returns device blocks actually freed."""
     if rid in self.records:
       raise ValueError(f"request {rid} already spilled")
     mgr = self.manager
-    live = self._live_row(slot)
+    shared, live = self._split_shared(slot)
     dev_ids = [pid for _, pid in live]
     n = len(dev_ids)
     host_ids = self.pool.alloc(n, owner=rid, tier=tiersmod.HOST)
@@ -613,11 +984,16 @@ class TieredLayout(PagedLayout):
         resident_rows.append(None)
         nbytes += nb
         raw += arr.nbytes
-    mgr.release(slot)                   # device refs -> 0, blocks freed
     rec = tiersmod.SpillRecord(
         rid=rid, length=length, hwm=hwm,
         pairs=[(j, hid) for (j, _), hid in zip(live, host_ids)],
-        payloads=payloads, resident_rows=resident_rows)
+        payloads=payloads, resident_rows=resident_rows,
+        shared_pairs=list(shared))
+    if shared:
+      # pin shared blocks device-resident across the swap-out: the slot's
+      # hold is about to be released and the index may evict at any time
+      self.pool.ref([pid for _, pid in shared], owner=rec.spill_owner)
+    mgr.release(slot)                   # slot's holds dropped, excl freed
     rec.nbytes, rec.raw_bytes = nbytes, raw
     self.records[rid] = rec
     self.ledger.record_spill(nbytes, raw, n)
@@ -678,7 +1054,15 @@ class TieredLayout(PagedLayout):
     dev_ids = list(rec.device_ids or [])
     self.pool.set_state(dev_ids, tiersmod.BLOCK_RESIDENT)
     self.pool.reassign(dev_ids, ("fetch", rid), slot)
-    mgr.adopt(slot, [(j, did) for (j, _), did in zip(rec.pairs, dev_ids)],
+    if rec.shared_pairs:
+      # shared prefix blocks never left the device: hand their pin holds to
+      # the destination slot (they are RESIDENT throughout — other requests
+      # may have decoded from them the whole time)
+      self.pool.reassign([pid for _, pid in rec.shared_pairs],
+                         rec.spill_owner, slot)
+    mgr.adopt(slot,
+              rec.shared_pairs + [(j, did)
+                                  for (j, _), did in zip(rec.pairs, dev_ids)],
               rec.hwm)
     padded = np.full((self.blocks_per_req,), mgr.trash, np.int32)
     padded[:len(dev_ids)] = dev_ids

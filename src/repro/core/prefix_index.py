@@ -1,0 +1,346 @@
+"""Token-aligned radix index over published KV block chains (prefix cache).
+
+Serving traffic is dominated by requests that share long system/context
+prompts (LoL-PIM/PIMphony frame exactly this long-context pressure as the
+PIM serving bottleneck).  This module is the lookup structure behind
+copy-on-write prefix sharing: it maps *prompt token prefixes*, at KV-block
+granularity, to live physical block ids in the paged pool, so admission can
+`ref()` every matched block into a new request's table instead of
+re-prefilling and re-allocating it.
+
+Two kinds of entries, published at admission time (right after a request's
+prefill, when the blocks still hold exactly the prefill-time state):
+
+  chain nodes   a radix trie keyed by whole token blocks.  A node at depth
+                j holds the physical block storing paged tokens
+                [j*block, (j+1)*block) of every prompt that shares this
+                token prefix.  Sound only for policies whose prefilled
+                per-position state is *causal* (`CachePolicy.
+                prefix_shareable`: exact-store codecs) — a position's KV
+                must not depend on later prompt tokens.
+  full entries  keyed by the entire prompt.  These capture everything a
+                bit-exact resume needs — the whole block chain, the
+                per-slot resident leaves (AQPIM's rings and codebooks),
+                and the first greedy token — so policies whose prefill
+                couples positions (PQ clustering, SnapKV importance) still
+                hit when the *whole* prompt repeats, which real traffic
+                does constantly (retries, regenerate, multi-turn replays).
+
+The index takes one pool hold per block per entry (owner
+``INDEX_OWNER``); pool-side `ref`/`unref` are performed by the owning
+layout, which calls `evict_for`/`clear` and releases whatever holds this
+structure hands back.  Eviction is LRU and prefers *unreferenced leaves*:
+a block no running request maps is reclaimed before one that is hot in
+some slot's table.
+
+Pure host-side Python/NumPy — no jax imports — so the trie invariants can
+be property-tested without building a model.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: Pool-hold owner tag for every block the index keeps alive.
+INDEX_OWNER = "<prefix-index>"
+
+
+class _Node:
+  """One published token block: trie edge label = its token tuple."""
+  __slots__ = ("tokens", "parent", "children", "block_id", "last_hit")
+
+  def __init__(self, tokens: Tuple[int, ...], parent: Optional["_Node"],
+               block_id: int, last_hit: int):
+    self.tokens = tokens
+    self.parent = parent
+    self.children: Dict[Tuple[int, ...], "_Node"] = {}
+    self.block_id = block_id
+    self.last_hit = last_hit
+
+
+@dataclasses.dataclass
+class FullEntry:
+  """Bit-exact resume state for one exact prompt (published post-prefill).
+
+  `pairs` mirrors the slot's live table (logical_j, block_id); the block at
+  `tail_j` (the partial last block, if any) is the one the donor keeps
+  writing during decode — a hit must `cow_fork` it, never map it shared.
+  `resident_rows` are host copies of the per-slot RESIDENT leaves (PQ
+  rings/codebooks; empty-None list for all-paged policies).  `first_token`
+  is the greedy argmax of the prefill logits, so a full hit skips prefill
+  entirely.
+  """
+  tokens: Tuple[int, ...]
+  pairs: List[Tuple[int, int]]
+  hwm: int
+  resident_rows: List[Optional[np.ndarray]]
+  first_token: int
+  tail_j: Optional[int]
+  last_hit: int = 0
+
+  @property
+  def block_ids(self) -> List[int]:
+    return [bid for _, bid in self.pairs]
+
+
+class PrefixIndex:
+  """Radix trie + full-prompt map over published block chains."""
+
+  def __init__(self, block: int, budget_blocks: int):
+    if block <= 0:
+      raise ValueError(f"block must be positive, got {block}")
+    if budget_blocks < 0:
+      raise ValueError(f"budget_blocks must be >= 0, got {budget_blocks}")
+    self.block = block
+    self.budget_blocks = budget_blocks
+    self._root = _Node((), None, -1, 0)
+    self._full: Dict[Tuple[int, ...], FullEntry] = {}
+    self._holds: collections.Counter = collections.Counter()  # bid -> holds
+    self._clock = 0
+    # observability (engine stats / bench pull these)
+    self.hits = 0
+    self.full_hits = 0
+    self.hit_tokens = 0
+    self.evicted_blocks = 0
+
+  # -- introspection ---------------------------------------------------------
+  @property
+  def held_blocks(self) -> int:
+    """Distinct physical blocks this index keeps alive (the budget unit)."""
+    return len(self._holds)
+
+  def holds(self, block_id: int) -> int:
+    return self._holds.get(block_id, 0)
+
+  @property
+  def chain_nodes(self) -> int:
+    n = 0
+    stack = [self._root]
+    while stack:
+      node = stack.pop()
+      n += len(node.children)
+      stack.extend(node.children.values())
+    return n
+
+  @property
+  def full_entries(self) -> int:
+    return len(self._full)
+
+  # -- lookup ----------------------------------------------------------------
+  def _blocks_of(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+    """Whole token blocks of a prompt (the trie's edge labels)."""
+    toks = tuple(int(t) for t in tokens)
+    return [toks[j:j + self.block]
+            for j in range(0, len(toks) - len(toks) % self.block, self.block)]
+
+  def match(self, tokens: Sequence[int], max_tokens: Optional[int] = None,
+            touch: bool = True) -> List[int]:
+    """Physical block ids of the longest published chain prefixing `tokens`.
+
+    `max_tokens` caps the match (the engine passes len(tokens)-1 so at
+    least one suffix token is always recomputed for its logits).  Matched
+    nodes are LRU-touched unless `touch=False` — read-only admissibility
+    probes (schedulers walk the whole queue every step) must not refresh
+    recency, or a never-admitted queued prompt would pin its chain against
+    eviction forever.
+    """
+    limit = len(tokens) if max_tokens is None else min(max_tokens,
+                                                       len(tokens))
+    ids: List[int] = []
+    node = self._root
+    for blk in self._blocks_of(tokens[:limit]):
+      child = node.children.get(blk)
+      if child is None:
+        break
+      node = child
+      ids.append(node.block_id)
+    if ids and touch:
+      self._touch_chain(node)
+    return ids
+
+  def get_full(self, tokens: Sequence[int], touch: bool = True
+               ) -> Optional[FullEntry]:
+    entry = self._full.get(tuple(int(t) for t in tokens))
+    if entry is not None and touch:
+      entry.last_hit = self._tick()
+    return entry
+
+  def record_hit(self, n_tokens: int, full: bool = False) -> None:
+    self.hits += 1
+    self.hit_tokens += n_tokens
+    if full:
+      self.full_hits += 1
+
+  # -- publish ---------------------------------------------------------------
+  def extend(self, tokens: Sequence[int], block_ids: Sequence[int]
+             ) -> List[int]:
+    """Publish a prompt's whole-block chain.  `block_ids[j]` is the physical
+    block holding token block j.  Existing nodes win (their block already
+    serves other requests); only *newly inserted* nodes take an index hold —
+    the returned ids are exactly the holds the caller must `ref` in the
+    pool (under INDEX_OWNER).
+    """
+    blks = self._blocks_of(tokens)
+    if len(block_ids) > len(blks):
+      raise ValueError(
+          f"{len(block_ids)} block ids for {len(blks)} whole token blocks")
+    new_holds: List[int] = []
+    node = self._root
+    t = self._tick()
+    for blk, bid in zip(blks, block_ids):
+      child = node.children.get(blk)
+      if child is None:
+        child = _Node(blk, node, int(bid), t)
+        node.children[blk] = child
+        self._holds[int(bid)] += 1
+        new_holds.append(int(bid))
+      else:
+        child.last_hit = t
+      node = child
+    return new_holds
+
+  def put_full(self, entry: FullEntry) -> List[int]:
+    """Publish a full-prompt entry; returns the pool holds taken (one per
+    block — every block of the entry, tail included).  An existing entry
+    for the same prompt wins (first publisher's state is already live)."""
+    key = entry.tokens
+    if key in self._full:
+      self._full[key].last_hit = self._tick()
+      return []
+    entry.last_hit = self._tick()
+    self._full[key] = entry
+    holds: List[int] = []
+    for bid in entry.block_ids:
+      self._holds[bid] += 1
+      holds.append(bid)
+    return holds
+
+  # -- eviction --------------------------------------------------------------
+  def evict_for(self, incoming_blocks: int, in_use=None) -> List[int]:
+    """Make room for `incoming_blocks` new holds under the budget; returns
+    the pool holds released (caller unrefs them, owner=INDEX_OWNER)."""
+    if self.budget_blocks <= 0:
+      return []
+    return self.shrink_to(max(self.budget_blocks - incoming_blocks, 0),
+                          in_use)
+
+  def shrink_to(self, target_blocks: int, in_use=None) -> List[int]:
+    """Evict until at most `target_blocks` distinct blocks are held;
+    returns the pool holds released (caller unrefs, owner=INDEX_OWNER).
+
+    Victims are LRU over evictable units — trie *leaves* (an interior node
+    is pinned by its descendants) and full entries — preferring units whose
+    blocks no request currently maps (`in_use(block_id) -> bool`).  May
+    stop early only when nothing evictable remains.
+    """
+    released: List[int] = []
+    guard = 0
+    while self.held_blocks > target_blocks:
+      guard += 1
+      if guard > 100_000:
+        raise AssertionError("prefix-index eviction failed to converge")
+      victim = self._coldest_unit(in_use)
+      if victim is None:
+        break
+      released.extend(self._drop_unit(victim))
+    return released
+
+  def clear(self) -> List[int]:
+    """Drop every entry; returns all pool holds to release (one id per
+    hold, duplicates included)."""
+    released: List[int] = []
+    for bid, n in self._holds.items():
+      released.extend([bid] * n)
+    self._holds.clear()
+    self._root = _Node((), None, -1, 0)
+    self._full.clear()
+    return released
+
+  def _leaves(self) -> List[_Node]:
+    out = []
+    stack = list(self._root.children.values())
+    while stack:
+      node = stack.pop()
+      if node.children:
+        stack.extend(node.children.values())
+      else:
+        out.append(node)
+    return out
+
+  def _coldest_unit(self, in_use):
+    """(kind, unit) with the best eviction score, or None when empty."""
+    used = in_use if in_use is not None else (lambda bid: False)
+    best = None
+    best_key = None
+    for node in self._leaves():
+      key = (bool(used(node.block_id)), node.last_hit)
+      if best_key is None or key < best_key:
+        best, best_key = ("node", node), key
+    for entry in self._full.values():
+      key = (any(used(b) for b in entry.block_ids), entry.last_hit)
+      if best_key is None or key < best_key:
+        best, best_key = ("full", entry), key
+    return best
+
+  def _drop_unit(self, unit) -> List[int]:
+    kind, obj = unit
+    released: List[int] = []
+    if kind == "node":
+      parent = obj.parent
+      del parent.children[obj.tokens]
+      released.append(self._drop_hold(obj.block_id))
+    else:
+      del self._full[obj.tokens]
+      for bid in obj.block_ids:
+        released.append(self._drop_hold(bid))
+    return released
+
+  def _drop_hold(self, bid: int) -> int:
+    if self._holds.get(bid, 0) <= 0:
+      raise AssertionError(f"index released a hold it never took on {bid}")
+    self._holds[bid] -= 1
+    if self._holds[bid] == 0:
+      del self._holds[bid]
+    self.evicted_blocks += 1
+    return bid
+
+  # -- internals -------------------------------------------------------------
+  def _touch_chain(self, node: _Node) -> None:
+    t = self._tick()
+    while node is not None and node.parent is not None:
+      node.last_hit = t
+      node = node.parent
+
+  def _tick(self) -> int:
+    self._clock += 1
+    return self._clock
+
+  def check(self) -> None:
+    """Structural invariants: holds match entries exactly, parents link."""
+    holds = collections.Counter()
+    stack = [self._root]
+    while stack:
+      node = stack.pop()
+      for blk, child in node.children.items():
+        if child.tokens != blk or child.parent is not node:
+          raise AssertionError("trie edge/parent linkage broken")
+        if len(blk) != self.block:
+          raise AssertionError(f"edge label of {len(blk)} tokens "
+                               f"(block={self.block})")
+        holds[child.block_id] += 1
+        stack.append(child)
+    for entry in self._full.values():
+      for bid in entry.block_ids:
+        holds[bid] += 1
+    if holds != self._holds:
+      raise AssertionError(
+          f"index hold ledger drifted: {dict(self._holds)} vs entries "
+          f"{dict(holds)}")
+
+  def __repr__(self) -> str:
+    return (f"PrefixIndex(block={self.block}, nodes={self.chain_nodes}, "
+            f"full={self.full_entries}, held={self.held_blocks}/"
+            f"{self.budget_blocks})")

@@ -57,23 +57,33 @@ _TIER_STATES = {DEVICE: (BLOCK_RESIDENT, BLOCK_IN_FLIGHT),
                 HOST: (BLOCK_SPILLED,)}
 
 
+#: Holder key for legacy owner-less `ref()` calls on a multi-holder block.
+ANON = "<anon>"
+
+
 @dataclasses.dataclass
 class _BlockMeta:
-  owner: Any
-  refs: int
+  holders: collections.Counter          # owner -> hold count (multiset)
   state: str
   last_touch: int
+
+  @property
+  def refs(self) -> int:
+    return sum(self.holders.values())
 
 
 class TieredBlockPool:
   """Refcounted free-list allocator over two block tiers.
 
   Owners are opaque tags (the engine uses slot indices on tier 0 and request
-  ids on tier 1).  `alloc` hands out blocks with refcount 1; `ref`/`unref`
-  adjust it and a block returns to the free list only at zero.  Every
-  transition is checked: double alloc, unref of a free block, wrong owner,
-  or an illegal residency transition raises — the invariants the hypothesis
-  suite drives.
+  ids on tier 1; the prefix index a sentinel).  Since PR 4 a block's
+  ownership is a *multiset of holders* — copy-on-write prefix sharing holds
+  one published block from the index and from every request whose table maps
+  it.  `alloc` hands out blocks with one hold; `ref`/`unref` adjust holds
+  and a block returns to the free list only when the last holder lets go.
+  Every transition is checked: double alloc, unref of a free block or of a
+  hold the owner does not have, or an illegal residency transition raises —
+  the invariants the hypothesis suite drives.
   """
 
   def __init__(self, device_blocks: int, host_blocks: int):
@@ -103,8 +113,13 @@ class TieredBlockPool:
     meta = self._meta[tier].get(i)
     return None if meta is None else meta.state
 
+  def holder_count(self, i: int, owner: Any, tier: int = DEVICE) -> int:
+    meta = self._meta[tier].get(i)
+    return 0 if meta is None else meta.holders.get(owner, 0)
+
   def owned(self, owner: Any, tier: int = DEVICE) -> List[int]:
-    return [i for i, m in self._meta[tier].items() if m.owner == owner]
+    return [i for i, m in self._meta[tier].items()
+            if m.holders.get(owner, 0) > 0]
 
   # -- allocation ------------------------------------------------------------
   def alloc(self, n: int, owner: Any = None, tier: int = DEVICE,
@@ -121,33 +136,53 @@ class TieredBlockPool:
     for i in ids:
       if i in self._meta[tier]:
         raise AssertionError(f"free list returned owned block {i}")
-      self._meta[tier][i] = _BlockMeta(owner=owner, refs=1, state=state,
-                                       last_touch=self._tick())
+      self._meta[tier][i] = _BlockMeta(
+          holders=collections.Counter({owner: 1}), state=state,
+          last_touch=self._tick())
     return ids
 
-  def ref(self, ids: Sequence[int], tier: int = DEVICE) -> None:
-    """Take an additional reference (prefix-sharing groundwork)."""
+  def ref(self, ids: Sequence[int], tier: int = DEVICE, owner: Any = None
+          ) -> None:
+    """Take an additional hold (prefix sharing / spill pinning).  `owner=None`
+    (legacy) attributes the hold to the sole existing holder when there is
+    exactly one, else to the anonymous holder."""
     for i in ids:
       meta = self._require(i, tier)
-      meta.refs += 1
+      key = owner
+      if key is None:
+        key = (next(iter(meta.holders)) if len(meta.holders) == 1 else ANON)
+      meta.holders[key] += 1
 
   def unref(self, ids: Sequence[int], owner: Any = None, tier: int = DEVICE
             ) -> List[int]:
-    """Drop one reference per id; blocks reaching zero return to the free
-    list.  Returns the ids actually freed."""
+    """Drop one hold per id; blocks whose last hold is dropped return to the
+    free list.  Returns the ids actually freed.  `owner=None` (legacy) drops
+    the sole holder's hold (anonymous holds first) and refuses on a
+    multi-owner block (ambiguous)."""
     freed = []
     for i in ids:
       meta = self._meta[tier].get(i)
       if meta is None:
         raise ValueError(f"unref of free tier-{tier} block {i} (double free)")
-      if owner is not None and meta.owner != owner:
+      key = owner
+      if key is None:
+        if meta.holders.get(ANON, 0) > 0:
+          key = ANON
+        elif len(meta.holders) == 1:
+          key = next(iter(meta.holders))
+        else:
+          raise ValueError(
+              f"tier-{tier} block {i} held by "
+              f"{sorted(map(repr, meta.holders))}; anonymous unref is "
+              f"ambiguous")
+      if meta.holders.get(key, 0) <= 0:
         raise ValueError(
-            f"tier-{tier} block {i} owned by {meta.owner!r}, "
-            f"unreffed by {owner!r}")
-      meta.refs -= 1
-      if meta.refs < 0:
-        raise AssertionError(f"negative refcount on tier-{tier} block {i}")
-      if meta.refs == 0:
+            f"tier-{tier} block {i} owned by "
+            f"{sorted(map(repr, meta.holders))}, unreffed by {owner!r}")
+      meta.holders[key] -= 1
+      if meta.holders[key] == 0:
+        del meta.holders[key]
+      if not meta.holders:
         del self._meta[tier][i]
         self._free[tier].append(i)
         freed.append(i)
@@ -160,15 +195,20 @@ class TieredBlockPool:
 
   def reassign(self, ids: Sequence[int], old_owner: Any, new_owner: Any,
                tier: int = DEVICE) -> None:
-    """Hand blocks between owners (fetch completion adopts prefetched blocks
-    into the destination slot's table)."""
+    """Move one hold per block from `old_owner` to `new_owner` (fetch
+    completion adopts prefetched/shared blocks into the destination slot's
+    table).  Other holders (the prefix index, other slots) are untouched."""
     for i in ids:
       meta = self._require(i, tier)
-      if meta.owner != old_owner:
+      if meta.holders.get(old_owner, 0) <= 0:
         raise ValueError(
-            f"tier-{tier} block {i} owned by {meta.owner!r}, "
-            f"reassigned from {old_owner!r}")
-      meta.owner = new_owner
+            f"tier-{tier} block {i} owned by "
+            f"{sorted(map(repr, meta.holders))}, reassigned from "
+            f"{old_owner!r}")
+      meta.holders[old_owner] -= 1
+      if meta.holders[old_owner] == 0:
+        del meta.holders[old_owner]
+      meta.holders[new_owner] += 1
 
   # -- residency state machine ----------------------------------------------
   def set_state(self, ids: Sequence[int], state: str, tier: int = DEVICE
@@ -203,7 +243,7 @@ class TieredBlockPool:
   def owner_last_touch(self, owner: Any, tier: int = DEVICE) -> int:
     """Most recent touch over the owner's blocks (-1 if it owns none)."""
     touches = [m.last_touch for m in self._meta[tier].values()
-               if m.owner == owner]
+               if m.holders.get(owner, 0) > 0]
     return max(touches) if touches else -1
 
   def lru_owner(self, owners: Sequence[Any], tier: int = DEVICE
@@ -228,7 +268,7 @@ class TieredBlockPool:
       if free | owned != set(range(self.num_blocks[tier])):
         raise AssertionError(f"tier-{tier} allocator leaked/invented blocks")
       for i, meta in self._meta[tier].items():
-        if meta.refs <= 0:
+        if meta.refs <= 0 or any(c <= 0 for c in meta.holders.values()):
           raise AssertionError(f"tier-{tier} block {i} held with refs<=0")
         if meta.state not in _TIER_STATES[tier]:
           raise AssertionError(
@@ -275,6 +315,15 @@ class TierView:
 
   def free(self, ids: Sequence[int], owner: Any = None) -> None:
     self.pool.unref(ids, owner=owner, tier=self.tier)
+
+  def ref(self, ids: Sequence[int], owner: Any = None) -> None:
+    self.pool.ref(ids, tier=self.tier, owner=owner)
+
+  def refcount(self, i: int) -> int:
+    return self.pool.refcount(i, tier=self.tier)
+
+  def holder_count(self, i: int, owner: Any) -> int:
+    return self.pool.holder_count(i, owner, tier=self.tier)
 
   def owned(self, owner: Any) -> List[int]:
     return self.pool.owned(owner, tier=self.tier)
@@ -439,6 +488,11 @@ class SpillRecord:
   would otherwise be overwritten by the slot's next tenant.  While a
   fetch-ahead is materializing the request, `device_ids`/`staged` hold the
   IN_FLIGHT destination blocks and decoded arrays.
+
+  `shared_pairs` are prefix-shared blocks (held by the prefix index or
+  other requests): they never cross the tier boundary — a pin hold keeps
+  them device-resident while the request is swapped out, so a shared
+  prefix costs the PCIe link nothing however many requests swap over it.
   """
   rid: int
   length: int
@@ -451,6 +505,13 @@ class SpillRecord:
   raw_bytes: int = 0                    # uncompressed-equivalent bytes
   device_ids: Optional[List[int]] = None
   staged: Optional[List[Optional[np.ndarray]]] = None
+  shared_pairs: List[Tuple[int, int]] = dataclasses.field(
+      default_factory=list)             # (logical_j, device_block_id)
+
+  @property
+  def spill_owner(self) -> Tuple[str, int]:
+    """Holder tag pinning `shared_pairs` on the device while swapped out."""
+    return ("spillshare", self.rid)
 
   @property
   def host_ids(self) -> List[int]:

@@ -28,10 +28,20 @@ Storage and policy are split along the PR 2 API boundary:
   `fifo`, `sjf`, `paged` (admit-on-available-blocks, preempt-and-requeue
   on pool exhaustion — recompute preemption: a preempted request is re-
   prefilled from its prompt and, under greedy decoding, regenerates the
-  identical tokens), or `tiered` (swap preemption: the LRU-coldest victim's
+  identical tokens), `tiered` (swap preemption: the LRU-coldest victim's
   KV spills to the host tier and a later fetch resumes it mid-decode — no
   recompute; `engine.stats` counts spills/fetches, the bytes that crossed,
-  and the PCIe time they model).
+  and the PCIe time they model), or `prefix` (longest-cached-prefix-first
+  cache-affinity admission).
+- *What is already known* is the prefix cache (`cfg.prefix_cache` /
+  `prefix_cache=`; pooled layouts only): admission looks the prompt up in
+  the layout's `PrefixIndex` and either restores a whole-prompt snapshot
+  (zero prefill — the first greedy token was published with it), shares
+  the matched block chain copy-on-write and prefills **only the uncached
+  suffix** through a fixed-shape chunked-prefill jit, or falls back to the
+  ordinary full prefill.  All three paths produce bit-identical greedy
+  tokens; `engine.stats` counts hits, hit tokens, cow-forks, and deduped
+  bytes.
 
 Mechanics
 ---------
@@ -106,6 +116,13 @@ class EngineStats:
   spill_bytes: int = 0           # device -> host, post-spill-codec
   fetch_bytes: int = 0           # host -> device, post-spill-codec
   modeled_pcie_s: float = 0.0    # time that traffic would occupy the link
+  # prefix-cache accounting (zero when --prefix-cache is off)
+  prefix_hits: int = 0           # admissions that matched the prefix index
+  prefix_full_hits: int = 0      # whole-prompt hits (prefill skipped)
+  prefix_hit_tokens: int = 0     # prompt tokens served from cached blocks
+  prefill_tokens: int = 0        # prompt tokens actually prefilled (computed)
+  forked_blocks: int = 0         # copy-on-write forks of shared blocks
+  dedup_bytes: int = 0           # peak bytes saved by multi-mapped blocks
 
   @property
   def occupancy(self) -> float:
@@ -113,9 +130,16 @@ class EngineStats:
     lanes = self.decode_steps * self.max_batch
     return self.busy_slot_steps / lanes if lanes else 0.0
 
+  @property
+  def prefix_hit_rate(self) -> float:
+    """Fraction of submitted prompt tokens served from the prefix cache."""
+    total = self.prefix_hit_tokens + self.prefill_tokens
+    return self.prefix_hit_tokens / total if total else 0.0
+
   def as_dict(self) -> dict:
     d = dataclasses.asdict(self)
     d["occupancy"] = round(self.occupancy, 4)
+    d["prefix_hit_rate"] = round(self.prefix_hit_rate, 4)
     return d
 
   def summary(self) -> str:
@@ -129,6 +153,11 @@ class EngineStats:
       s += (f" | spills {self.spills} ({self.spill_bytes} B), fetches "
             f"{self.fetches} ({self.fetch_bytes} B, {self.prefetches} "
             f"ahead), ~{self.modeled_pcie_s * 1e3:.2f} ms PCIe")
+    if self.prefix_hits:
+      s += (f" | prefix hits {self.prefix_hits} ({self.prefix_full_hits} "
+            f"full), {100 * self.prefix_hit_rate:.1f}% of prompt tokens "
+            f"cached, {self.forked_blocks} cow-forks, {self.dedup_bytes} B "
+            f"deduped")
     return s
 
 
@@ -142,7 +171,9 @@ class ServeEngine:
                scheduler: Optional[str] = None,
                block_size: Optional[int] = None,
                num_blocks: Optional[int] = None,
-               host_blocks: Optional[int] = None):
+               host_blocks: Optional[int] = None,
+               prefix_cache: Optional[bool] = None,
+               prefix_cache_blocks: Optional[int] = None):
     if cfg.family not in ("dense", "moe"):
       raise ValueError(
           f"ServeEngine supports dense/moe attention families, got "
@@ -185,11 +216,21 @@ class ServeEngine:
     self._prefill = jax.jit(
         lambda p, t, ln: self.model.prefill(p, t, None, lengths=ln))
     # physical cache storage + its compiled admit/decode programs
+    self.prefix_cache = (cfg.prefix_cache if prefix_cache is None
+                         else bool(prefix_cache))
     self.layout = cache_registry.make_layout(
         layout_name, self.model, max_batch,
         block_size=block_size, num_blocks=num_blocks,
         host_blocks=host_blocks if host_blocks is not None
-        else cfg.host_blocks)
+        else cfg.host_blocks,
+        prefix_cache=self.prefix_cache,
+        prefix_cache_blocks=prefix_cache_blocks
+        if prefix_cache_blocks is not None else cfg.prefix_cache_blocks)
+    if self.prefix_cache:
+      # the chunked suffix prefill must attend over exactly the padded
+      # extent the full prefill uses — that is the bit-exactness contract
+      self.layout.set_prompt_capacity(self.prompt_capacity)
+      self._prefix_chunk = self.layout.block
 
     self.stats = EngineStats(max_batch=max_batch)
     self._lengths = np.zeros((max_batch,), np.int32)
@@ -241,6 +282,19 @@ class ServeEngine:
   def queue_view(self) -> Tuple[RequestHandle, ...]:
     """Waiting requests in queue order — scheduler's read view."""
     return tuple(self._queue)
+
+  def admissible(self, req: RequestHandle) -> bool:
+    """Can this queued request be admitted right now?  Prefix-cache aware:
+    a request whose prompt prefix is cached needs only its unshared suffix
+    blocks, which `can_admit` alone would overestimate.  Schedulers gate on
+    this instead of reaching into the layout."""
+    total = req.prompt_len + req.max_new_tokens
+    if req.spilled:
+      return self.layout.can_fetch(req.rid, total)
+    if self.prefix_cache:
+      plan = self.layout.prefix_plan(req.prompt, total)
+      return plan["need"] <= self.layout.free_blocks
+    return self.layout.can_admit(req.prompt_len, total)
 
   def step(self) -> List[RequestHandle]:
     """Admit queued requests into free slots, run one batched decode step,
@@ -302,7 +356,27 @@ class ServeEngine:
 
   def _admit(self) -> List[RequestHandle]:
     """Prefill (fresh) or fetch (spilled) scheduler-picked requests into
-    free slots."""
+    free slots.  If the engine is idle yet nothing is admissible, the only
+    thing holding the pool is the prefix cache itself — evict its coldest
+    entries until admission unblocks (liveness over cache retention)."""
+    finished = self._admit_pass()
+    if (self.prefix_cache and not finished and self.active_count == 0
+        and self._queue):
+      evicted = False
+      while True:
+        # fifo/sjf pick without gating on admissibility, so check the
+        # picked request itself — pick() is None is not the only stall
+        idx = self.scheduler.pick(self._queue, self)
+        if idx is not None and self.admissible(self._queue[idx]):
+          break
+        if not self.layout.prefix_evict_one():
+          break
+        evicted = True
+      if evicted:
+        finished.extend(self._admit_pass())
+    return finished
+
+  def _admit_pass(self) -> List[RequestHandle]:
     finished = []
     free_slots = [s for s, r in enumerate(self._slots) if r is None]
     while free_slots and self._queue:
@@ -329,18 +403,19 @@ class ServeEngine:
         self.stats.fetches += 1
         self._sync_transfer_stats()
         continue
-      if not self.layout.can_admit(req.prompt_len,
-                                   req.prompt_len + req.max_new_tokens):
+      total = req.prompt_len + req.max_new_tokens
+      plan = None
+      if self.prefix_cache:
+        # touch=True: this is the real admission — refresh matched entries'
+        # LRU recency (scheduler probes are read-only)
+        plan = self.layout.prefix_plan(req.prompt, total, touch=True)
+        if plan["need"] > self.layout.free_blocks:
+          break                     # wait for running requests to free blocks
+      elif not self.layout.can_admit(req.prompt_len, total):
         break                       # wait for running requests to free blocks
       del self._queue[idx]
       slot = free_slots.pop(0)
-      padded = np.zeros((1, self.prompt_capacity), np.int32)
-      padded[0, :req.prompt_len] = req.prompt
-      logits, slot_cache = self._prefill(
-          self.params, jnp.asarray(padded),
-          jnp.asarray([req.prompt_len], jnp.int32))
-      self.layout.admit(slot, slot_cache, req.prompt_len)
-      first = int(np.asarray(jnp.argmax(logits[0], axis=-1)))
+      first = self._prefill_into(slot, req, plan)
       req.slot = slot
       req.admitted_step = self._step_no
       req.tokens.append(first)
@@ -348,10 +423,76 @@ class ServeEngine:
       self._lengths[slot] = req.prompt_len
       self._cur[slot] = first
       self.stats.admits += 1
+      self._sync_prefix_stats()
       if len(req.tokens) >= req.max_new_tokens:
         finished.append(self._finish(slot, req))
         free_slots.insert(0, slot)
     return finished
+
+  def _prefill_into(self, slot: int, req: RequestHandle,
+                    plan: Optional[dict]) -> int:
+    """Build the slot's KV for this prompt along the cheapest correct path:
+    a whole-prompt snapshot (zero prefill), a shared chain + suffix-only
+    chunked prefill, or the ordinary full prefill.  Returns the first
+    greedy token; bit-identical across all three paths by construction."""
+    p_len = req.prompt_len
+    if plan is not None and plan["kind"] == "full":
+      entry = plan["entry"]
+      self.layout.admit_from_full(slot, entry)
+      self.stats.prefix_hits += 1
+      self.stats.prefix_full_hits += 1
+      self.stats.prefix_hit_tokens += p_len
+      self.layout.prefix_index.record_hit(p_len, full=True)
+      return int(entry.first_token)
+    if plan is not None and plan["kind"] == "chain":
+      matched = plan["matched_tokens"]
+      self.layout.admit_shared(slot, plan["match"], p_len)
+      first = self._prefill_suffix(slot, req, matched)
+      self.stats.prefix_hits += 1
+      self.stats.prefix_hit_tokens += matched
+      self.stats.prefill_tokens += p_len - matched
+      self.layout.prefix_index.record_hit(matched)
+      self.layout.prefix_publish(slot, req.prompt, first)
+      return first
+    padded = np.zeros((1, self.prompt_capacity), np.int32)
+    padded[0, :p_len] = req.prompt
+    logits, slot_cache = self._prefill(
+        self.params, jnp.asarray(padded), jnp.asarray([p_len], jnp.int32))
+    self.layout.admit(slot, slot_cache, p_len)
+    first = int(np.asarray(jnp.argmax(logits[0], axis=-1)))
+    self.stats.prefill_tokens += p_len
+    if self.prefix_cache:
+      self.layout.prefix_publish(slot, req.prompt, first)
+    return first
+
+  def _prefill_suffix(self, slot: int, req: RequestHandle, start: int) -> int:
+    """Suffix-only prefill: run the uncached prompt tail [start, prompt_len)
+    through fixed-shape chunks against the slot's resident prefix KV.  One
+    compile total (chunk shape is constant), any suffix length."""
+    chunk = self._prefix_chunk
+    p_len = req.prompt_len
+    last_logits, last_start = None, start
+    pos = start
+    while pos < p_len:
+      toks = np.zeros((1, chunk), np.int32)
+      avail = req.prompt[pos:min(pos + chunk, p_len)]
+      toks[0, :len(avail)] = avail
+      last_logits = self.layout.prefill_chunk(self.params, slot, toks, pos)
+      last_start = pos
+      pos += chunk
+    row = p_len - 1 - last_start
+    return int(np.asarray(jnp.argmax(last_logits[0, row], axis=-1)))
+
+  def _sync_prefix_stats(self) -> None:
+    if not self.prefix_cache:
+      return
+    self.stats.forked_blocks = self.layout.forked_blocks
+    by = self.layout.bytes(active_slots=self.active_count)
+    self.stats.dedup_bytes = max(self.stats.dedup_bytes, by["dedup_bytes"])
+
+  def clear_prefix_cache(self) -> int:
+    """Drop every published prefix (frees the index's block holds)."""
+    return self.layout.prefix_clear() if self.prefix_cache else 0
 
   def _ensure_blocks(self) -> None:
     """Grow every active slot's block table to hold this step's token,
@@ -367,6 +508,8 @@ class ServeEngine:
               slot, int(self._lengths[slot]) + 1):
             raise AssertionError("pool accounting drifted during growth")
         return
+      if self.prefix_cache and self.layout.prefix_evict_one():
+        continue      # prefer dropping cold cached prefixes over victims
       victim = self.scheduler.on_exhausted(self)
       if victim is None:
         raise RuntimeError(

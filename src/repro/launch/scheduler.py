@@ -18,6 +18,9 @@ are `CachePolicy` keys and storage is a `CacheLayout` key:
 |          | (fetch spilled, prefill new) | running request to the host    |
 |          |                              | tier (recompute only if the    |
 |          |                              | host pool is full)             |
+| `prefix` | admissible request with the  | preempt-and-requeue the        |
+|          | longest cached prefix first  | youngest running request       |
+|          | (cache-hot admits first)     |                                |
 
 Schedulers see the engine read-only: the queue of `RequestHandle`s, the
 active slots, and the layout's block pool.  The engine performs the actual
@@ -128,8 +131,7 @@ class PagedScheduler(Scheduler):
 
   def pick(self, queue, engine):
     for i, req in enumerate(queue):
-      if engine.layout.can_admit(req.prompt_len,
-                                 req.prompt_len + req.max_new_tokens):
+      if engine.admissible(req):
         return i
     return None
 
@@ -139,6 +141,50 @@ class PagedScheduler(Scheduler):
     if len(active) <= 1:
       return None
     return max(active)[2]
+
+
+@register("prefix")
+class PrefixScheduler(PagedScheduler):
+  """Cache-affinity admission over the prefix index.
+
+  Queued requests are scored by how many prompt tokens the prefix cache
+  already holds for them (whole-prompt snapshot = the full prompt; chain
+  match = matched blocks x block size); the admissible request with the
+  longest cached prefix admits first, FIFO on ties — cache-hot requests
+  reuse published blocks while they are still resident instead of queueing
+  behind cold ones that will re-allocate them.  Admissibility accounts for
+  sharing: a hit needs only its unshared suffix blocks.  Exhaustion falls
+  back to the paged scheduler's youngest-yields recompute preemption
+  (cached-block eviction itself lives in the index and prefers
+  unreferenced leaves).  Works with the prefix cache off too (degrades to
+  plain admit-on-available-blocks).
+  """
+
+  def pick(self, queue, engine):
+    layout = engine.layout
+    best, best_key = None, None
+    for i, req in enumerate(queue):
+      if req.spilled:
+        if not layout.can_fetch(req.rid,
+                                req.prompt_len + req.max_new_tokens):
+          continue
+        matched = req.prompt_len          # its KV is already materialized
+      elif getattr(layout, "prefix_enabled", False):
+        # one read-only plan per request: both the admissibility gate and
+        # the cache-affinity score (no LRU touch from queue probes)
+        plan = layout.prefix_plan(req.prompt,
+                                  req.prompt_len + req.max_new_tokens)
+        if plan["need"] > layout.free_blocks:
+          continue
+        matched = plan["matched_tokens"]
+      else:
+        if not engine.admissible(req):
+          continue
+        matched = 0
+      key = (-matched, req.rid)           # longest cached prefix, FIFO ties
+      if best_key is None or key < best_key:
+        best, best_key = i, key
+    return best
 
 
 @register("tiered")
@@ -161,11 +207,7 @@ class TieredScheduler(Scheduler):
 
   def pick(self, queue, engine):
     for i, req in enumerate(queue):
-      total = req.prompt_len + req.max_new_tokens
-      if req.spilled:
-        if engine.layout.can_fetch(req.rid, total):
-          return i
-      elif engine.layout.can_admit(req.prompt_len, total):
+      if engine.admissible(req):
         return i
     return None
 

@@ -138,7 +138,9 @@ def build_engine(args):
                             scheduler=args.scheduler,
                             kv_block_size=args.kv_block_size,
                             host_blocks=args.host_blocks,
-                            spill_codec=args.spill_codec)
+                            spill_codec=args.spill_codec,
+                            prefix_cache=args.prefix_cache,
+                            prefix_cache_blocks=args.prefix_cache_blocks)
   context = args.prompt_len + args.gen
   return ServeEngine(cfg, context_len=context, max_batch=args.batch,
                      prompt_capacity=args.prompt_len,
@@ -156,6 +158,13 @@ def dump_stats_json(engine, path: str) -> None:
   ledger = getattr(engine.layout, "ledger", None)
   if ledger is not None:
     payload["transfer"] = ledger.as_dict()
+  index = getattr(engine.layout, "prefix_index", None)
+  if index is not None:
+    payload["prefix_cache"] = dict(
+        budget_blocks=index.budget_blocks, held_blocks=index.held_blocks,
+        chain_nodes=index.chain_nodes, full_entries=index.full_entries,
+        hits=index.hits, full_hits=index.full_hits,
+        hit_tokens=index.hit_tokens, evicted_blocks=index.evicted_blocks)
   with open(path, "w") as f:
     json.dump(payload, f, indent=2)
     f.write("\n")
@@ -198,6 +207,13 @@ def run_engine_demo(args) -> None:
             f"blocks holding {by['spilled_requests']} spilled requests "
             f"({by['spilled_payload_bytes']} B)")
       print(f"transfer: {engine.layout.ledger.summary()}")
+    if args.prefix_cache:
+      idx = engine.layout.prefix_index
+      print(f"prefix cache: {idx.held_blocks}/{idx.budget_blocks} blocks "
+            f"held ({idx.chain_nodes} chain nodes, {idx.full_entries} full "
+            f"entries), {idx.hits} hits ({idx.hit_tokens} tokens), "
+            f"{by['forked_blocks']} cow-forks, {by['dedup_bytes']} B "
+            f"deduped now")
   else:
     print(f"kv memory: {by['total_bytes']} B contiguous "
           f"({by['per_slot_bytes']} B/slot x {args.batch} slots)")
@@ -240,6 +256,14 @@ def make_parser() -> argparse.ArgumentParser:
   ap.add_argument("--spill-codec", default="raw", choices=("raw", "int8"),
                   help="tiered-layout exact-KV spill codec; PQ code rows "
                        "always spill verbatim (they are the compressed form)")
+  ap.add_argument("--prefix-cache", action="store_true",
+                  help="share prompt-prefix KV blocks across requests "
+                       "(copy-on-write block tables + suffix-only prefill; "
+                       "requires --cache-layout paged/tiered, token-exact "
+                       "under greedy decoding)")
+  ap.add_argument("--prefix-cache-blocks", type=int, default=None,
+                  help="device blocks the prefix index may pin "
+                       "(refcount+LRU budget; default: half the pool)")
   ap.add_argument("--stats-json", default=None, metavar="PATH",
                   help="engine mode: dump EngineStats.as_dict() + layout "
                        "footprint + transfer ledger as JSON")

@@ -6,7 +6,7 @@ f32 for softmax/norm statistics.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -127,12 +127,19 @@ def chunked_attention(
     causal: bool = True,
     blk_q: int = 512,
     blk_k: int = 512,
+    q_offset: Any = 0,
 ) -> Array:
   """Blockwise online-softmax attention; the lowered-HLO twin of the Pallas kernel.
 
   Structured as scan(q blocks) x scan(kv blocks) so XLA never materializes the
   (S, S) score matrix — essential for the 32k prefill and 4k x 256 train shapes.
   GQA via reshaping q to (B, Hkv, g, S, d).
+
+  `q_offset` (int or traced scalar) is the absolute position of q row 0 when
+  the query rows are a *suffix chunk* of a longer cached context (prefix-
+  sharing suffix-only prefill): the causal mask compares key positions
+  against `q_offset + row`.  Per-row numerics are invariant to the q extent
+  and blocking, so a chunk's rows match a full-sequence call bit for bit.
   """
   b, hq, sq, d = q.shape
   hkv, sk = k.shape[1], k.shape[2]
@@ -166,7 +173,7 @@ def chunked_attention(
           k_blk.astype(jnp.float32)) * scale
       kpos = kj * blk_k + jnp.arange(blk_k)
       if causal:
-        qpos = qi * blk_q + jnp.arange(blk_q)
+        qpos = q_offset + qi * blk_q + jnp.arange(blk_q)
         mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < sk_real)
         s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
       elif pad_k:

@@ -214,6 +214,33 @@ class Model:
     logits = self._logits(params, x_last)
     return logits[:, 0], caches
 
+  def prefill_chunk(self, params, tokens: Array, caches, start: Array,
+                    kv_extent: int) -> Tuple[Array, Any]:
+    """Suffix-only prefill over a fixed-size chunk of prompt rows.
+
+    `tokens` (B, C) are prompt positions [start, start+C); `caches` already
+    hold the K/V of positions [0, start) (a shared prefix ref'd from the
+    prefix index).  Inserts the chunk's K/V and returns logits for every
+    chunk row — the caller picks the row of the prompt's true last token.
+    `kv_extent` must equal the padded extent the full prefill attends over
+    (prompt capacity): that is what makes chunked and full prefill
+    bit-identical per row.  Dense family only — MoE capacity routing and
+    recurrent state couple positions across the sequence.
+    """
+    cfg = self.cfg
+    if cfg.family != "dense":
+      raise ValueError(
+          f"prefill_chunk supports the dense family only, got {cfg.family!r}")
+    x = self._embed(params, tokens, None)
+    positions = start + jnp.arange(tokens.shape[1])[None, :]
+
+    def body(y, inp):
+      lp, c = inp
+      y, c = tfm.dense_block_chunk(lp, y, c, positions, cfg, kv_extent)
+      return y, c
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    return self._logits(params, x), new_caches
+
   # -------------------------------------------------------------------------
   # decode
   # -------------------------------------------------------------------------

@@ -71,6 +71,62 @@ def _attn_prefill(
   return out, cache
 
 
+def _attn_chunk(
+    p: dict, x: Array, cache, positions: Array, cfg, kv_extent: int
+) -> Tuple[Array, Any]:
+  """Suffix-chunk attention: insert this chunk's K/V into an existing
+  exact-store cache and attend causally at absolute positions.
+
+  The bit-exactness contract with `_attn_prefill` (the prefix-cache on/off
+  oracle): the chunk attends over the same `kv_extent` key extent the full
+  prefill used (prompt capacity), with the same `blk_k` blocking, and every
+  op is per-row — so row p's output here equals row p of a full prefill
+  whose earlier rows produced exactly the cached prefix K/V.  Masked
+  positions hold stale block payloads instead of padding activations, but
+  contribute exact zeros either way.  Exact-store caches only (`policy.
+  prefix_shareable`); weighted/clustered states couple positions and take
+  the full-entry path instead.
+  """
+  scale = cfg.head_dim ** -0.5
+  q, k, v = layers.attention_qkv(p, x, positions, cfg.rope_theta)
+  start = positions[0, 0]
+  chunk = x.shape[1]
+
+  def insert(buf, new):
+    # pad-insert-crop keeps shapes static while a dynamic start never
+    # clamp-shifts: start + chunk always fits the padded extent
+    pad = jnp.pad(new.astype(buf.dtype),
+                  ((0, 0), (0, 0), (0, buf.shape[2] - chunk), (0, 0)))
+    rolled = jnp.roll(pad, start, axis=2)
+    written = jnp.arange(buf.shape[2])
+    mask = ((written >= start) & (written < start + chunk))[None, None, :,
+                                                            None]
+    return jnp.where(mask, rolled, buf)
+
+  k_c = insert(cache.k, k)
+  v_c = insert(cache.v, v)
+  attn = layers.chunked_attention(
+      q, k_c[:, :, :kv_extent], v_c[:, :, :kv_extent], scale, causal=True,
+      blk_q=cfg.attn_block, blk_k=cfg.attn_block, q_offset=start)
+  out = layers.attention_out(p, attn)
+  return out, cache._replace(k=k_c, v=v_c)
+
+
+def dense_block_chunk(p: dict, x: Array, cache, positions: Array, cfg,
+                      kv_extent: int) -> Tuple[Array, Any]:
+  """Suffix-only prefill: one layer over a chunk of prompt rows, consuming
+  the already-cached prefix as attention context (prefix sharing)."""
+  h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+  attn, cache = _attn_chunk(p["attn"], h, cache, positions, cfg, kv_extent)
+  if cfg.parallel_block:
+    ffn, _ = _ffn_apply(p, h, cfg)
+    return x + attn + ffn, cache
+  x = x + attn
+  h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+  ffn, _ = _ffn_apply(p, h, cfg)
+  return x + ffn, cache
+
+
 def _attn_step(
     p: dict, x: Array, cache, lengths: Array, cfg, policy
 ) -> Tuple[Array, Any]:

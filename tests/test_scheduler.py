@@ -17,7 +17,7 @@ def _cfg(policy="exact", dtype="float32", **kw):
 
 
 def test_registry_and_protocol():
-  assert scheduler_lib.names() == ("fifo", "paged", "sjf", "tiered")
+  assert scheduler_lib.names() == ("fifo", "paged", "prefix", "sjf", "tiered")
   assert scheduler_lib.make("sjf").name == "sjf"
   with pytest.raises(KeyError):
     scheduler_lib.make("priority")
@@ -26,6 +26,8 @@ def test_registry_and_protocol():
   assert scheduler_lib.make("tiered").preemptive
   assert scheduler_lib.make("tiered").spills
   assert not scheduler_lib.make("paged").spills
+  assert scheduler_lib.make("prefix").preemptive
+  assert not scheduler_lib.make("prefix").spills
 
 
 def test_paged_scheduler_requires_paged_layout():

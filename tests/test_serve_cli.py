@@ -53,6 +53,60 @@ def test_flags_reach_engine_and_config(argv, layout, sched, policy):
     assert codecs.k == args.spill_codec
 
 
+def test_prefix_cache_flags_reach_engine_and_layout():
+  args, eng = _engine_for(BASE + ["--cache-policy", "exact",
+                                  "--cache-layout", "paged",
+                                  "--scheduler", "prefix",
+                                  "--kv-block-size", "8",
+                                  "--num-blocks", "12",
+                                  "--prefix-cache",
+                                  "--prefix-cache-blocks", "5"])
+  assert eng.prefix_cache and eng.cfg.prefix_cache
+  assert eng.cfg.prefix_cache_blocks == 5
+  assert eng.layout.prefix_enabled
+  assert eng.layout.prefix_index.budget_blocks == 5
+  assert eng.scheduler.name == "prefix"
+
+
+def test_prefix_cache_budget_defaults_to_half_pool():
+  _, eng = _engine_for(BASE + ["--cache-policy", "exact",
+                               "--cache-layout", "paged",
+                               "--scheduler", "prefix",
+                               "--kv-block-size", "8",
+                               "--num-blocks", "12", "--prefix-cache"])
+  assert eng.layout.prefix_index.budget_blocks == 6
+
+
+def test_prefix_cache_on_contiguous_is_rejected():
+  with pytest.raises(ValueError, match="pooled layout"):
+    _engine_for(BASE + ["--cache-policy", "exact", "--prefix-cache"])
+
+
+def test_stats_json_includes_prefix_counters(tmp_path):
+  _, eng = _engine_for(BASE + ["--cache-policy", "exact",
+                               "--cache-layout", "paged",
+                               "--scheduler", "prefix",
+                               "--kv-block-size", "8", "--prefix-cache"])
+  prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]
+  eng.submit(prompt, max_new_tokens=3)
+  eng.submit(prompt, max_new_tokens=3)      # exact repeat -> full hit
+  eng.run_to_completion()
+  path = tmp_path / "stats.json"
+  serve.dump_stats_json(eng, str(path))
+  got = json.loads(path.read_text())
+  for key in ("prefix_hits", "prefix_full_hits", "prefix_hit_tokens",
+              "prefill_tokens", "forked_blocks", "dedup_bytes",
+              "prefix_hit_rate"):
+    assert key in got, key
+  assert got["prefix_hits"] >= 1 and got["prefix_full_hits"] >= 1
+  assert got["prefix_cache"]["hits"] == got["prefix_hits"]
+  assert got["prefix_cache"]["budget_blocks"] > 0
+  # layout.bytes() is self-describing about sharing: blocks counted once
+  for key in ("shared_blocks", "dedup_bytes", "prefix_index_blocks",
+              "forked_blocks", "peak_mapped_blocks"):
+    assert key in got["layout_bytes"], key
+
+
 def test_tiered_host_pool_defaults_to_4x_device():
   _, eng = _engine_for(BASE + ["--cache-policy", "exact",
                                "--cache-layout", "tiered",
