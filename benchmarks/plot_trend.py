@@ -67,13 +67,24 @@ def _prefix_hit_rate(run: dict, policy: str):
   return pol.get("prefix_hit_rate")
 
 
+def _decode_p99(run: dict, policy: str):
+  """Per-step decode latency p99 (ms); None on records predating PR 5."""
+  return run.get("policies", {}).get(policy, {}).get("decode_step_p99_ms")
+
+
+def _native_dense_bytes(run: dict):
+  """Modeled dense-materialized bytes of the paged pq block-native decode
+  (0 = kernels read pool storage in place); None on older records."""
+  return (run.get("decode_kernels") or {}).get("pq_block_native_dense_bytes")
+
+
 def render_terminal(runs: list) -> None:
   def fmt(v, pat="{:8.1f}", blank="       —"):
     return blank if v is None else pat.format(v)
 
   print(f"{'run':>3} {'sha':>8} {'timestamp':>20} {'pq tok/s':>9} "
         f"{'exact tok/s':>11} {'spill pq/raw':>12} {'prefix saved':>12} "
-        f"{'hit(pq)':>8}")
+        f"{'hit(pq)':>8} {'p99(pq) ms':>10}")
   for i, run in enumerate(runs):
     print(f"{i:>3} {run.get('git_sha', '?'):>8} "
           f"{run.get('timestamp', '?'):>20} "
@@ -81,17 +92,25 @@ def render_terminal(runs: list) -> None:
           f"{fmt(_policy_toks(run, 'exact'), '{:11.1f}', '          —')} "
           f"{fmt(_spill_ratio(run), '{:12.3f}', '           —')} "
           f"{fmt(_prefix_saved(run), '{:12.2%}', '           —')} "
-          f"{fmt(_prefix_hit_rate(run, 'pq'), '{:8.2f}', '       —')}")
+          f"{fmt(_prefix_hit_rate(run, 'pq'), '{:8.2f}', '       —')} "
+          f"{fmt(_decode_p99(run, 'pq'), '{:10.2f}', '         —')}")
   print()
   for label, series in (
       ("pq tok/s      ", [_policy_toks(r, "pq") for r in runs]),
       ("exact tok/s   ", [_policy_toks(r, "exact") for r in runs]),
       ("spill pq/raw  ", [_spill_ratio(r) for r in runs]),
       ("prefix saved  ", [_prefix_saved(r) for r in runs]),
+      ("pq p99 ms     ", [_decode_p99(r, "pq") for r in runs]),
+      ("exact p99 ms  ", [_decode_p99(r, "exact") for r in runs]),
   ):
     vals = [v for v in series if v is not None]
     if vals:
       print(f"{label} {sparkline(series)}  (last {vals[-1]:.3g})")
+  dense = [_native_dense_bytes(r) for r in runs]
+  if any(v is not None for v in dense):
+    last = [v for v in dense if v is not None][-1]
+    print(f"paged pq block-native dense-materialized bytes/step: {last} "
+          f"(0 = kernels read pool storage in place)")
 
 
 def render_png(runs: list, path: str) -> bool:
@@ -104,7 +123,7 @@ def render_png(runs: list, path: str) -> bool:
           "the dashboard)")
     return False
   xs = list(range(len(runs)))
-  fig, axes = plt.subplots(3, 1, figsize=(8, 8), sharex=True)
+  fig, axes = plt.subplots(4, 1, figsize=(8, 10), sharex=True)
   axes[0].plot(xs, [_policy_toks(r, "pq") for r in runs], marker="o",
                label="pq")
   axes[0].plot(xs, [_policy_toks(r, "exact") for r in runs], marker="s",
@@ -121,8 +140,15 @@ def render_png(runs: list, path: str) -> bool:
                color="tab:olive", label="pq hit rate")
   axes[2].axhline(0.5, ls="--", lw=1, color="gray")
   axes[2].set_ylabel("prefix cache")
-  axes[2].set_xlabel("run")
   axes[2].legend(loc="best")
+  # per-step decode latency (records before PR 5 plot as gaps)
+  axes[3].plot(xs, [_decode_p99(r, "pq") for r in runs], marker="o",
+               color="tab:purple", label="pq p99")
+  axes[3].plot(xs, [_decode_p99(r, "exact") for r in runs], marker="s",
+               color="tab:cyan", label="exact p99")
+  axes[3].set_ylabel("decode step\np99 (ms)")
+  axes[3].set_xlabel("run")
+  axes[3].legend(loc="best")
   fig.tight_layout()
   fig.savefig(path, dpi=120)
   plt.close(fig)

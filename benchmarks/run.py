@@ -15,6 +15,14 @@ trace through the tiered (device+host) engine per policy, reporting the
 communication claim as a measured quantity (`pq_vs_exact_raw_spill` is the
 pq spill traffic as a fraction of exact raw spill traffic on an identical
 trace).
+
+Since PR 5 every policy row also records per-step decode latency
+percentiles (p50/p99) and a ``decode_kernels`` section: the paged engine
+driven under `--decode-kernel xla` vs `pallas-interpret` on one trace,
+asserting greedy-token identity and recording the modeled decode HBM bytes
+per step — dense gather->decode->scatter vs block-table-native pool reads
+(`pq_block_native_dense_bytes` must be 0: the kernels read paged storage in
+place).
 """
 import argparse
 import json
@@ -216,6 +224,78 @@ def run_prefix_trace(arch: str = "tinyllama-1.1b", prompt_len: int = 64,
   return out
 
 
+def run_decode_kernels(arch: str = "tinyllama-1.1b", prompt_len: int = 32,
+                       gen: int = 16, block: int = 16) -> dict:
+  """Paged-engine decode trace per policy x decode kernel.
+
+  Runs the identical staggered trace through the paged engine under the
+  `xla` dispatch (dense gather->decode->scatter) and `pallas-interpret`
+  (block-table-native kernels), asserting greedy-token identity and
+  recording per-step latency percentiles plus the modeled decode HBM bytes
+  (`CacheLayout.decode_traffic_model`).  The headline figure: under the
+  block-native path the paged pq decode's dense-materialization bytes are 0
+  — the kernel streams table-mapped pool blocks in place.  (Interpret-mode
+  wall clock is not meaningful perf — the model figures are the comparison;
+  on TPU the same record carries compiled-kernel numbers.)
+  """
+  import dataclasses
+  from repro.common.timing import Stopwatch
+  from repro.configs import get_arch
+  from repro.launch.engine import ServeEngine
+
+  out = {"cache_layout": "paged", "scheduler": "paged",
+         "kv_block_size": block, "batch": 2, "prompt_len": prompt_len,
+         "gen": gen, "policies": {}}
+  trace = [(list(range(3, 3 + prompt_len - 4 * i)), gen) for i in range(4)]
+  for policy in ("pq", "exact"):
+    out["policies"][policy] = {}
+    params = None
+    toks = {}
+    for kern in ("xla", "pallas-interpret"):
+      cfg = dataclasses.replace(
+          get_arch(arch, reduced=True), cache_policy=policy,
+          dtype_str="bfloat16", cache_layout="paged", scheduler="paged",
+          kv_block_size=block, decode_kernel=kern)
+      eng = ServeEngine(cfg, context_len=prompt_len + gen, max_batch=2,
+                        prompt_capacity=prompt_len, params=params)
+      params = eng.params
+      eng.submit([1] * 8, max_new_tokens=2)      # absorb the compiles
+      eng.run_to_completion()
+      eng.reset_stats()
+      handles = [eng.submit(p, max_new_tokens=m) for p, m in trace]
+      with Stopwatch() as sw:
+        eng.run_to_completion()
+      toks[kern] = [h.tokens for h in handles]
+      n_tok = sum(len(t) for t in toks[kern])
+      lat = eng.stats.decode_latency()
+      out["policies"][policy][kern] = {
+          "tok_per_s": round(n_tok / max(sw.seconds, 1e-9), 2),
+          "decode_step_p50_ms": lat["p50_ms"],
+          "decode_step_p99_ms": lat["p99_ms"],
+          "block_native": bool(eng.layout.block_native),
+          "decode_traffic": eng.layout.decode_traffic,
+      }
+      print(f"decode[{policy}/{kern}]: {n_tok} tok in {sw.seconds:.2f}s, "
+            f"step p50 {lat['p50_ms']} ms, "
+            f"path {eng.layout.decode_traffic['decode_path']} "
+            f"(dense materialized "
+            f"{eng.layout.decode_traffic['dense_materialized_bytes_per_step']}"
+            f" B/step)")
+    out["policies"][policy]["tokens_identical"] = (
+        toks["xla"] == toks["pallas-interpret"])
+    if not out["policies"][policy]["tokens_identical"]:
+      print(f"decode[{policy}]: TOKENS DIVERGED across decode kernels")
+  native = out["policies"]["pq"]["pallas-interpret"]["decode_traffic"]
+  out["pq_block_native_dense_bytes"] = (
+      native["dense_materialized_bytes_per_step"])
+  dense = out["policies"]["pq"]["xla"]["decode_traffic"]
+  out["pq_dense_gather_bytes"] = dense["dense_materialized_bytes_per_step"]
+  print(f"decode: paged pq dense-materialized bytes/step "
+        f"{out['pq_dense_gather_bytes']} (xla) -> "
+        f"{out['pq_block_native_dense_bytes']} (block-native)")
+  return out
+
+
 def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
                    batch: int = 2, prompt_len: int = 64, gen: int = 16) -> int:
   from repro.launch.serve import ServeRun
@@ -235,9 +315,14 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
         "tok_per_s": round(res["tok_per_s"], 2),
         "prefill_s": round(res["prefill_s"], 4),
         "decode_s": round(res["decode_s"], 4),
+        "decode_step_p50_ms": res["decode_step_p50_ms"],
+        "decode_step_p99_ms": res["decode_step_p99_ms"],
+        "decode_kernel": res["decode_kernel"],
     }
     print(f"serve[{policy}]: {res['tok_per_s']:.1f} tok/s "
-          f"(prefill {res['prefill_s']:.2f}s, decode {res['decode_s']:.2f}s)")
+          f"(prefill {res['prefill_s']:.2f}s, decode {res['decode_s']:.2f}s, "
+          f"step p50 {res['decode_step_p50_ms']:.2f} / p99 "
+          f"{res['decode_step_p99_ms']:.2f} ms)")
   from repro.configs import get_arch
   if get_arch(arch, reduced=True).family in ("dense", "moe"):
     record["tiered"] = run_tiered_transfer(arch)
@@ -252,6 +337,11 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
     # chain sharing needs causal per-position prefill (dense family)
     record["prefix"] = None
     print(f"prefix: skipped ({arch} family has no chunked suffix prefill)")
+  if get_arch(arch, reduced=True).family in ("dense", "moe"):
+    record["decode_kernels"] = run_decode_kernels(arch)
+  else:
+    record["decode_kernels"] = None
+    print(f"decode kernels: skipped ({arch} family not engine-servable)")
   history = _load_history(out_path)
   history.append(record)
   with open(out_path, "w") as f:

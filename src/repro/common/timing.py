@@ -37,6 +37,24 @@ class Stopwatch:
     return False
 
 
+def latency_percentiles_ms(step_seconds) -> dict:
+  """Per-step latency percentiles over raw wall-clock samples (seconds).
+
+  The one place the p50/p99 definition lives: the serve driver, the engine
+  stats, and therefore the bench records + CI regression guard all report
+  percentiles computed exactly the same way.
+  """
+  samples = list(step_seconds)
+  if not samples:
+    return dict(steps=0, p50_ms=None, p99_ms=None, mean_ms=None)
+  import numpy as np
+  a = np.asarray(samples, np.float64) * 1e3
+  return dict(steps=int(a.size),
+              p50_ms=round(float(np.percentile(a, 50)), 4),
+              p99_ms=round(float(np.percentile(a, 99)), 4),
+              mean_ms=round(float(a.mean()), 4))
+
+
 def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
   """Average wall-clock microseconds per call (after warmup compiles)."""
   for _ in range(warmup):

@@ -59,6 +59,12 @@ class ModelConfig:
   scheduler: str = "fifo"          # serve-engine admission: fifo | sjf | paged
                                    # | tiered (launch/scheduler)
   kv_block_size: int = 16          # paged-layout token-block granularity
+  decode_kernel: str = "auto"      # decode attention implementation: xla
+                                   # (pure-JAX reference) | pallas (Mosaic,
+                                   # TPU only) | pallas-interpret (kernels
+                                   # through the interpreter, runs anywhere)
+                                   # | auto (pallas on TPU, xla elsewhere);
+                                   # core/decode_dispatch registry
   host_blocks: Optional[int] = None  # tiered-layout host (tier 1) pool size
                                      # in blocks; None -> layout default (4x
                                      # device), 0 -> no host tier (exhaustion
@@ -140,6 +146,7 @@ class ModelConfig:
         block=(self.kv_block_size
                if self.cache_layout in ("paged", "tiered") else 0),
         spill_codec=self.spill_codec,
+        decode_kernel=self.decode_kernel,
         pq=self.pq_cache_config(context_len) if name == "pq" else None)
     return cache_registry.make(name, spec)
 

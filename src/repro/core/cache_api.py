@@ -40,7 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import Array
-from repro.core import baselines, cache_registry, kv_cache as kvc
+from repro.core import baselines, cache_registry, decode_dispatch
+from repro.core import kv_cache as kvc
 from repro.core import pq as pqlib
 from repro.core import pq_attention
 
@@ -71,6 +72,10 @@ class CacheSpec:
   spill_codec: str = "raw"   # tiered-layout float-KV spill codec: raw | int8
                              # (int8 reuses the skvq per-group machinery and
                              # is lossy — PQ code rows always spill verbatim)
+  decode_kernel: str = "auto"  # decode attention implementation: registry key
+                               # in core.decode_dispatch (xla | pallas |
+                               # pallas-interpret | auto); resolved once at
+                               # policy construction
   pq: Optional[kvc.PQCacheConfig] = None   # aqpim geometry (policy "pq")
   pq_select: Optional[pqlib.PQConfig] = None  # pqcache ANN-index codec
   scale: Optional[float] = None            # softmax scale; None -> d^-0.5
@@ -94,6 +99,7 @@ class CacheSpec:
     if self.spill_codec not in ("raw", "int8"):
       raise ValueError(
           f"spill_codec must be 'raw' or 'int8', got {self.spill_codec!r}")
+    decode_dispatch.validate(self.decode_kernel)
     if self.block and self.capacity % self.block:
       raise ValueError(
           f"capacity {self.capacity} not divisible by block size "
@@ -149,8 +155,36 @@ class CachePolicy:
   #: (pq, snapkv) still hit on repeated prompts.
   prefix_cacheable: bool = True
 
+  #: True when this policy has a Pallas decode-kernel implementation (dense
+  #: storage).  Policies without one silently stay on the XLA path whatever
+  #: the dispatch says — there is nothing else to run.
+  kernel_decode: bool = False
+
   def __init__(self, spec: CacheSpec):
     self.spec = spec
+    # resolved once; the serve engine compiles one decode program per run
+    self.dispatch = decode_dispatch.resolve(spec.decode_kernel)
+
+  @property
+  def use_kernel(self) -> bool:
+    """Does this policy's dense decode path run the Pallas kernel?"""
+    return self.dispatch.use_pallas and self.kernel_decode
+
+  @property
+  def effective_decode_kernel(self) -> str:
+    """What actually runs this policy's decode attention — 'xla' whenever
+    the policy has no kernel implementation (or its geometry gates it off),
+    whatever the requested dispatch was.  Stats and bench records must
+    label runs with this, not the request."""
+    return self.dispatch.key if self.use_kernel else "xla"
+
+  @property
+  def block_native(self) -> bool:
+    """Can the paged decode step read pool storage in place (no dense
+    gather)?  Policies with a paged kernel variant override; pooled layouts
+    consult this to pick between the dense gather->decode->scatter program
+    and the block-table-native one."""
+    return False
 
   # -- protocol -------------------------------------------------------------
   def init(self, b: int, h: int, d: int) -> Any:
@@ -200,6 +234,22 @@ class CachePolicy:
     AQPIM's PQ code rows *is* the compressed representation — the point of
     the paper's communication claim."""
     return jax.tree_util.tree_map(lambda ax: "raw", self.paged_axes())
+
+  def append_and_attend_paged(self, resident_leaves, pool_leaves, layer,
+                              tables, q: Array, k_new: Array, v_new: Array,
+                              lengths: Array):
+    """Block-table-native decode step over pooled storage.
+
+    `resident_leaves` / `pool_leaves` are the flattened state (paged_axes
+    leaf order) with the *other* kind's entries None: resident leaves carry
+    this layer's per-slot state (B, ...), pool leaves the physical pools
+    (P+1, L, ..., block, ...) shared across layers; `layer` is the scan's
+    layer counter, `tables` the (B, nb) block tables.  Returns
+    (out (B, Hq, D), resident_leaves, pool_leaves) with the same None
+    pattern.  Only policies with `block_native=True` implement this.
+    """
+    raise NotImplementedError(
+        f"{type(self).__name__} has no block-native decode step")
 
   def __repr__(self) -> str:
     return f"{type(self).__name__}(capacity={self.spec.capacity})"
@@ -306,13 +356,36 @@ class _ExactStorePolicy(CachePolicy):
 
 @cache_registry.register("exact")
 class ExactPolicy(_ExactStorePolicy):
-  """Full-precision KV, dense decode attention (the paper's upper bound)."""
+  """Full-precision KV, dense decode attention (the paper's upper bound).
+
+  Kernel dispatch: with a pallas dispatch the dense step runs the
+  flash-decode kernel (`kernels/paged_flash_decode.flash_decode_kernel`) and
+  the paged step is block-table-native (`paged_flash_decode_kernel` reads the
+  K/V pool in place — no dense gather, one inserted row written).
+  """
+  kernel_decode = True
+
+  @property
+  def block_native(self) -> bool:
+    return self.dispatch.use_pallas
 
   def append_and_attend(self, state, q, k_new, v_new, lengths):
+    if self.use_kernel:
+      return kvc.exact_cache_append_and_attend_kernel(
+          state, q, k_new, v_new, lengths, self.spec.sm_scale(q.shape[-1]),
+          interpret=self.dispatch.interpret)
     # identical semantics to the generic path; delegate so the plain-exact
     # row step has exactly one implementation (kv_cache.py)
     return kvc.exact_cache_append_and_attend(
         state, q, k_new, v_new, lengths, self.spec.sm_scale(q.shape[-1]))
+
+  def append_and_attend_paged(self, resident_leaves, pool_leaves, layer,
+                              tables, q, k_new, v_new, lengths):
+    k_pool, v_pool = pool_leaves
+    out, k_pool, v_pool = kvc.exact_cache_paged_step(
+        k_pool, v_pool, layer, tables, q, k_new, v_new, lengths,
+        self.spec.sm_scale(q.shape[-1]), interpret=self.dispatch.interpret)
+    return out, list(resident_leaves), [k_pool, v_pool]
 
   def bytes(self, b: int, h: int, d: int) -> dict:
     fp = 2
@@ -454,8 +527,20 @@ class PQCachePolicy(_ExactStorePolicy):
 @cache_registry.register("pq")
 class PQPolicy(CachePolicy):
   """AQPIM: sink/recent exact, PQ-compressed body, attention on compressed
-  data (paper Fig. 3a/5).  Wraps the kv_cache.py kernel-level core."""
+  data (paper Fig. 3a/5).  Wraps the kv_cache.py kernel-level core.
+
+  Kernel dispatch: with a pallas dispatch the body segment runs the fused
+  Pallas kernel (`kernels/pq_decode.py` — VMEM-pinned inner-product table,
+  flash-decoding stats) and the exact sink/recent segments combine with it
+  exactly; the paged step is block-table-native (index pages read from the
+  pool in place, one encoded row written per step).  Single-window codebooks
+  only (the kernel pins one table page); multi-window configs stay on the
+  XLA path.  The XLA body uses the kernel's reconstruct-values formulation
+  (`pq_attention.reconstruct_values`) — identical math to the bucket-sum
+  reference, reassociated, and the cheaper XLA lowering when m*K >> d.
+  """
   needs_weights = True
+  kernel_decode = True
   # codebooks cluster over the whole prompt body: a prefix's code rows are
   # suffix-dependent, so sharing is full-prompt entries only — which is
   # where the PQ footprint advantage compounds (one cached prompt's code
@@ -482,10 +567,49 @@ class PQPolicy(CachePolicy):
       weights = jnp.ones(k.shape[:3], jnp.float32)
     return kvc.pq_cache_prefill(k, v, weights, self.pq_cfg, length=lengths)
 
+  @property
+  def use_kernel(self) -> bool:
+    return (self.dispatch.use_pallas and self.pq_cfg.n_windows == 1)
+
+  @property
+  def block_native(self) -> bool:
+    return self.use_kernel
+
   def append_and_attend(self, state, q, k_new, v_new, lengths):
+    if self.use_kernel:
+      return kvc.pq_cache_append_and_attend_kernel(
+          state, q, k_new, v_new, lengths, self.pq_cfg,
+          self.spec.sm_scale(q.shape[-1]),
+          interpret=self.dispatch.interpret)
     return kvc.pq_cache_append_and_attend(
         state, q, k_new, v_new, lengths, self.pq_cfg,
-        self.spec.sm_scale(q.shape[-1]))
+        self.spec.sm_scale(q.shape[-1]), value_mode=self._xla_value_mode())
+
+  def _xla_value_mode(self) -> str:
+    """Size-aware XLA value path: both formulations are the same sum
+    reassociated, but bucket's one-hot matmul costs O(N*m*K) against
+    reconstruction's O(N*d) — reconstruct wins once the codebook axis
+    dwarfs the head dim (the paper operating point m=32, K=512, d=128),
+    while tiny sweep configs keep the BLAS-friendly bucket form."""
+    if self.pq_cfg.n_windows != 1:
+      return "bucket"       # windowed output path has no reconstruct form
+    pq = self.pq_cfg.pq
+    return "reconstruct" if pq.m * pq.k >= 16 * self.spec.head_dim else \
+        "bucket"
+
+  def append_and_attend_paged(self, resident_leaves, pool_leaves, layer,
+                              tables, q, k_new, v_new, lengths):
+    (sink_k, sink_v, recent_k, recent_v, kcb, vcb, _, _) = resident_leaves
+    (_, _, _, _, _, _, kip, vip) = pool_leaves
+    (out, sink_k, sink_v, recent_k, recent_v, kip, vip) = \
+        kvc.pq_cache_paged_step(
+            sink_k, sink_v, recent_k, recent_v, kcb, vcb, kip, vip, layer,
+            tables, q, k_new, v_new, lengths, self.pq_cfg,
+            self.spec.sm_scale(q.shape[-1]),
+            interpret=self.dispatch.interpret)
+    return (out,
+            [sink_k, sink_v, recent_k, recent_v, kcb, vcb, None, None],
+            [None, None, None, None, None, None, kip, vip])
 
   def bytes(self, b: int, h: int, d: int) -> dict:
     return kvc.pq_cache_bytes(self.pq_cfg, b, h, d)

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache_registry
+from repro.core import decode_dispatch
 from repro.core import kv_cache as kvc
 from repro.core import prefix_index as pfx
 from repro.core import tiers as tiersmod
@@ -387,6 +388,13 @@ class ContiguousLayout(CacheLayout):
     self.model = model
     self.max_batch = max_batch
     self.storage = model.init_cache(max_batch)
+    # the policy resolved its decode dispatch at construction; slab decode
+    # consults it *inside* append_and_attend (dense kernel vs pure JAX), so
+    # this fused program is already kernel-dispatched — exposed here for
+    # stats/bench records
+    self.dispatch = (model.cache_policy.dispatch
+                     if model.cache_policy is not None
+                     else decode_dispatch.resolve("xla"))
     self._decode_fused = jax.jit(model.decode_step, donate_argnums=(2,))
     self._insert = jax.jit(
         lambda cache, c1, slot: jax.tree_util.tree_map(
@@ -507,6 +515,50 @@ class PagedLayout(CacheLayout):
     self._scatter = scatter
     self._decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
     self._admit_fused = jax.jit(admit_fused, donate_argnums=(0,))
+
+    # -- block-table-native decode (kernel dispatch) -------------------------
+    # With a pallas dispatch and a policy that has a paged kernel variant,
+    # decode skips the dense round trip entirely: the kernels stream the
+    # table-mapped pool blocks in place (scalar-prefetched block tables) and
+    # the only writes are this step's rows.  The dense gather/scatter
+    # programs above remain — admission, COW forks, and the chunked suffix
+    # prefill still use them — but the per-step decode traffic they cost
+    # drops to zero.
+    self.dispatch = policy.dispatch
+    self.block_native = bool(
+        policy.block_native and model.cfg.family in ("dense", "moe")
+        and not model.cfg.hybrid)
+    if self.block_native:
+      axes_leaves = jax.tree_util.tree_leaves(self._axes)
+
+      def decode_native(params, cur, storage, tables, lengths):
+        leaves, treedef = jax.tree_util.tree_flatten(storage)
+        res = [st if ax == RESIDENT else None
+               for ax, st in zip(axes_leaves, leaves)]
+        pools = [None if ax == RESIDENT else st
+                 for ax, st in zip(axes_leaves, leaves)]
+        logits, res, pools = model.decode_step_paged(
+            params, cur, res, pools, tables, lengths)
+        merged = [r if ax == RESIDENT else p
+                  for ax, r, p in zip(axes_leaves, res, pools)]
+        return logits, jax.tree_util.tree_unflatten(treedef, merged)
+
+      self._decode_native = jax.jit(decode_native, donate_argnums=(2,))
+    # layout-constant byte terms of the traffic model (storage shapes are
+    # fixed): one pool block / one token row across all layers and heads,
+    # summed over paged leaves — hoisted so the per-step snapshot only
+    # scans the (B, nb) table
+    self._traffic_per_block = 0
+    self._traffic_per_row = 0
+    for ax, st in zip(jax.tree_util.tree_leaves(self._axes),
+                      jax.tree_util.tree_leaves(self.storage)):
+      if ax == RESIDENT:
+        continue
+      pb = st.nbytes // st.shape[0]
+      self._traffic_per_block += pb
+      self._traffic_per_row += pb // self.block
+    # peak per-step traffic snapshot, refreshed while decoding (live tables)
+    self.decode_traffic = self.decode_traffic_model()
     self._init_prefix_cache(prefix_cache, prefix_cache_blocks)
 
   # -- prefix sharing (copy-on-write block tables) ---------------------------
@@ -824,10 +876,48 @@ class PagedLayout(CacheLayout):
 
   # -- compute ---------------------------------------------------------------
   def decode(self, params, cur, lengths):
-    logits, self.storage = self._decode_fused(
+    # peak-traffic snapshot while tables are live (the model is meaningless
+    # after requests drain).  Only the block-native path varies per step
+    # (mapped blocks/rows); the dense program's figure is a layout constant
+    # already captured at init, so the hot loop skips the table scan there.
+    if self.block_native:
+      snap = self.decode_traffic_model()
+      if snap["bytes_per_step"] >= self.decode_traffic["bytes_per_step"]:
+        self.decode_traffic = snap
+    decode = self._decode_native if self.block_native else self._decode_fused
+    logits, self.storage = decode(
         params, jnp.asarray(cur), self.storage,
         jnp.asarray(self.manager.tables), jnp.asarray(lengths))
     return logits
+
+  def decode_traffic_model(self) -> dict:
+    """Modeled per-step decode HBM traffic for the paged token state.
+
+    `dense` is what the gather->decode->scatter program moves: every slot's
+    full table extent materialized as a dense per-request view and written
+    back (2x).  `block-native` reads only the table-mapped pool blocks in
+    place and writes one token row per active slot.  The figure the
+    tentpole's acceptance tracks is `dense_materialized_bytes_per_step`:
+    zero exactly when the block-native program is the one decode() runs.
+    """
+    mgr = self.manager
+    tables = mgr.tables
+    live = tables != mgr.trash
+    mapped_entries = int(live.sum())
+    active = int(live.any(axis=1).sum())
+    per_block = self._traffic_per_block
+    per_row = self._traffic_per_row
+    dense = 2 * per_block * self.blocks_per_req * self.max_batch
+    reads = per_block * mapped_entries
+    writes = per_row * active
+    return dict(
+        decode_path="block-native" if self.block_native else "dense-gather",
+        decode_kernel=mgr.policy.effective_decode_kernel,
+        dense_materialized_bytes_per_step=0 if self.block_native else dense,
+        dense_gather_scatter_bytes_per_step=dense,
+        block_read_bytes_per_step=reads,
+        row_write_bytes_per_step=writes,
+        bytes_per_step=(reads + writes) if self.block_native else dense)
 
   def bytes(self, active_slots: int = 0) -> dict:
     """True allocated-block footprint (what paging buys), not capacity."""

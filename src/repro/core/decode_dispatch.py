@@ -1,0 +1,118 @@
+"""Decode-kernel dispatch registry: which implementation runs the decode
+attention hot path.
+
+AQPIM's headline claim is that attention *directly on compressed codes* makes
+decode faster, not slower — but that only holds if the serve path actually
+runs the fused kernel instead of the pure-JAX oracle.  This module makes the
+choice a first-class, string-keyed axis (mirroring `cache_registry`):
+
+  ``xla``              the pure-JAX reference path (`core.pq_attention`,
+                       `core.kv_cache`) — XLA fuses the gathers; bit-exact
+                       oracle semantics; the only option for policies without
+                       a kernel implementation (skvq, snapkv, ...).
+  ``pallas``           compiled Mosaic kernels (`kernels/pq_decode.py`,
+                       `kernels/paged_flash_decode.py`).  TPU only — on CPU
+                       there is nothing to compile them to, so resolution
+                       fails loudly instead of silently interpreting at 100x
+                       slowdown.
+  ``pallas-interpret`` the same kernels through the Pallas interpreter: runs
+                       anywhere (CPU CI included), numerically identical
+                       kernel semantics, debugging/parity-testing speed.
+  ``auto``             pallas on TPU, xla elsewhere — the default; a fresh
+                       checkout behaves exactly like the pre-dispatch code on
+                       CPU and picks up the kernels on real hardware.
+
+Resolution happens once, at policy/layout construction (`resolve(name)`), so
+the serve engine compiles exactly one decode program per run; there is no
+per-step branching.  Policies consult the resolved `DecodeDispatch` inside
+`append_and_attend` (dense storage) and layouts use it to choose between the
+dense gather->decode->scatter program and the block-table-native program
+(`core.cache_layout.PagedLayout`).
+
+Kept import-light (no repro.core imports) so it sits below `cache_api` and
+`configs.base` without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeDispatch:
+  """Resolved decode-kernel choice.
+
+  `use_pallas` selects the kernel implementations; `interpret` is the Pallas
+  interpret flag those kernels receive (always explicit after resolution —
+  never backend-guessed per call, so a serve run cannot mix modes).
+  """
+  name: str
+  use_pallas: bool
+  interpret: bool = False
+
+  @property
+  def key(self) -> str:
+    """Stable identifier for stats/bench records."""
+    if not self.use_pallas:
+      return "xla"
+    return "pallas-interpret" if self.interpret else "pallas"
+
+
+_RESOLVERS: Dict[str, Callable[[], DecodeDispatch]] = {}
+
+
+def register(name: str) -> Callable[[Callable[[], DecodeDispatch]],
+                                    Callable[[], DecodeDispatch]]:
+  def deco(fn: Callable[[], DecodeDispatch]) -> Callable[[], DecodeDispatch]:
+    if name in _RESOLVERS and _RESOLVERS[name] is not fn:
+      raise ValueError(f"decode kernel {name!r} already registered")
+    _RESOLVERS[name] = fn
+    return fn
+  return deco
+
+
+def names() -> Tuple[str, ...]:
+  return tuple(sorted(_RESOLVERS))
+
+
+def validate(name: str) -> None:
+  """Cheap config-time check (no backend query): is the key known?"""
+  if name not in _RESOLVERS:
+    raise ValueError(
+        f"unknown decode kernel {name!r}; available: {names()}")
+
+
+def resolve(name: str) -> DecodeDispatch:
+  """Resolve a registry key against the current backend."""
+  validate(name)
+  return _RESOLVERS[name]()
+
+
+@register("xla")
+def _xla() -> DecodeDispatch:
+  return DecodeDispatch(name="xla", use_pallas=False)
+
+
+@register("pallas")
+def _pallas() -> DecodeDispatch:
+  if jax.default_backend() != "tpu":
+    raise ValueError(
+        "--decode-kernel pallas compiles Mosaic kernels and needs a TPU "
+        "backend; use 'pallas-interpret' (runs anywhere, slowly) or 'auto' "
+        f"(xla on {jax.default_backend()!r})")
+  return DecodeDispatch(name="pallas", use_pallas=True, interpret=False)
+
+
+@register("pallas-interpret")
+def _pallas_interpret() -> DecodeDispatch:
+  return DecodeDispatch(name="pallas-interpret", use_pallas=True,
+                        interpret=True)
+
+
+@register("auto")
+def _auto() -> DecodeDispatch:
+  if jax.default_backend() == "tpu":
+    return DecodeDispatch(name="auto", use_pallas=True, interpret=False)
+  return DecodeDispatch(name="auto", use_pallas=False)

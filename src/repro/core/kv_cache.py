@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.common import Array
 from repro.core import pq, pq_attention, windowed
+from repro.kernels import ops as kops
 
 
 def as_lengths(length, b: int) -> Array:
@@ -344,18 +345,43 @@ def pq_cache_prefill(
   )
 
 
-def _pq_append_attend_one(
-    cache: PQLayerCache,  # leaves without the batch dim: (H, ...)
-    q: Array,             # (Hq, D)
+class PQRingStep(NamedTuple):
+  """Everything one PQ decode step changes *except* where the encoded indices
+  land — shared by the dense path (scatter into the per-slot index buffer)
+  and the block-native path (scatter one row into the physical pool)."""
+  sink_k: Array          # (H, S0, D) updated
+  sink_v: Array
+  recent_k: Array        # (H, R, D) updated
+  recent_v: Array
+  k_idx_new: Array       # (H, m) encoded eviction (garbage when !do_evict)
+  v_idx_new: Array
+  ev: Array              # scalar int32 body offset being filled (clipped)
+  do_evict: Array        # scalar bool
+  sink_mask: Array       # (S0,)
+  rec_mask: Array        # (R,)
+  body_len: Array        # scalar int32 valid body tokens after this step
+
+
+def _pq_ring_step_one(
+    sink_k: Array,        # (H, S0, D)
+    sink_v: Array,
+    recent_k: Array,      # (H, R, D)
+    recent_v: Array,
+    key_codebooks: Array,    # (H, nW, m, K, dsub)
+    value_codebooks: Array,
     k_new: Array,         # (H, D)
     v_new: Array,
     length: Array,        # scalar int32 tokens already cached (incl. prefill)
     cfg: PQCacheConfig,
-    scale: float,
-) -> Tuple[Array, PQLayerCache]:
-  hq, d = q.shape
-  h = cache.recent_k.shape[0]
-  g = hq // h
+) -> PQRingStep:
+  """Steps 1-3 of one request's PQ decode: evict->encode, insert, masks.
+
+  Reads and writes of the single affected ring slot use one-hot masks
+  instead of dynamic slice/update: bit-identical results (selecting one row
+  is exact; untouched rows pass through `where` verbatim) but elementwise
+  ops where XLA-CPU would otherwise emit per-row scatter/gather kernels —
+  measurably cheaper on the vmapped serve hot path.
+  """
   s0, r, nb = cfg.sink, cfg.recent, cfg.body_capacity
   pos = length                                     # position of the new token
 
@@ -368,39 +394,38 @@ def _pq_append_attend_one(
   ev = jnp.clip(evict_pos, 0, nb - 1)
   win_id = jnp.clip(ev // max(cfg.window_len, 1), 0, cfg.n_windows - 1)
 
-  old_k = jax.lax.dynamic_slice(
-      cache.recent_k, (0, slot, 0), (h, 1, d))[:, 0]            # (H, D)
-  old_v = jax.lax.dynamic_slice(
-      cache.recent_v, (0, slot, 0), (h, 1, d))[:, 0]
+  rsel = (jnp.arange(r) == slot)[None, :, None]               # (1, R, 1)
+  old_k = jnp.sum(jnp.where(rsel, recent_k.astype(jnp.float32), 0.0),
+                  axis=1)                                     # (H, D)
+  old_v = jnp.sum(jnp.where(rsel, recent_v.astype(jnp.float32), 0.0),
+                  axis=1)
 
-  def encode_one(x, cbs):
-    # x (D,), cbs (nW, m, K, dsub)
-    return windowed.windowed_encode(x[None], cbs, win_id[None])[0]  # (m,)
-  k_idx_new = jax.vmap(encode_one)(
-      old_k.astype(jnp.float32), cache.key_codebooks)          # (H, m)
-  v_idx_new = jax.vmap(encode_one)(
-      old_v.astype(jnp.float32), cache.value_codebooks)
-
-  def maybe_scatter(idx_store, idx_new):
-    upd = jax.lax.dynamic_update_slice(
-        idx_store, idx_new[:, None, :].astype(idx_store.dtype), (0, ev, 0))
-    return jnp.where(do_evict, upd, idx_store)
-  key_indices = maybe_scatter(cache.key_indices, k_idx_new)
-  value_indices = maybe_scatter(cache.value_indices, v_idx_new)
+  if cfg.n_windows == 1:
+    # single codebook page (the paper's long-context setting): the page is
+    # statically known, so skip windowed_encode's per-token page gather
+    def encode_one(x, cbs):
+      # x (D,), cbs (1, m, K, dsub)
+      xs = x.reshape(cbs.shape[1], 1, cbs.shape[3])           # (m, 1, dsub)
+      d2 = jnp.sum((cbs[0].astype(jnp.float32) - xs) ** 2, axis=-1)
+      return jnp.argmin(d2, axis=-1).astype(jnp.int32)        # (m,)
+  else:
+    def encode_one(x, cbs):
+      # x (D,), cbs (nW, m, K, dsub)
+      return windowed.windowed_encode(x[None], cbs, win_id[None])[0]  # (m,)
+  k_idx_new = jax.vmap(encode_one)(old_k, key_codebooks)      # (H, m)
+  v_idx_new = jax.vmap(encode_one)(old_v, value_codebooks)
 
   # --- 2. insert the new token (sink while warming up, else ring) ----------
-  write_slot = jnp.where(in_sink, jnp.clip(pos, 0, s0 - 1), slot)
+  sink_sel = ((jnp.arange(s0) == jnp.clip(pos, 0, s0 - 1))
+              & in_sink)[None, :, None]                       # (1, S0, 1)
+  ring_sel = ((jnp.arange(r) == slot) & ~in_sink)[None, :, None]
 
-  def insert(buf_sink, buf_rec, val):
-    val = val[:, None, :]
-    new_sink = jax.lax.dynamic_update_slice(
-        buf_sink, val.astype(buf_sink.dtype), (0, jnp.clip(pos, 0, s0 - 1), 0))
-    new_rec = jax.lax.dynamic_update_slice(
-        buf_rec, val.astype(buf_rec.dtype), (0, write_slot, 0))
-    return (jnp.where(in_sink, new_sink, buf_sink),
-            jnp.where(in_sink, buf_rec, new_rec))
-  sink_k, recent_k = insert(cache.sink_k, cache.recent_k, k_new)
-  sink_v, recent_v = insert(cache.sink_v, cache.recent_v, v_new)
+  def insert(buf, sel, val):
+    return jnp.where(sel, val[:, None, :].astype(buf.dtype), buf)
+  sink_k = insert(sink_k, sink_sel, k_new)
+  sink_v = insert(sink_v, sink_sel, v_new)
+  recent_k = insert(recent_k, ring_sel, k_new)
+  recent_v = insert(recent_v, ring_sel, v_new)
 
   # --- 3. masks after insertion --------------------------------------------
   n_tok = pos + 1
@@ -408,7 +433,44 @@ def _pq_append_attend_one(
   rec_count = jnp.clip(n_tok - s0, 0, r)
   rec_mask = jnp.arange(r) < rec_count          # ring fills sequentially pre-wrap
   body_len = jnp.clip(n_tok - s0 - r, 0, nb)
-  body_mask = jnp.arange(nb) < body_len
+  return PQRingStep(
+      sink_k=sink_k, sink_v=sink_v, recent_k=recent_k, recent_v=recent_v,
+      k_idx_new=k_idx_new, v_idx_new=v_idx_new, ev=ev, do_evict=do_evict,
+      sink_mask=sink_mask, rec_mask=rec_mask, body_len=body_len)
+
+
+def _pq_append_attend_one(
+    cache: PQLayerCache,  # leaves without the batch dim: (H, ...)
+    q: Array,             # (Hq, D)
+    k_new: Array,         # (H, D)
+    v_new: Array,
+    length: Array,        # scalar int32 tokens already cached (incl. prefill)
+    cfg: PQCacheConfig,
+    scale: float,
+    value_mode: str = "bucket",
+) -> Tuple[Array, PQLayerCache]:
+  hq, d = q.shape
+  h = cache.recent_k.shape[0]
+  g = hq // h
+  nb = cfg.body_capacity
+
+  step = _pq_ring_step_one(
+      cache.sink_k, cache.sink_v, cache.recent_k, cache.recent_v,
+      cache.key_codebooks, cache.value_codebooks, k_new, v_new, length, cfg)
+
+  # one-hot masked row write (no scatter kernel; bit-identical)
+  ev_sel = ((jnp.arange(nb) == step.ev) & step.do_evict)[None, :, None]
+
+  def maybe_scatter(idx_store, idx_new):
+    return jnp.where(ev_sel, idx_new[:, None, :].astype(idx_store.dtype),
+                     idx_store)
+  key_indices = maybe_scatter(cache.key_indices, step.k_idx_new)
+  value_indices = maybe_scatter(cache.value_indices, step.v_idx_new)
+
+  sink_k, sink_v = step.sink_k, step.sink_v
+  recent_k, recent_v = step.recent_k, step.recent_v
+  sink_mask, rec_mask = step.sink_mask, step.rec_mask
+  body_mask = jnp.arange(nb) < step.body_len
 
   # --- 4. PQ attention on compressed context -------------------------------
   qg = q.reshape(h, g, d)
@@ -420,7 +482,8 @@ def _pq_append_attend_one(
         value_codebook=vcb if cfg.n_windows > 1 else vcb[0],
         key_indices=kix, value_indices=vix, body_mask=body_mask,
         recent_k=rk, recent_v=rv, recent_mask=rec_mask)
-    return pq_attention.pq_decode_attention(qq, seg, scale)
+    return pq_attention.pq_decode_attention(qq, seg, scale,
+                                            value_mode=value_mode)
 
   out = jax.vmap(attend)(
       qg, sink_k, sink_v, recent_k, recent_v,
@@ -442,6 +505,7 @@ def pq_cache_append_and_attend(
     length: Array,       # scalar int32 OR (B,) per-request lengths
     cfg: PQCacheConfig,
     scale: float,
+    value_mode: str = "bucket",
 ) -> Tuple[Array, PQLayerCache]:
   """One decode step: insert token, evict->encode, attend on compressed context.
 
@@ -452,8 +516,216 @@ def pq_cache_append_and_attend(
   b = q.shape[0]
   lengths = as_lengths(length, b)
   return jax.vmap(
-      functools.partial(_pq_append_attend_one, cfg=cfg, scale=scale)
+      functools.partial(_pq_append_attend_one, cfg=cfg, scale=scale,
+                        value_mode=value_mode)
   )(cache, q, k_new, v_new, lengths)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-dispatch decode paths (core.decode_dispatch)
+#
+# The functions below are the Pallas-backed implementations the policies
+# select when the resolved dispatch says `use_pallas`.  They compute the PQ
+# body (and for exact, the whole context) through the fused kernels and the
+# small exact segments (sink/recent) in pure JAX, combined exactly via
+# flash-decoding (max, denom) stats — numerically, a reassociated version of
+# the oracle's joint softmax (fp32 throughout).
+#
+# The *_paged_step variants are block-table-native: cached token state lives
+# in the paged layout's physical pool (leading pool axis, then layer) and is
+# read in place by the kernels through scalar-prefetched block tables; the
+# only writes are the single rows this step produced.  No dense per-request
+# view ever materializes in HBM — the round trip the dense gather->decode->
+# scatter program pays twice per step.
+# ---------------------------------------------------------------------------
+
+
+def _pq_segments_combine(q, step_masks, sink_k, sink_v, recent_k, recent_v,
+                         body, scale):
+  """Combine kernel body stats with pure-JAX sink/recent segment stats.
+
+  q (B, H, g, D); sink/recent (B, H, S, D); body = (out, max, denom) from the
+  kernel; step_masks = (sink_mask (B, S0), rec_mask (B, R)).
+  """
+  sink_mask, rec_mask = step_masks
+
+  def seg(qq, k, v, mask):
+    return pq_attention.segment_attention_stats(qq, k, v, mask, scale)
+
+  def per_req(qq, sk, sv, rk, rv, sm, rm):
+    # vmap over kv heads; masks are per-request (shared across heads)
+    s_out, s_m, s_l = jax.vmap(lambda a, b, c: seg(a, b, c, sm))(qq, sk, sv)
+    r_out, r_m, r_l = jax.vmap(lambda a, b, c: seg(a, b, c, rm))(qq, rk, rv)
+    return s_out, s_m, s_l, r_out, r_m, r_l
+
+  s_out, s_m, s_l, r_out, r_m, r_l = jax.vmap(per_req)(
+      q, sink_k, sink_v, recent_k, recent_v, sink_mask, rec_mask)
+  b_out, b_m, b_l = body
+  return kops.combine_attention_segments(
+      [b_out, s_out, r_out], [b_m, s_m, r_m], [b_l, s_l, r_l])
+
+
+def pq_cache_append_and_attend_kernel(
+    cache: PQLayerCache,
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,
+    cfg: PQCacheConfig,
+    scale: float,
+    interpret: bool = True,
+) -> Tuple[Array, PQLayerCache]:
+  """Dense-storage PQ decode step through the Pallas body kernel.
+
+  Same storage contract as `pq_cache_append_and_attend`; single-window
+  codebooks only (the kernel pins one table page in VMEM).
+  """
+  assert cfg.n_windows == 1, "kernel path requires a single codebook window"
+  b, hq, d = q.shape
+  h = cache.recent_k.shape[1]
+  g = hq // h
+  lengths = as_lengths(length, b)
+
+  step = jax.vmap(functools.partial(_pq_ring_step_one, cfg=cfg))(
+      cache.sink_k, cache.sink_v, cache.recent_k, cache.recent_v,
+      cache.key_codebooks, cache.value_codebooks, k_new, v_new, lengths)
+
+  nb = cfg.body_capacity
+  ev_sel = ((jnp.arange(nb)[None] == step.ev[:, None])
+            & step.do_evict[:, None])[:, None, :, None]      # (B, 1, nb, 1)
+
+  def maybe_scatter(idx_store, idx_new):
+    return jnp.where(ev_sel, idx_new[:, :, None, :].astype(idx_store.dtype),
+                     idx_store)
+  key_indices = maybe_scatter(cache.key_indices, step.k_idx_new)
+  value_indices = maybe_scatter(cache.value_indices, step.v_idx_new)
+
+  qg = q.reshape(b, h, g, d)
+  body = kops.pq_decode_attention(
+      qg, cache.key_codebooks[:, :, 0], cache.value_codebooks[:, :, 0],
+      key_indices, value_indices,
+      jnp.broadcast_to(step.body_len[:, None], (b, h)), scale,
+      blk=kops.decode_block(cfg.body_capacity), interpret=interpret)
+  out = _pq_segments_combine(
+      qg, (step.sink_mask, step.rec_mask), step.sink_k, step.sink_v,
+      step.recent_k, step.recent_v, body, scale)
+
+  new_cache = PQLayerCache(
+      sink_k=step.sink_k, sink_v=step.sink_v,
+      recent_k=step.recent_k, recent_v=step.recent_v,
+      key_codebooks=cache.key_codebooks,
+      value_codebooks=cache.value_codebooks,
+      key_indices=key_indices, value_indices=value_indices)
+  return out.reshape(b, hq, d), new_cache
+
+
+def pq_cache_paged_step(
+    sink_k: Array,        # (B, H, S0, D)
+    sink_v: Array,
+    recent_k: Array,      # (B, H, R, D)
+    recent_v: Array,
+    key_codebooks: Array,    # (B, H, nW, m, K, dsub)
+    value_codebooks: Array,
+    key_index_pool: Array,   # (P+1, L, H, block, m) narrow int
+    value_index_pool: Array,
+    layer: Array,         # scalar int32
+    tables: Array,        # (B, nb) int32 block tables (trash = P)
+    q: Array,             # (B, Hq, D)
+    k_new: Array,         # (B, H, D)
+    v_new: Array,
+    length: Array,
+    cfg: PQCacheConfig,
+    scale: float,
+    interpret: bool = True,
+):
+  """Block-table-native PQ decode step: pool read in place, one row written.
+
+  Returns (out (B, Hq, D), updated rings..., updated pools...).  The evicted
+  ring entry's encoded indices land directly in pool block
+  ``tables[b, ev // block]`` (or the trash block when nothing evicts); the
+  body kernel then streams exactly the table-mapped blocks.
+  """
+  assert cfg.n_windows == 1, "kernel path requires a single codebook window"
+  b, hq, d = q.shape
+  h = recent_k.shape[1]
+  g = hq // h
+  block = key_index_pool.shape[3]
+  trash = key_index_pool.shape[0] - 1
+  lengths = as_lengths(length, b)
+
+  step = jax.vmap(functools.partial(_pq_ring_step_one, cfg=cfg))(
+      sink_k, sink_v, recent_k, recent_v, key_codebooks, value_codebooks,
+      k_new, v_new, lengths)
+
+  # single-row pool writes: the only body-state HBM traffic this step makes.
+  # Non-evicting rows aim at the trash block, whose content is never read.
+  pids = jnp.where(step.do_evict,
+                   tables[jnp.arange(b), step.ev // block], trash)
+  rows = step.ev % block
+  key_index_pool = key_index_pool.at[pids, layer, :, rows].set(
+      step.k_idx_new.astype(key_index_pool.dtype))
+  value_index_pool = value_index_pool.at[pids, layer, :, rows].set(
+      step.v_idx_new.astype(value_index_pool.dtype))
+
+  qg = q.reshape(b, h, g, d)
+  body = kops.pq_decode_attention_paged(
+      qg, key_codebooks[:, :, 0], value_codebooks[:, :, 0],
+      key_index_pool, value_index_pool, tables, layer, step.body_len,
+      scale, interpret=interpret)
+  out = _pq_segments_combine(
+      qg, (step.sink_mask, step.rec_mask), step.sink_k, step.sink_v,
+      step.recent_k, step.recent_v, body, scale)
+  return (out.reshape(b, hq, d), step.sink_k, step.sink_v, step.recent_k,
+          step.recent_v, key_index_pool, value_index_pool)
+
+
+def exact_cache_append_and_attend_kernel(
+    cache: ExactLayerCache,
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,
+    scale: float,
+    interpret: bool = True,
+) -> Tuple[Array, ExactLayerCache]:
+  """Dense-storage exact decode step through the flash-decode kernel."""
+  b, hq, d = q.shape
+  h = cache.k.shape[1]
+  g = hq // h
+  lengths = as_lengths(length, b)
+  k_c, v_c = jax.vmap(exact_insert_one)(cache.k, cache.v, k_new, v_new,
+                                        lengths)
+  out = kops.flash_decode(q.reshape(b, h, g, d), k_c, v_c, lengths + 1,
+                          scale, interpret=interpret)
+  return out.reshape(b, hq, d), ExactLayerCache(k=k_c, v=v_c)
+
+
+def exact_cache_paged_step(
+    k_pool: Array,       # (P+1, L, H, block, D)
+    v_pool: Array,
+    layer: Array,        # scalar int32
+    tables: Array,       # (B, nb) int32
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,
+    scale: float,
+    interpret: bool = True,
+):
+  """Block-table-native exact decode step: insert one row, attend in place."""
+  b, hq, d = q.shape
+  h = k_pool.shape[2]
+  g = hq // h
+  block = k_pool.shape[3]
+  lengths = as_lengths(length, b)
+  pids = tables[jnp.arange(b), lengths // block]
+  rows = lengths % block
+  k_pool = k_pool.at[pids, layer, :, rows].set(k_new.astype(k_pool.dtype))
+  v_pool = v_pool.at[pids, layer, :, rows].set(v_new.astype(v_pool.dtype))
+  out = kops.paged_flash_decode(
+      q.reshape(b, h, g, d), k_pool, v_pool, tables, layer, lengths + 1,
+      scale, interpret=interpret)
+  return out.reshape(b, hq, d), k_pool, v_pool
 
 
 def pq_cache_bytes(cfg: PQCacheConfig, b: int, h: int, d: int) -> dict:

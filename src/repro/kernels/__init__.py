@@ -1,7 +1,9 @@
 """Pallas TPU kernels for AQPIM's compute hot-spots.
 
 - pq_decode       PQ decode attention on compressed KV (VMEM table = the paper's
-                  intra-row indirection analogue)
+                  intra-row indirection analogue); dense + block-table-native
+                  (paged pool) variants
+- paged_flash_decode  exact-policy flash decode, dense + block-table-native
 - kmeans_assign   distance-calculation + cluster-assignment step of online k-means
 - flash_attention exact blockwise attention (prefill / baseline)
 

@@ -1,10 +1,55 @@
 """Version-compat shims for the Pallas TPU API surface.
 
-One place to touch when the jax floor moves: jax<0.5 names the TPU
-compiler-params class `TPUCompilerParams`; newer releases call it
-`CompilerParams`.
+One place to touch when the jax floor moves.  Three things drift across
+releases and must not break CPU CI, where every kernel runs under
+``interpret=True`` (the CI machine has no TPU, so any compat failure turns
+the kernels into untested dead code):
+
+  * jax<0.5 names the TPU compiler-params class ``TPUCompilerParams``;
+    newer releases call it ``CompilerParams``.
+  * some releases reject keywords the other accepts (``dimension_semantics``
+    moved around) — ``compiler_params()`` constructs whichever works and
+    returns None when neither does.  Interpret mode ignores compiler params
+    entirely, so None keeps CPU CI green while TPU builds still get the
+    dimension semantics they need.
+  * ``PrefetchScalarGridSpec`` (scalar-prefetched block tables — the
+    block-table-native decode kernels depend on it) is TPU-namespace in the
+    supported range; ``scalar_grid_spec()`` is the single lookup point.
 """
+from jax.experimental import pallas as pl  # noqa: F401  (re-export surface)
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
+
+
+def compiler_params(dimension_semantics=None):
+  """Best-effort compiler params: right class, tolerated kwargs, else None.
+
+  Returning None is always safe for interpret mode (params are ignored);
+  on TPU it merely drops the parallelism hint rather than crashing.
+  """
+  kwargs = {}
+  if dimension_semantics is not None:
+    kwargs["dimension_semantics"] = tuple(dimension_semantics)
+  try:
+    return CompilerParams(**kwargs)
+  except TypeError:
+    try:
+      return CompilerParams()
+    except TypeError:
+      return None
+
+
+def scalar_grid_spec(*, num_scalar_prefetch, grid, in_specs, out_specs,
+                     scratch_shapes):
+  """Grid spec with scalar prefetch (index maps may read prefetched refs)."""
+  spec_cls = getattr(pltpu, "PrefetchScalarGridSpec", None)
+  if spec_cls is None:  # pragma: no cover — future jax: moved into pl.GridSpec
+    return pl.GridSpec(
+        num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+        in_specs=in_specs, out_specs=out_specs,
+        scratch_shapes=scratch_shapes)
+  return spec_cls(
+      num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+      in_specs=in_specs, out_specs=out_specs, scratch_shapes=scratch_shapes)

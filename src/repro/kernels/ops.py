@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _flash
 from repro.kernels import kmeans_assign as _assign
+from repro.kernels import paged_flash_decode as _pfd
 from repro.kernels import pq_decode as _pqd
 
 
@@ -22,6 +23,19 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
   if interpret is None:
     return jax.default_backend() != "tpu"
   return interpret
+
+
+def decode_block(n: int, preferred: int = 512) -> int:
+  """Largest power-of-two sequence block <= `preferred` dividing `n`.
+
+  The decode kernels require the token capacity to split into whole blocks;
+  serve-path capacities are engine-chosen (body capacity, context length), so
+  the call sites pick the block instead of asserting.
+  """
+  blk = preferred
+  while blk > 1 and n % blk:
+    blk //= 2
+  return max(blk, 1)
 
 
 def pq_decode_attention(
@@ -49,13 +63,94 @@ def pq_decode_attention(
       q.reshape(bh, g, d),
       key_codebook.reshape(bh, m, k_cent, dsub).astype(jnp.float32),
       vcbt.reshape(bh, m, dsub, k_cent).astype(jnp.float32),
-      key_indices.reshape(bh, n, m),
-      value_indices.reshape(bh, n, m),
+      key_indices.reshape(bh, n, m).astype(jnp.int32),
+      value_indices.reshape(bh, n, m).astype(jnp.int32),
       length,
       scale=scale, blk=blk, interpret=_auto_interpret(interpret))
   out = out.reshape(b, h, g, d)
   stats = stats.reshape(b, h, 2, g)
   return out, stats[:, :, 0], stats[:, :, 1]
+
+
+def pq_decode_attention_paged(
+    q: jax.Array,               # (B, H_kv, g, d)
+    key_codebook: jax.Array,    # (B, H_kv, m, K, dsub)
+    value_codebook: jax.Array,  # (B, H_kv, m, K, dsub)
+    key_index_pool: jax.Array,  # (P+1, L, H_kv, blk, m) narrow int
+    value_index_pool: jax.Array,
+    tables: jax.Array,          # (B, nb) int32 per-slot block tables
+    layer: jax.Array,           # scalar int32
+    length: jax.Array,          # (B,) valid body tokens
+    scale: float,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+  """Block-table-native PQ body attention (zero dense materialization).
+
+  Same return contract as `pq_decode_attention`: (out, max, denom) per
+  (B, H, g) for the exact sink/recent segment combine.
+  """
+  b, h, g, d = q.shape
+  bh = b * h
+  m, k_cent, dsub = key_codebook.shape[2:]
+  vcbt = jnp.swapaxes(value_codebook, -1, -2)          # (B,H,m,dsub,K)
+  tables_bh = jnp.repeat(tables.astype(jnp.int32), h, axis=0)   # (BH, nb)
+  length_bh = jnp.repeat(length.astype(jnp.int32), h, axis=0)
+  out, stats = _pqd.pq_decode_attention_paged_kernel(
+      q.reshape(bh, g, d),
+      key_codebook.reshape(bh, m, k_cent, dsub).astype(jnp.float32),
+      vcbt.reshape(bh, m, dsub, k_cent).astype(jnp.float32),
+      key_index_pool, value_index_pool,
+      tables_bh, jnp.reshape(layer, (1,)).astype(jnp.int32), length_bh,
+      scale=scale, interpret=_auto_interpret(interpret))
+  out = out.reshape(b, h, g, d)
+  stats = stats.reshape(b, h, 2, g)
+  return out, stats[:, :, 0], stats[:, :, 1]
+
+
+def flash_decode(
+    q: jax.Array,        # (B, H_kv, g, d)
+    k: jax.Array,        # (B, H_kv, N, d)
+    v: jax.Array,        # (B, H_kv, N, d)
+    length: jax.Array,   # (B,) or (B, H_kv) valid tokens per row
+    scale: float,
+    blk: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+  """Dense-storage flash decode (exact policy, contiguous layout)."""
+  b, h, g, d = q.shape
+  bh = b * h
+  n = k.shape[2]
+  if jnp.ndim(length) == 1:
+    length = jnp.repeat(length.astype(jnp.int32), h, axis=0)
+  else:
+    length = length.reshape(bh).astype(jnp.int32)
+  out = _pfd.flash_decode_kernel(
+      q.reshape(bh, g, d), k.reshape(bh, n, d), v.reshape(bh, n, d),
+      length, scale=scale, blk=decode_block(n, min(blk, n)),
+      interpret=_auto_interpret(interpret))
+  return out.reshape(b, h, g, d)
+
+
+def paged_flash_decode(
+    q: jax.Array,        # (B, H_kv, g, d)
+    k_pool: jax.Array,   # (P+1, L, H_kv, blk, d)
+    v_pool: jax.Array,
+    tables: jax.Array,   # (B, nb) int32
+    layer: jax.Array,    # scalar int32
+    length: jax.Array,   # (B,) valid tokens per row
+    scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+  """Block-table-native flash decode over pooled K/V (exact policy)."""
+  b, h, g, d = q.shape
+  bh = b * h
+  tables_bh = jnp.repeat(tables.astype(jnp.int32), h, axis=0)
+  length_bh = jnp.repeat(length.astype(jnp.int32), h, axis=0)
+  out = _pfd.paged_flash_decode_kernel(
+      q.reshape(bh, g, d), k_pool, v_pool, tables_bh,
+      jnp.reshape(layer, (1,)).astype(jnp.int32), length_bh,
+      scale=scale, interpret=_auto_interpret(interpret))
+  return out.reshape(b, h, g, d)
 
 
 def kmeans_assign(

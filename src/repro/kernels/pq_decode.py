@@ -19,6 +19,23 @@ blocks in VMEM scratch; the kernel emits the *body segment's* normalized output 
 (max, denom) so the wrapper can exactly combine it with the full-precision sink and
 recent segments (paper §IV-A layout).
 
+Two entry points share one block body:
+
+  ``pq_decode_attention_kernel``        dense index buffers (BH, N, m) — the
+                                        contiguous-layout serve path and the
+                                        kernel-parity oracle target;
+  ``pq_decode_attention_paged_kernel``  *block-table-native*: index pages live
+                                        in the paged layout's physical pool
+                                        (P+1, L, H, block, m) and the sequence
+                                        -block grid axis streams block j of
+                                        request bh straight from pool block
+                                        ``table[bh, j]`` via a scalar-prefetched
+                                        per-slot block table (+ a prefetched
+                                        layer index, so the pool never gets
+                                        sliced or gathered in HBM).  Zero dense
+                                        materialization: the only HBM reads are
+                                        the mapped blocks themselves.
+
 Grid: (batch*kv_heads, sequence_blocks) — both sequential ("arbitrary") so scratch
 accumulators carry across the sequence axis; the batch*head axis revisits scratch
 from a clean @pl.when(j == 0) init.
@@ -29,6 +46,8 @@ VMEM budget per grid cell (defaults g<=16, m=32, K=512, d=128, blk=512):
   index blocks 2*(blk, m)  =  0.128 MiB int32
   acc/vrec/p blocks        <= 0.6 MiB
   total                    ~  2.3 MiB  << VMEM
+(The paged variant streams layout-sized blocks — typically 16 tokens — so its
+index-block term is smaller still; everything else is identical.)
 """
 from __future__ import annotations
 
@@ -40,9 +59,74 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels import _compat
 
 NEG_INF = -1e30
+
+
+def _init_scratch(q_ref, kcb_ref, t_ref, acc_ref, m_ref, l_ref, scale):
+  """Steps 1-2 (paper): subvector split + inner-product table, once per step."""
+  g, d = q_ref.shape[1], q_ref.shape[2]
+  m, _, dsub = kcb_ref.shape[1], kcb_ref.shape[2], kcb_ref.shape[3]
+  q = q_ref[0].astype(jnp.float32)                    # (g, d)
+  qs = q.reshape(g, m, dsub)
+  cb = kcb_ref[0].astype(jnp.float32)                 # (m, K, dsub)
+  # (g, m, K) = sum_dsub qs[g,m,:] * cb[m,K,:] — MXU contraction per subvector
+  t_ref[...] = jax.lax.dot_general(
+      qs.transpose(1, 0, 2), cb.transpose(0, 2, 1),
+      dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+      preferred_element_type=jnp.float32,
+  ).transpose(1, 0, 2) * scale                        # (m,g,K)->(g,m,K)
+  acc_ref[...] = jnp.zeros((g, d), jnp.float32)
+  m_ref[...] = jnp.full((g, 1), NEG_INF, jnp.float32)
+  l_ref[...] = jnp.zeros((g, 1), jnp.float32)
+
+
+def _accumulate_block(kidx, vidx, vcbt_ref, valid,
+                      t_ref, acc_ref, m_ref, l_ref):
+  """Steps 3-7 (paper) for one sequence block.
+
+  kidx/vidx (blk, m) int32; vcbt_ref (1, m, dsub, K); valid (blk,) bool.
+  """
+  g = t_ref.shape[0]
+  m, dsub, _ = vcbt_ref.shape[1], vcbt_ref.shape[2], vcbt_ref.shape[3]
+  blk = kidx.shape[0]
+
+  # Step 3-4 (paper): score lookup from the VMEM-resident table.
+  kidx_t = kidx.T                                     # (m, blk) lane-dim gather
+  def score_one(gi):
+    gath = jnp.take_along_axis(t_ref[gi], kidx_t, axis=1)   # (m, blk)
+    return jnp.sum(gath, axis=0)                            # (blk,)
+  s = jnp.stack([score_one(gi) for gi in range(g)])         # (g, blk)
+  s = jnp.where(valid[None, :], s, NEG_INF)
+
+  # Step 5 (paper): fused online softmax.
+  m_prev = m_ref[...]                                 # (g, 1)
+  mu = jnp.max(s, axis=-1, keepdims=True)
+  m_new = jnp.maximum(m_prev, mu)
+  alpha = jnp.exp(m_prev - m_new)                     # (g, 1)
+  p = jnp.exp(s - m_new)                              # (g, blk)
+  p = jnp.where(valid[None, :], p, 0.0)
+  l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+  m_ref[...] = m_new
+
+  # Step 6-7 (paper): block-local VMEM gather of value subvectors + MXU contract.
+  vidx_t = vidx.T                                     # (m, blk)
+  def gather_v(mi):
+    idx = jnp.broadcast_to(vidx_t[mi][None, :], (dsub, blk))
+    return jnp.take_along_axis(vcbt_ref[0, mi], idx, axis=1)  # (dsub, blk)
+  vrec = jnp.concatenate([gather_v(mi) for mi in range(m)], axis=0)  # (d, blk)
+  acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+      p, vrec, dimension_numbers=(((1,), (1,)), ((), ())),
+      preferred_element_type=jnp.float32)             # (g, d)
+
+
+def _finalize(out_ref, stats_ref, acc_ref, m_ref, l_ref):
+  l = l_ref[...]
+  safe = jnp.maximum(l, 1e-30)
+  out_ref[0] = (acc_ref[...] / safe).astype(out_ref.dtype)
+  stats_ref[0, 0, :] = m_ref[...][:, 0]
+  stats_ref[0, 1, :] = l[:, 0]
 
 
 def _pq_decode_kernel(
@@ -69,24 +153,10 @@ def _pq_decode_kernel(
 ):
   bh = pl.program_id(0)
   j = pl.program_id(1)
-  g, d = q_ref.shape[1], q_ref.shape[2]
-  m, k_cent, dsub = kcb_ref.shape[1], kcb_ref.shape[2], kcb_ref.shape[3]
 
   @pl.when(j == 0)
   def _init():
-    # Step 1-2 (paper): subvector split + inner-product table, once per step.
-    q = q_ref[0].astype(jnp.float32)                    # (g, d)
-    qs = q.reshape(g, m, dsub)
-    cb = kcb_ref[0].astype(jnp.float32)                 # (m, K, dsub)
-    # (g, m, K) = sum_dsub qs[g,m,:] * cb[m,K,:] — MXU contraction per subvector
-    t_ref[...] = jax.lax.dot_general(
-        qs.transpose(1, 0, 2), cb.transpose(0, 2, 1),
-        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
-    ).transpose(1, 0, 2) * scale                        # (m,g,K)->(g,m,K)
-    acc_ref[...] = jnp.zeros((g, d), jnp.float32)
-    m_ref[...] = jnp.full((g, 1), NEG_INF, jnp.float32)
-    l_ref[...] = jnp.zeros((g, 1), jnp.float32)
+    _init_scratch(q_ref, kcb_ref, t_ref, acc_ref, m_ref, l_ref, scale)
 
   length = length_ref[bh]
   pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)[0]
@@ -94,42 +164,12 @@ def _pq_decode_kernel(
 
   @pl.when(j * blk < length)
   def _block():
-    # Step 3-4 (paper): score lookup from the VMEM-resident table.
-    kidx = kidx_ref[0]                                  # (blk, m)
-    kidx_t = kidx.T                                     # (m, blk) lane-dim gather
-    def score_one(gi):
-      gath = jnp.take_along_axis(t_ref[gi], kidx_t, axis=1)   # (m, blk)
-      return jnp.sum(gath, axis=0)                            # (blk,)
-    s = jnp.stack([score_one(gi) for gi in range(g)])         # (g, blk)
-    s = jnp.where(valid[None, :], s, NEG_INF)
-
-    # Step 5 (paper): fused online softmax.
-    m_prev = m_ref[...]                                 # (g, 1)
-    mu = jnp.max(s, axis=-1, keepdims=True)
-    m_new = jnp.maximum(m_prev, mu)
-    alpha = jnp.exp(m_prev - m_new)                     # (g, 1)
-    p = jnp.exp(s - m_new)                              # (g, blk)
-    p = jnp.where(valid[None, :], p, 0.0)
-    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
-    m_ref[...] = m_new
-
-    # Step 6-7 (paper): block-local VMEM gather of value subvectors + MXU contract.
-    vidx_t = vidx_ref[0].T                              # (m, blk)
-    def gather_v(mi):
-      idx = jnp.broadcast_to(vidx_t[mi][None, :], (dsub, blk))
-      return jnp.take_along_axis(vcbt_ref[0, mi], idx, axis=1)  # (dsub, blk)
-    vrec = jnp.concatenate([gather_v(mi) for mi in range(m)], axis=0)  # (d, blk)
-    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
-        p, vrec, dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)             # (g, d)
+    _accumulate_block(kidx_ref[0], vidx_ref[0], vcbt_ref, valid,
+                      t_ref, acc_ref, m_ref, l_ref)
 
   @pl.when(j == n_blocks - 1)
-  def _finalize():
-    l = l_ref[...]
-    safe = jnp.maximum(l, 1e-30)
-    out_ref[0] = (acc_ref[...] / safe).astype(out_ref.dtype)
-    stats_ref[0, 0, :] = m_ref[...][:, 0]
-    stats_ref[0, 1, :] = l[:, 0]
+  def _done():
+    _finalize(out_ref, stats_ref, acc_ref, m_ref, l_ref)
 
 
 @functools.partial(
@@ -160,7 +200,7 @@ def pq_decode_attention_kernel(
 
   out, stats = pl.pallas_call(
       kernel,
-      grid_spec=pltpu.PrefetchScalarGridSpec(
+      grid_spec=_compat.scalar_grid_spec(
           num_scalar_prefetch=1,
           grid=grid,
           in_specs=[
@@ -185,10 +225,137 @@ def pq_decode_attention_kernel(
           jax.ShapeDtypeStruct((bhn, g, d), jnp.float32),
           jax.ShapeDtypeStruct((bhn, 2, g), jnp.float32),
       ],
-      compiler_params=_CompilerParams(
-          dimension_semantics=("arbitrary", "arbitrary"),
-      ),
+      compiler_params=_compat.compiler_params(
+          dimension_semantics=("arbitrary", "arbitrary")),
       interpret=interpret,
       name="pq_decode_attention",
   )(length, q, key_codebook, value_codebook_t, key_indices, value_indices)
+  return out, stats
+
+
+# ---------------------------------------------------------------------------
+# Block-table-native variant (paged layout)
+# ---------------------------------------------------------------------------
+
+def _pq_decode_paged_kernel(
+    # scalar prefetch
+    tables_ref,            # (BH, nb) int32 — per-slot block tables
+    layer_ref,             # (1,) int32 — which layer's pool plane to read
+    length_ref,            # (BH,) int32 — valid body tokens per row
+    # inputs
+    q_ref,                 # (1, g, d)
+    kcb_ref,               # (1, m, K, dsub)
+    vcbt_ref,              # (1, m, dsub, K)
+    kidx_ref,              # (1, 1, 1, blk, m) — pool block table[bh, j]
+    vidx_ref,              # (1, 1, 1, blk, m)
+    # outputs
+    out_ref,               # (1, g, d) f32
+    stats_ref,             # (1, 2, g) f32
+    # scratch
+    t_ref, acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    blk: int,
+    n_blocks: int,
+):
+  bh = pl.program_id(0)
+  j = pl.program_id(1)
+
+  @pl.when(j == 0)
+  def _init():
+    _init_scratch(q_ref, kcb_ref, t_ref, acc_ref, m_ref, l_ref, scale)
+
+  length = length_ref[bh]
+  pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)[0]
+  valid = pos < length
+
+  @pl.when(j * blk < length)
+  def _block():
+    # pool index pages store the target-hardware narrow dtype (uint8/int16);
+    # widen for the lane gathers only here, inside VMEM
+    _accumulate_block(kidx_ref[0, 0, 0].astype(jnp.int32),
+                      vidx_ref[0, 0, 0].astype(jnp.int32),
+                      vcbt_ref, valid, t_ref, acc_ref, m_ref, l_ref)
+
+  @pl.when(j == n_blocks - 1)
+  def _done():
+    _finalize(out_ref, stats_ref, acc_ref, m_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "interpret"),
+)
+def pq_decode_attention_paged_kernel(
+    q: jax.Array,          # (BH, g, d)
+    key_codebook: jax.Array,      # (BH, m, K, dsub) f32
+    value_codebook_t: jax.Array,  # (BH, m, dsub, K) f32
+    key_index_pool: jax.Array,    # (P+1, L, H, blk, m) narrow int
+    value_index_pool: jax.Array,  # (P+1, L, H, blk, m)
+    tables: jax.Array,            # (BH, nb) int32 — logical j -> pool block
+    layer: jax.Array,             # (1,) int32
+    length: jax.Array,            # (BH,) int32 — valid body tokens
+    scale: float,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+  """Block-table-native PQ body attention over pooled index pages.
+
+  The sequence-block grid axis reads pool block ``tables[bh, j]`` of layer
+  ``layer[0]`` directly via the scalar-prefetched index maps — the physical
+  pool is an ordinary pallas_call input, never sliced, gathered, or
+  densified in HBM.  Unallocated table entries point at the pool's trash
+  block; their rows sit at positions >= ``length`` and are masked like any
+  ragged tail.  Returns the same (normalized body out, [max, denom]) contract
+  as the dense kernel, for the exact sink/recent segment combine.
+  """
+  bhn, g, d = q.shape
+  _, m, k_cent, dsub = key_codebook.shape
+  n_heads = key_index_pool.shape[2]
+  blk = key_index_pool.shape[3]
+  n_blocks = tables.shape[1]
+
+  grid = (bhn, n_blocks)
+  kernel = functools.partial(
+      _pq_decode_paged_kernel, scale=scale, blk=blk, n_blocks=n_blocks)
+
+  def pool_spec():
+    return pl.BlockSpec(
+        (1, 1, 1, blk, m),
+        lambda bh, j, tbl, lyr, L: (tbl[bh, j], lyr[0], bh % n_heads, 0, 0))
+
+  out, stats = pl.pallas_call(
+      kernel,
+      grid_spec=_compat.scalar_grid_spec(
+          num_scalar_prefetch=3,
+          grid=grid,
+          in_specs=[
+              pl.BlockSpec((1, g, d), lambda bh, j, tbl, lyr, L: (bh, 0, 0)),
+              pl.BlockSpec((1, m, k_cent, dsub),
+                           lambda bh, j, tbl, lyr, L: (bh, 0, 0, 0)),
+              pl.BlockSpec((1, m, dsub, k_cent),
+                           lambda bh, j, tbl, lyr, L: (bh, 0, 0, 0)),
+              pool_spec(),
+              pool_spec(),
+          ],
+          out_specs=[
+              pl.BlockSpec((1, g, d), lambda bh, j, tbl, lyr, L: (bh, 0, 0)),
+              pl.BlockSpec((1, 2, g), lambda bh, j, tbl, lyr, L: (bh, 0, 0)),
+          ],
+          scratch_shapes=[
+              pltpu.VMEM((g, m, k_cent), jnp.float32),
+              pltpu.VMEM((g, d), jnp.float32),
+              pltpu.VMEM((g, 1), jnp.float32),
+              pltpu.VMEM((g, 1), jnp.float32),
+          ],
+      ),
+      out_shape=[
+          jax.ShapeDtypeStruct((bhn, g, d), jnp.float32),
+          jax.ShapeDtypeStruct((bhn, 2, g), jnp.float32),
+      ],
+      compiler_params=_compat.compiler_params(
+          dimension_semantics=("arbitrary", "arbitrary")),
+      interpret=interpret,
+      name="pq_decode_attention_paged",
+  )(tables, layer, length, q, key_codebook, value_codebook_t,
+    key_index_pool, value_index_pool)
   return out, stats

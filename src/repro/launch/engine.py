@@ -63,12 +63,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import timing
 from repro.configs.base import ModelConfig
 from repro.core import cache_registry
 from repro.launch import scheduler as scheduler_lib
@@ -123,6 +125,11 @@ class EngineStats:
   prefill_tokens: int = 0        # prompt tokens actually prefilled (computed)
   forked_blocks: int = 0         # copy-on-write forks of shared blocks
   dedup_bytes: int = 0           # peak bytes saved by multi-mapped blocks
+  # wall-clock per batched decode step (launch -> next-token sync), the
+  # distribution CI's p99 regression guard watches.  Bounded: a long-lived
+  # engine keeps the most recent window of samples, not its whole history
+  decode_step_s: collections.deque = dataclasses.field(
+      default_factory=lambda: collections.deque(maxlen=4096), repr=False)
 
   @property
   def occupancy(self) -> float:
@@ -136,10 +143,22 @@ class EngineStats:
     total = self.prefix_hit_tokens + self.prefill_tokens
     return self.prefix_hit_tokens / total if total else 0.0
 
+  def decode_latency(self) -> dict:
+    """Per-step decode latency percentiles (ms) over this run.
+
+    Samples are raw wall clock: a cold step that traced+compiled is counted
+    as-is.  Callers that want steady-state numbers drain a warmup request
+    first and then reset the stats (`engine.stats = EngineStats(...)`) —
+    the serve CLI demo and the benchmark harness both do."""
+    return timing.latency_percentiles_ms(self.decode_step_s)
+
   def as_dict(self) -> dict:
-    d = dataclasses.asdict(self)
+    # raw samples stay in-process (and are not copied just to be dropped)
+    d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+         if f.name != "decode_step_s"}
     d["occupancy"] = round(self.occupancy, 4)
     d["prefix_hit_rate"] = round(self.prefix_hit_rate, 4)
+    d["decode_latency"] = self.decode_latency()
     return d
 
   def summary(self) -> str:
@@ -149,6 +168,10 @@ class EngineStats:
          f"admits {self.admits}, preempts {self.preempts}, "
          f"finished {self.finished}, reclaimed {self.blocks_reclaimed} "
          f"blocks")
+    lat = self.decode_latency()
+    if lat["steps"]:
+      s += (f" | decode step p50 {lat['p50_ms']:.2f} ms / "
+            f"p99 {lat['p99_ms']:.2f} ms")
     if self.spills or self.fetches:
       s += (f" | spills {self.spills} ({self.spill_bytes} B), fetches "
             f"{self.fetches} ({self.fetch_bytes} B, {self.prefetches} "
@@ -244,6 +267,16 @@ class ServeEngine:
   # public API
   # -------------------------------------------------------------------------
 
+  def reset_stats(self) -> None:
+    """Fresh counters (e.g. after a warmup drain so latency percentiles
+    measure steady-state steps).  Fields mirroring the layout's cumulative
+    ledger (spill/fetch bytes, modeled PCIe time, forked blocks) are
+    re-synced immediately and stay cumulative over the engine's life —
+    event *counts* restart at zero."""
+    self.stats = EngineStats(max_batch=self.max_batch)
+    self._sync_transfer_stats()
+    self._sync_prefix_stats()
+
   def submit(self, prompt: Sequence[int], max_new_tokens: int = 16
              ) -> RequestHandle:
     prompt = np.asarray(prompt, np.int32).reshape(-1)
@@ -313,8 +346,11 @@ class ServeEngine:
       self.stats.steps += 1
       return finished
 
+    t0 = time.perf_counter()
     logits = self.layout.decode(self.params, self._cur, self._lengths)
+    # np.asarray blocks on the device result: the sample spans launch->sync
     next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    self.stats.decode_step_s.append(time.perf_counter() - t0)
     self.stats.decode_steps += 1
     self.stats.busy_slot_steps += self.active_count
     self.stats.wasted_slot_steps += self.max_batch - self.active_count

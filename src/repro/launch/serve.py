@@ -35,10 +35,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.common.timing import Stopwatch
+from repro.common.timing import Stopwatch, latency_percentiles_ms
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
-from repro.core import cache_registry
+from repro.core import cache_registry, decode_dispatch
 from repro.launch import scheduler as scheduler_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh
@@ -53,6 +53,10 @@ class ServeRun:
   prompt_len: int = 128
   gen: int = 32
   cache_policy: str = "pq"
+  decode_kernel: str = "auto"      # core/decode_dispatch registry key
+  measure_latency: bool = True     # run the extra synced decode pass for
+                                   # p50/p99 (costs ~one more prefill+decode;
+                                   # tests that only want tokens turn it off)
   pq: bool = True                  # legacy knob: False downgrades the default
                                    # "pq" policy to "exact" (no effect on other
                                    # explicitly chosen policies)
@@ -63,7 +67,8 @@ class ServeRun:
 
   def run(self):
     cfg = get_arch(self.arch, reduced=self.reduced)
-    cfg = dataclasses.replace(cfg, cache_policy=self.cache_policy)
+    cfg = dataclasses.replace(cfg, cache_policy=self.cache_policy,
+                              decode_kernel=self.decode_kernel)
     if not self.pq:
       cfg = dataclasses.replace(cfg, pq_enabled=False)
     context = self.prompt_len + self.gen
@@ -103,25 +108,57 @@ class ServeRun:
         logits, cache = prefill(params, prompts, m_pref)
         sw_prefill.wait_for(logits)
 
+      def step_inputs(i):
+        """Per-step (lengths, modal slice) — ONE definition, so the timed
+        throughput loop and the latency pass drive the identical program."""
+        lengths = jnp.full((self.batch,), self.prompt_len + i, jnp.int32)
+        m_step = (modal[:, self.prompt_len + i:self.prompt_len + i + 1]
+                  if modal is not None and cfg.frontend == "audio_frames"
+                  else modal)
+        return lengths, m_step
+
       tokens = [jnp.argmax(logits, -1).astype(jnp.int32)]
       with Stopwatch() as sw_decode:
         for i in range(self.gen):
-          lengths = jnp.full((self.batch,), self.prompt_len + i, jnp.int32)
-          m_step = (modal[:, self.prompt_len + i:self.prompt_len + i + 1]
-                    if modal is not None and cfg.frontend == "audio_frames"
-                    else modal)
+          lengths, m_step = step_inputs(i)
           logits, cache = step(params, tokens[-1], cache, lengths, m_step)
           tokens.append(jnp.argmax(logits, -1).astype(jnp.int32))
         sw_decode.wait_for(tokens[-1])
 
+      # per-step latency distribution: a second decode pass with a sync per
+      # step, so the throughput loop above keeps its async dispatch overlap
+      # while p50/p99 measure real launch->result step times.  Opt-out for
+      # callers that only want tokens (it costs another prefill+decode).
+      step_s = []
+      if self.measure_latency:
+        import time as _time
+        logits_l, cache_l = prefill(params, prompts, m_pref)
+        tok_l = jnp.argmax(logits_l, -1).astype(jnp.int32)
+        for i in range(self.gen):
+          lengths, m_step = step_inputs(i)
+          t0 = _time.perf_counter()
+          logits_l, cache_l = step(params, tok_l, cache_l, lengths, m_step)
+          tok_l = jnp.argmax(logits_l, -1).astype(jnp.int32)
+          jax.block_until_ready(tok_l)
+          step_s.append(_time.perf_counter() - t0)
+
+    lat = latency_percentiles_ms(step_s)
     out = jnp.stack(tokens[:-1], axis=1)
     policy_name = cfg.resolved_cache_policy() if not cfg.attn_free else "none"
+    # record what actually ran, not the request: 'auto' resolves per
+    # backend, and a policy without a kernel implementation runs xla
+    # whatever was asked for
+    kernel_key = (model.cache_policy.effective_decode_kernel
+                  if model.cache_policy is not None else "xla")
     return {
         "tokens": out,
         "prefill_s": sw_prefill.seconds,
         "decode_s": sw_decode.seconds,
         "tok_per_s": self.batch * self.gen / max(sw_decode.seconds, 1e-9),
+        "decode_step_p50_ms": lat["p50_ms"],
+        "decode_step_p99_ms": lat["p99_ms"],
         "cache_policy": policy_name,
+        "decode_kernel": kernel_key,
         "pq": policy_name == "pq",
     }
 
@@ -140,7 +177,8 @@ def build_engine(args):
                             host_blocks=args.host_blocks,
                             spill_codec=args.spill_codec,
                             prefix_cache=args.prefix_cache,
-                            prefix_cache_blocks=args.prefix_cache_blocks)
+                            prefix_cache_blocks=args.prefix_cache_blocks,
+                            decode_kernel=args.decode_kernel)
   context = args.prompt_len + args.gen
   return ServeEngine(cfg, context_len=context, max_batch=args.batch,
                      prompt_capacity=args.prompt_len,
@@ -153,8 +191,13 @@ def dump_stats_json(engine, path: str) -> None:
   payload = engine.stats.as_dict()
   payload["layout"] = engine.layout.name
   payload["scheduler"] = engine.scheduler.name
+  payload["decode_kernel"] = (
+      engine.model.cache_policy.effective_decode_kernel
+      if engine.model.cache_policy is not None else "xla")
   payload["layout_bytes"] = engine.layout.bytes(
       active_slots=engine.active_count)
+  if hasattr(engine.layout, "decode_traffic"):
+    payload["decode_traffic"] = engine.layout.decode_traffic
   ledger = getattr(engine.layout, "ledger", None)
   if ledger is not None:
     payload["transfer"] = ledger.as_dict()
@@ -182,6 +225,9 @@ def run_engine_demo(args) -> None:
   warm_len = min(8, args.prompt_len, max(1, context - 2))
   engine.submit([1] * warm_len, max_new_tokens=min(2, context - warm_len))
   engine.run_to_completion()
+  # the warmup drain just paid the trace+compile cost; drop its samples so
+  # the printed/dumped decode-latency percentiles are steady-state steps
+  engine.reset_stats()
   floor = min(8, args.prompt_len)
   rng_lens = [max(floor, args.prompt_len - 17 * i)
               for i in range(args.batch + 2)]
@@ -193,9 +239,19 @@ def run_engine_demo(args) -> None:
   with Stopwatch() as sw:
     done = engine.run_to_completion()
   n_tok = sum(len(r.tokens) for r in done)
+  kernel_key = (engine.model.cache_policy.effective_decode_kernel
+                if engine.model.cache_policy is not None else "xla")
   print(f"engine: {len(done)} requests, {n_tok} tokens in {sw.seconds:.2f}s "
         f"({n_tok / max(sw.seconds, 1e-9):.1f} tok/s) "
-        f"[layout={args.cache_layout} scheduler={args.scheduler}]")
+        f"[layout={args.cache_layout} scheduler={args.scheduler} "
+        f"kernel={kernel_key}"
+        f"{' block-native' if getattr(engine.layout, 'block_native', False) else ''}]")
+  if hasattr(engine.layout, "decode_traffic"):
+    tm = engine.layout.decode_traffic
+    print(f"decode traffic (peak/step): {tm['decode_path']} — dense "
+          f"materialized {tm['dense_materialized_bytes_per_step']} B, "
+          f"block reads {tm['block_read_bytes_per_step']} B, row writes "
+          f"{tm['row_write_bytes_per_step']} B")
   print(f"engine stats: {engine.stats.summary()}")
   by = engine.layout.bytes(active_slots=engine.active_count)
   if by["kind"] in ("paged", "tiered"):
@@ -245,6 +301,15 @@ def make_parser() -> argparse.ArgumentParser:
                   help="engine admission policy (paged requires "
                        "--cache-layout paged/tiered; tiered requires "
                        "--cache-layout tiered)")
+  ap.add_argument("--decode-kernel", default="auto",
+                  choices=decode_dispatch.names(),
+                  help="decode attention implementation: xla (pure-JAX "
+                       "reference), pallas (Mosaic kernels, TPU only), "
+                       "pallas-interpret (kernels via the interpreter, runs "
+                       "anywhere), auto (pallas on TPU, xla elsewhere).  "
+                       "With paged/tiered layouts a pallas dispatch decodes "
+                       "block-table-native: no dense gather/scatter round "
+                       "trip")
   ap.add_argument("--kv-block-size", type=int, default=16,
                   help="paged-layout token-block granularity")
   ap.add_argument("--num-blocks", type=int, default=None,
@@ -292,11 +357,15 @@ def main():
 
   run = ServeRun(arch=args.arch, reduced=args.reduced, batch=args.batch,
                  prompt_len=args.prompt_len, gen=args.gen,
-                 cache_policy=args.cache_policy)
+                 cache_policy=args.cache_policy,
+                 decode_kernel=args.decode_kernel)
   res = run.run()
   print(f"arch={args.arch} policy={res['cache_policy']} "
+        f"kernel={res['decode_kernel']} "
         f"prefill={res['prefill_s']:.2f}s decode={res['decode_s']:.2f}s "
-        f"({res['tok_per_s']:.1f} tok/s)")
+        f"({res['tok_per_s']:.1f} tok/s, step p50 "
+        f"{res['decode_step_p50_ms']:.2f} / p99 "
+        f"{res['decode_step_p99_ms']:.2f} ms)")
   print("sample tokens:", res["tokens"][0, :16].tolist())
 
 

@@ -278,6 +278,41 @@ class Model:
     logits = self._logits(params, x[:, 0])
     return logits, new_caches
 
+  def decode_step_paged(self, params, token: Array, resident_leaves,
+                        pool_leaves, tables: Array, lengths: Array
+                        ) -> Tuple[Array, Any, Any]:
+    """Block-table-native decode step: attention reads pooled KV in place.
+
+    `resident_leaves` is the flattened per-layer policy state (paged leaves
+    None) with leading layer axis; `pool_leaves` the physical pools
+    (P+1, L, ..., block, ...) shared across the layer scan (carried, updated
+    functionally with single-row writes); `tables` the (B, nb) per-slot block
+    tables.  The layer counter rides the carry so each layer's kernel call
+    addresses its own pool plane through the scalar-prefetched index maps —
+    the pool is never sliced, gathered, or densified.  Dense/MoE attention
+    families only (the ones the serve engine admits).
+    """
+    cfg = self.cfg
+    if cfg.family not in ("dense", "moe") or cfg.hybrid:
+      raise ValueError(
+          f"decode_step_paged supports dense/moe attention, got "
+          f"{cfg.family!r} (hybrid={cfg.hybrid})")
+    lengths = kvc.as_lengths(lengths, token.shape[0])
+    x = self._embed(params, token[:, None], None)
+
+    def body(carry, inp):
+      y, layer, pools = carry
+      lp, res = inp
+      y, new_res, pools = tfm.dense_block_step_paged(
+          lp, y, res, pools, layer, tables, lengths, cfg, self.cache_policy)
+      return (y, layer + 1, pools), new_res
+
+    (x, _, pool_leaves), new_resident = jax.lax.scan(
+        body, (x, jnp.asarray(0, jnp.int32), pool_leaves),
+        (params["layers"], resident_leaves))
+    logits = self._logits(params, x[:, 0])
+    return logits, new_resident, pool_leaves
+
   # -------------------------------------------------------------------------
   # cache constructors (dry-run input specs / serving init)
   # -------------------------------------------------------------------------

@@ -127,23 +127,47 @@ def dense_block_chunk(p: dict, x: Array, cache, positions: Array, cfg,
   return x + ffn, cache
 
 
-def _attn_step(
-    p: dict, x: Array, cache, lengths: Array, cfg, policy
-) -> Tuple[Array, Any]:
-  """Single-token attention against the cache.  x (B, 1, D), lengths (B,)."""
-  lengths = kvc.as_lengths(lengths, x.shape[0])
+def _attn_qkv_step(p: dict, x: Array, lengths: Array, cfg):
+  """Single-token q/k/v projection + RoPE at each row's position."""
   pos = lengths[:, None]                                 # (B, 1) RoPE positions
   q = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wq"], x.dtype))
   k = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wk"], x.dtype))
   v = jnp.einsum("bsd,dhk->bshk", x, layers.wv(p["wv"], x.dtype))
   q = layers.apply_rope(q, pos, cfg.rope_theta)[:, 0]    # (B, H, hd)
   k = layers.apply_rope(k, pos, cfg.rope_theta)[:, 0]
-  v = v[:, 0]
+  return q, k, v[:, 0]
 
+
+def _attn_step(
+    p: dict, x: Array, cache, lengths: Array, cfg, policy
+) -> Tuple[Array, Any]:
+  """Single-token attention against the cache.  x (B, 1, D), lengths (B,)."""
+  lengths = kvc.as_lengths(lengths, x.shape[0])
+  q, k, v = _attn_qkv_step(p, x, lengths, cfg)
   attn, new_cache = policy.append_and_attend(cache, q, k, v, lengths)
   out = jnp.einsum("bhk,hkd->bd", attn.astype(x.dtype),
                    layers.wv(p["wo"], x.dtype))
   return out[:, None, :], new_cache
+
+
+def _attn_step_paged(
+    p: dict, x: Array, resident, pools, layer, tables, lengths: Array,
+    cfg, policy
+) -> Tuple[Array, Any, Any]:
+  """Single-token attention reading pooled block storage in place.
+
+  `resident`/`pools` are this layer's flattened policy-state leaves (the
+  other kind None); the policy's block-native step streams pool blocks via
+  the per-slot `tables` and writes only the rows this token produced — the
+  dense gather->decode->scatter round trip never happens.
+  """
+  lengths = kvc.as_lengths(lengths, x.shape[0])
+  q, k, v = _attn_qkv_step(p, x, lengths, cfg)
+  attn, resident, pools = policy.append_and_attend_paged(
+      resident, pools, layer, tables, q, k, v, lengths)
+  out = jnp.einsum("bhk,hkd->bd", attn.astype(x.dtype),
+                   layers.wv(p["wo"], x.dtype))
+  return out[:, None, :], resident, pools
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +246,28 @@ def dense_block_prefill(p: dict, x: Array, positions: Array, cfg,
   h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
   ffn, _ = _ffn_apply(p, h, cfg)
   return x + ffn, cache
+
+
+def dense_block_step_paged(p: dict, x: Array, resident, pools, layer,
+                           tables, lengths: Array, cfg, policy
+                           ) -> Tuple[Array, Any, Any]:
+  """One decoder layer's decode step over block-pooled KV storage.
+
+  Mirrors `dense_block_step` exactly, with the attention sub-layer reading
+  the physical block pool in place (`_attn_step_paged`).  Dense/MoE only —
+  the hybrid SSM branch carries extra recurrent state and stays on the
+  dense-cache path.
+  """
+  h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+  attn, resident, pools = _attn_step_paged(
+      p["attn"], h, resident, pools, layer, tables, lengths, cfg, policy)
+  if cfg.parallel_block:
+    ffn, _ = _ffn_apply(p, h, cfg)
+    return x + attn + ffn, resident, pools
+  x = x + attn
+  h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+  ffn, _ = _ffn_apply(p, h, cfg)
+  return x + ffn, resident, pools
 
 
 def dense_block_step(p: dict, x: Array, cache, lengths: Array, cfg,

@@ -53,6 +53,23 @@ def test_flags_reach_engine_and_config(argv, layout, sched, policy):
     assert codecs.k == args.spill_codec
 
 
+@pytest.mark.parametrize("argv,want_key,native", [
+    # default `auto` resolves against the backend: xla on the CPU CI host
+    (BASE + ["--cache-policy", "pq"], "xla", False),
+    (BASE + ["--cache-policy", "pq", "--decode-kernel", "xla"], "xla",
+     False),
+    (BASE + ["--cache-policy", "exact", "--cache-layout", "paged",
+             "--scheduler", "paged", "--kv-block-size", "8",
+             "--decode-kernel", "pallas-interpret"], "pallas-interpret",
+     True),
+])
+def test_decode_kernel_flag_reaches_config_and_layout(argv, want_key, native):
+  args, eng = _engine_for(argv)
+  assert eng.cfg.decode_kernel == args.decode_kernel
+  assert eng.layout.dispatch.key == want_key
+  assert getattr(eng.layout, "block_native", False) == native
+
+
 def test_prefix_cache_flags_reach_engine_and_layout():
   args, eng = _engine_for(BASE + ["--cache-policy", "exact",
                                   "--cache-layout", "paged",

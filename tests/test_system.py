@@ -46,7 +46,7 @@ def test_serve_generates_with_pq_and_without():
   outs = {}
   for pq_on in (True, False):
     run = ServeRun(arch="tinyllama-1.1b", reduced=True, batch=2,
-                   prompt_len=64, gen=8, pq=pq_on)
+                   prompt_len=64, gen=8, pq=pq_on, measure_latency=False)
     res = run.run()
     assert res["tokens"].shape == (2, 8)
     outs[pq_on] = np.asarray(res["tokens"])
@@ -57,7 +57,7 @@ def test_serve_generates_with_pq_and_without():
 
 def test_moe_serve_path():
   run = ServeRun(arch="qwen2-moe-a2.7b", reduced=True, batch=2,
-                 prompt_len=64, gen=4, pq=True)
+                 prompt_len=64, gen=4, pq=True, measure_latency=False)
   res = run.run()
   assert res["tokens"].shape == (2, 4)
 
@@ -65,7 +65,8 @@ def test_moe_serve_path():
 def test_rwkv_serve_path():
   """Attention-free arch: serving works with O(1) recurrent state."""
   run = ServeRun(arch="rwkv6-3b", reduced=True, batch=2,
-                 prompt_len=64, gen=4, pq=True)   # pq silently inapplicable
+                 prompt_len=64, gen=4, pq=True,   # pq silently inapplicable
+                 measure_latency=False)
   res = run.run()
   assert res["pq"] is False
   assert res["tokens"].shape == (2, 4)
