@@ -78,13 +78,34 @@ def _native_dense_bytes(run: dict):
   return (run.get("decode_kernels") or {}).get("pq_block_native_dense_bytes")
 
 
+def _workload_cell(run: dict, policy: str, arrival: str = "poisson"):
+  """One workload-record cell; {} on records predating PR 6."""
+  pols = (run.get("workload") or {}).get("policies", {})
+  return pols.get(policy, {}).get(arrival, {})
+
+
+def _goodput(run: dict, policy: str):
+  return _workload_cell(run, policy).get("goodput_frac")
+
+
+def _ttft_p99(run: dict, policy: str):
+  return _workload_cell(run, policy).get("ttft_p99_s")
+
+
+def _stall_ratio(run: dict, policy: str):
+  """Overlapped / serialized transfer-stall seconds (< 1 = the async
+  spill/fetch stage is winning); None on older records."""
+  return _workload_cell(run, policy).get("transfer_stall_ratio")
+
+
 def render_terminal(runs: list) -> None:
   def fmt(v, pat="{:8.1f}", blank="       —"):
     return blank if v is None else pat.format(v)
 
   print(f"{'run':>3} {'sha':>8} {'timestamp':>20} {'pq tok/s':>9} "
         f"{'exact tok/s':>11} {'spill pq/raw':>12} {'prefix saved':>12} "
-        f"{'hit(pq)':>8} {'p99(pq) ms':>10}")
+        f"{'hit(pq)':>8} {'p99(pq) ms':>10} {'goodput(pq)':>11} "
+        f"{'ttft p99 s':>10} {'stall o/s':>9}")
   for i, run in enumerate(runs):
     print(f"{i:>3} {run.get('git_sha', '?'):>8} "
           f"{run.get('timestamp', '?'):>20} "
@@ -93,7 +114,10 @@ def render_terminal(runs: list) -> None:
           f"{fmt(_spill_ratio(run), '{:12.3f}', '           —')} "
           f"{fmt(_prefix_saved(run), '{:12.2%}', '           —')} "
           f"{fmt(_prefix_hit_rate(run, 'pq'), '{:8.2f}', '       —')} "
-          f"{fmt(_decode_p99(run, 'pq'), '{:10.2f}', '         —')}")
+          f"{fmt(_decode_p99(run, 'pq'), '{:10.2f}', '         —')} "
+          f"{fmt(_goodput(run, 'pq'), '{:11.2%}', '          —')} "
+          f"{fmt(_ttft_p99(run, 'pq'), '{:10.4f}', '         —')} "
+          f"{fmt(_stall_ratio(run, 'pq'), '{:9.3f}', '        —')}")
   print()
   for label, series in (
       ("pq tok/s      ", [_policy_toks(r, "pq") for r in runs]),
@@ -102,6 +126,10 @@ def render_terminal(runs: list) -> None:
       ("prefix saved  ", [_prefix_saved(r) for r in runs]),
       ("pq p99 ms     ", [_decode_p99(r, "pq") for r in runs]),
       ("exact p99 ms  ", [_decode_p99(r, "exact") for r in runs]),
+      ("goodput pq    ", [_goodput(r, "pq") for r in runs]),
+      ("goodput exact ", [_goodput(r, "exact") for r in runs]),
+      ("ttft p99 s pq ", [_ttft_p99(r, "pq") for r in runs]),
+      ("stall o/s pq  ", [_stall_ratio(r, "pq") for r in runs]),
   ):
     vals = [v for v in series if v is not None]
     if vals:
@@ -123,7 +151,7 @@ def render_png(runs: list, path: str) -> bool:
           "the dashboard)")
     return False
   xs = list(range(len(runs)))
-  fig, axes = plt.subplots(4, 1, figsize=(8, 10), sharex=True)
+  fig, axes = plt.subplots(5, 1, figsize=(8, 12), sharex=True)
   axes[0].plot(xs, [_policy_toks(r, "pq") for r in runs], marker="o",
                label="pq")
   axes[0].plot(xs, [_policy_toks(r, "exact") for r in runs], marker="s",
@@ -147,8 +175,18 @@ def render_png(runs: list, path: str) -> bool:
   axes[3].plot(xs, [_decode_p99(r, "exact") for r in runs], marker="s",
                color="tab:cyan", label="exact p99")
   axes[3].set_ylabel("decode step\np99 (ms)")
-  axes[3].set_xlabel("run")
   axes[3].legend(loc="best")
+  # workload harness SLO metrics (records before PR 6 plot as gaps)
+  axes[4].plot(xs, [_goodput(r, "pq") for r in runs], marker="o",
+               color="tab:blue", label="pq goodput")
+  axes[4].plot(xs, [_goodput(r, "exact") for r in runs], marker="s",
+               color="tab:orange", label="exact goodput")
+  axes[4].plot(xs, [_stall_ratio(r, "pq") for r in runs], marker="^",
+               color="tab:red", label="pq stall overlap/serial")
+  axes[4].axhline(1.0, ls="--", lw=1, color="gray")
+  axes[4].set_ylabel("workload SLO")
+  axes[4].set_xlabel("run")
+  axes[4].legend(loc="best")
   fig.tight_layout()
   fig.savefig(path, dpi=120)
   plt.close(fig)

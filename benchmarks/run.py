@@ -296,6 +296,100 @@ def run_decode_kernels(arch: str = "tinyllama-1.1b", prompt_len: int = 32,
   return out
 
 
+def run_workload(arch: str = "tinyllama-1.1b", n_requests: int = 12,
+                 seed: int = 3, pcie_gbps: float = 0.002) -> dict:
+  """Trace-driven serving under the virtual clock, per policy x arrival.
+
+  Each cell runs the identical seeded trace twice — overlapped spill/fetch
+  vs the serialized fallback — asserting bit-identical greedy tokens and
+  recording the SLO view (TTFT/TPOT percentiles, goodput, queueing) plus
+  the stall attribution both ways; `transfer_stall_ratio` < 1 is the
+  overlap win.  The pool is sized so the trace forces spills (the same
+  pressure the tiered tests apply) and the link is slowed to ~MB/s so
+  transfer time is visible against the fixed decode-step budget — at the
+  real 16 GB/s these reduced-config payloads drain in microseconds and
+  every mode looks identical.  A final re-run of one cell checks
+  end-to-end determinism (same seed -> same token streams)."""
+  import dataclasses
+  from repro.configs import get_arch
+  from repro.launch import workload as wl
+  from repro.launch.engine import ServeEngine
+
+  # per-policy sizing: pq needs sink+recent headroom and longer requests to
+  # pressure the pool (its streaming window retires blocks as it decodes)
+  sizing = {
+      "exact": dict(context_len=64, prompt_capacity=32, num_blocks=5,
+                    host_blocks=24, prompt_len=(20, 30), gen=(10, 16)),
+      "pq": dict(context_len=96, prompt_capacity=64, num_blocks=7,
+                 host_blocks=32, prompt_len=(42, 58), gen=(12, 24)),
+  }
+  out = {"cache_layout": "tiered", "scheduler": "tiered", "batch": 2,
+         "kv_block_size": 16, "n_requests": n_requests, "seed": seed,
+         "pcie_gbps": pcie_gbps, "policies": {}}
+  params_by_policy: dict = {}
+
+  def one(policy: str, arrival: str, overlap: bool):
+    sz = sizing[policy]
+    cfg = dataclasses.replace(
+        get_arch(arch, reduced=True), cache_policy=policy,
+        dtype_str="bfloat16", cache_layout="tiered", scheduler="tiered",
+        kv_block_size=16)
+    eng = ServeEngine(cfg, context_len=sz["context_len"], max_batch=2,
+                      prompt_capacity=sz["prompt_capacity"],
+                      num_blocks=sz["num_blocks"],
+                      host_blocks=sz["host_blocks"],
+                      params=params_by_policy.get(policy),
+                      clock=wl.VirtualClock(overlap=overlap))
+    params_by_policy[policy] = eng.params
+    eng.layout.ledger.pcie_gbps = pcie_gbps
+    spec = wl.WorkloadSpec(
+        arrival=arrival, rate=400.0, burstiness=6.0, n_requests=n_requests,
+        seed=seed, tenants=(wl.TenantSpec(prompt_len=sz["prompt_len"],
+                                          max_new_tokens=sz["gen"]),))
+    return eng, wl.WorkloadDriver(eng, spec).run()
+
+  for policy in ("pq", "exact"):
+    out["policies"][policy] = {}
+    for arrival in ("poisson", "bursty"):
+      eng_o, res_o = one(policy, arrival, True)
+      eng_s, res_s = one(policy, arrival, False)
+      identical = res_o.token_streams == res_s.token_streams
+      rep = res_o.report
+      stall_o = rep["stall"]["transfer_stall_s"]
+      stall_s = res_s.report["stall"]["transfer_stall_s"]
+      out["policies"][policy][arrival] = {
+          "tokens_identical": identical,
+          "requests": rep["requests"],
+          "goodput_frac": rep["goodput_frac"],
+          "goodput_tok_s": rep["goodput_tok_s"],
+          "deadline_met_frac": rep["deadline_met_frac"],
+          "ttft_p50_s": rep["ttft"]["p50_s"],
+          "ttft_p99_s": rep["ttft"]["p99_s"],
+          "tpot_p50_s": rep["tpot"]["p50_s"],
+          "tpot_p99_s": rep["tpot"]["p99_s"],
+          "queue_p99_s": rep["queue"]["p99_s"],
+          "spills": eng_o.stats.spills, "fetches": eng_o.stats.fetches,
+          "prefetches": eng_o.stats.prefetches,
+          "stall": rep["stall"],
+          "stall_serialized": res_s.report["stall"],
+          "transfer_stall_ratio": (round(stall_o / stall_s, 4)
+                                   if stall_s else None),
+      }
+      print(f"workload[{policy}/{arrival}]: goodput "
+            f"{100 * rep['goodput_frac']:.0f}%, ttft p99 "
+            f"{rep['ttft']['p99_s']} s, transfer stall {stall_o:.4f} s "
+            f"overlapped vs {stall_s:.4f} s serialized"
+            f"{'' if identical else '  TOKENS DIVERGED'}")
+  # end-to-end determinism: the same (spec, seed) cell twice -> identical
+  # token streams and SLO report
+  _, a = one("exact", "poisson", True)
+  _, b = one("exact", "poisson", True)
+  out["determinism_ok"] = (a.token_streams == b.token_streams
+                           and a.report == b.report)
+  print(f"workload: determinism_ok={out['determinism_ok']}")
+  return out
+
+
 def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
                    batch: int = 2, prompt_len: int = 64, gen: int = 16) -> int:
   from repro.launch.serve import ServeRun
@@ -342,6 +436,11 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
   else:
     record["decode_kernels"] = None
     print(f"decode kernels: skipped ({arch} family not engine-servable)")
+  if get_arch(arch, reduced=True).family in ("dense", "moe"):
+    record["workload"] = run_workload(arch)
+  else:
+    record["workload"] = None
+    print(f"workload: skipped ({arch} family not engine-servable)")
   history = _load_history(out_path)
   history.append(record)
   with open(out_path, "w") as f:

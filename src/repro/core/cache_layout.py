@@ -1174,6 +1174,37 @@ class TieredLayout(PagedLayout):
     self.storage = jax.tree_util.tree_unflatten(treedef, out)
     self.pool.unref(rec.host_ids, owner=rid, tier=tiersmod.HOST)
 
+  def abort_prefetch(self, rid: int) -> bool:
+    """Roll an IN_FLIGHT fetch back to SPILLED (transfer failed or was
+    cancelled): free the destination device blocks, drop the staged decoded
+    arrays.  The host-tier payload is untouched, so a retry simply starts
+    the transfer over.  Returns False (no change) when the request has no
+    fetch in flight."""
+    rec = self.records.get(rid)
+    if rec is None or rec.state != tiersmod.BLOCK_IN_FLIGHT:
+      return False
+    self.pool.unref(rec.device_ids or [], owner=("fetch", rid))
+    rec.device_ids = None
+    rec.staged = None
+    rec.state = tiersmod.BLOCK_SPILLED
+    self.ledger.fetch_aborts += 1
+    return True
+
+  def drop_spilled(self, rid: int) -> int:
+    """Permanently discard a spilled request's state (bounded fetch retries
+    exhausted: the request is failed, not resumed).  Releases everything
+    the record holds — in-flight destination blocks, shared-prefix pins,
+    host-tier blocks — so a dropped request leaks nothing from either pool.
+    Returns the host blocks freed."""
+    rec = self.records.pop(rid)
+    if rec.state == tiersmod.BLOCK_IN_FLIGHT and rec.device_ids:
+      self.pool.unref(rec.device_ids, owner=("fetch", rid))
+    if rec.shared_pairs:
+      self.pool.unref([pid for _, pid in rec.shared_pairs],
+                      owner=rec.spill_owner)
+    self.pool.unref(rec.host_ids, owner=rid, tier=tiersmod.HOST)
+    return rec.n_blocks
+
   def _decode_payloads(self, rec):
     return [None if p is None else
             tiersmod.get_codec(p[0]).decode(p[1], p[2], p[3])

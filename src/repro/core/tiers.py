@@ -434,6 +434,7 @@ class TransferLedger:
   fetch_blocks: int = 0
   spill_events: int = 0       # swap-out operations (whole-request granularity)
   fetch_events: int = 0
+  fetch_aborts: int = 0       # IN_FLIGHT fetches rolled back (fault/cancel)
   pcie_gbps: float = PCIE_GBPS
 
   def record_spill(self, nbytes: int, raw_bytes: int, blocks: int) -> None:
@@ -462,6 +463,12 @@ class TransferLedger:
   def modeled_pcie_s(self) -> float:
     """Time the measured boundary traffic would occupy the host link."""
     return self.total_bytes / (self.pcie_gbps * 1e9)
+
+  def transfer_s(self, nbytes: int) -> float:
+    """Link time one transfer of `nbytes` occupies under the PCIe model —
+    the per-event duration the virtual-clock engine draws its transfer
+    completion times from (modeled_pcie_s is this summed over the run)."""
+    return nbytes / (self.pcie_gbps * 1e9)
 
   def as_dict(self) -> dict:
     d = dataclasses.asdict(self)

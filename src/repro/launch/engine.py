@@ -75,6 +75,7 @@ from repro.configs.base import ModelConfig
 from repro.core import cache_registry
 from repro.launch import scheduler as scheduler_lib
 from repro.models import Model
+from repro.runtime import fault_tolerance
 
 
 @dataclasses.dataclass
@@ -93,6 +94,16 @@ class RequestHandle:
   spill_count: int = 0               # swap-outs (KV preserved across them)
   resume_len: int = 0                # cached length at swap-out
   resume_cur: int = 0                # pending token at swap-out
+  # fault-tolerance (host-tier fetch faults, workload-harness injectable)
+  fetch_failures: int = 0            # transient fetch faults survived so far
+  failed: bool = False               # dropped after bounded fetch retries
+  # virtual-clock timestamps (None on wall-clock engines); the workload
+  # harness folds these into per-request TTFT/TPOT/queueing SLO metrics
+  submitted_step: Optional[int] = None
+  submit_s: Optional[float] = None   # arrival (stamped by the driver)
+  admit_s: Optional[float] = None    # first admission (queueing delay ends)
+  first_token_s: Optional[float] = None
+  finish_s: Optional[float] = None
 
   @property
   def prompt_len(self) -> int:
@@ -118,6 +129,17 @@ class EngineStats:
   spill_bytes: int = 0           # device -> host, post-spill-codec
   fetch_bytes: int = 0           # host -> device, post-spill-codec
   modeled_pcie_s: float = 0.0    # time that traffic would occupy the link
+  fetch_failures: int = 0        # injected/transient fetch faults (requeued)
+  fetch_aborts: int = 0          # IN_FLIGHT transfers rolled back to SPILLED
+  failed_requests: int = 0       # dropped after exhausting bounded retries
+  # virtual-clock accounting (zero on wall-clock engines): where the run's
+  # simulated makespan went — the stall-attribution split the SLO report
+  # and the workload benchmark records break out
+  virtual_s: float = 0.0         # simulated makespan so far
+  compute_s: float = 0.0         # decode + prefill virtual time
+  transfer_stall_s: float = 0.0  # blocked on the modeled PCIe link
+  idle_s: float = 0.0            # no work due (waiting on arrivals)
+  link_busy_s: float = 0.0       # link occupancy (overlapped or stalled)
   # prefix-cache accounting (zero when --prefix-cache is off)
   prefix_hits: int = 0           # admissions that matched the prefix index
   prefix_full_hits: int = 0      # whole-prompt hits (prefill skipped)
@@ -129,6 +151,13 @@ class EngineStats:
   # distribution CI's p99 regression guard watches.  Bounded: a long-lived
   # engine keeps the most recent window of samples, not its whole history
   decode_step_s: collections.deque = dataclasses.field(
+      default_factory=lambda: collections.deque(maxlen=4096), repr=False)
+  # queue gauges the workload harness reads: depth sampled once per step(),
+  # and per-request waiting time (submit -> first admit) in engine steps.
+  # Same bounded-window policy as decode_step_s
+  queue_depth_samples: collections.deque = dataclasses.field(
+      default_factory=lambda: collections.deque(maxlen=4096), repr=False)
+  queue_wait_steps: collections.deque = dataclasses.field(
       default_factory=lambda: collections.deque(maxlen=4096), repr=False)
 
   @property
@@ -152,13 +181,31 @@ class EngineStats:
     the serve CLI demo and the benchmark harness both do."""
     return timing.latency_percentiles_ms(self.decode_step_s)
 
+  def queue_gauges(self) -> dict:
+    """Queue-pressure snapshot over the sample windows: current/mean/max
+    depth and mean/max per-request waiting time (in engine steps)."""
+    depth = list(self.queue_depth_samples)
+    wait = list(self.queue_wait_steps)
+    return dict(
+        depth_now=int(depth[-1]) if depth else 0,
+        depth_mean=round(float(np.mean(depth)), 3) if depth else 0.0,
+        depth_max=int(max(depth)) if depth else 0,
+        wait_steps_mean=round(float(np.mean(wait)), 3) if wait else 0.0,
+        wait_steps_max=int(max(wait)) if wait else 0,
+        depth_samples=len(depth), wait_samples=len(wait))
+
   def as_dict(self) -> dict:
-    # raw samples stay in-process (and are not copied just to be dropped)
+    """Read-only snapshot: a fresh dict every call, counters untouched.
+    Deque-valued fields (raw sample windows) are excluded *by type*, not by
+    name — new gauges stay in-process automatically instead of leaking
+    unserializable deques into stats-json (the old name-based filter only
+    knew about decode_step_s)."""
     d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
-         if f.name != "decode_step_s"}
+         if not isinstance(getattr(self, f.name), collections.deque)}
     d["occupancy"] = round(self.occupancy, 4)
     d["prefix_hit_rate"] = round(self.prefix_hit_rate, 4)
     d["decode_latency"] = self.decode_latency()
+    d["queue"] = self.queue_gauges()
     return d
 
   def summary(self) -> str:
@@ -181,6 +228,15 @@ class EngineStats:
             f"full), {100 * self.prefix_hit_rate:.1f}% of prompt tokens "
             f"cached, {self.forked_blocks} cow-forks, {self.dedup_bytes} B "
             f"deduped")
+    if self.fetch_failures or self.failed_requests:
+      s += (f" | fetch faults {self.fetch_failures} "
+            f"({self.fetch_aborts} aborts, {self.failed_requests} requests "
+            f"dropped)")
+    if self.virtual_s:
+      s += (f" | virtual {self.virtual_s:.3f} s "
+            f"({1e3 * self.compute_s:.1f} ms compute, "
+            f"{1e3 * self.transfer_stall_s:.1f} ms transfer stall, "
+            f"{1e3 * self.idle_s:.1f} ms idle)")
     return s
 
 
@@ -196,7 +252,10 @@ class ServeEngine:
                num_blocks: Optional[int] = None,
                host_blocks: Optional[int] = None,
                prefix_cache: Optional[bool] = None,
-               prefix_cache_blocks: Optional[int] = None):
+               prefix_cache_blocks: Optional[int] = None,
+               clock: Any = None,
+               fault_injector: Any = None,
+               max_fetch_retries: int = 3):
     if cfg.family not in ("dense", "moe"):
       raise ValueError(
           f"ServeEngine supports dense/moe attention families, got "
@@ -255,6 +314,16 @@ class ServeEngine:
       self.layout.set_prompt_capacity(self.prompt_capacity)
       self._prefix_chunk = self.layout.block
 
+    # virtual-clock serving (workload harness): compute and host-tier
+    # transfers consume simulated time; overlap mode lets IN_FLIGHT
+    # transfers drain while resident requests decode.  clock=None is the
+    # wall-clock engine, bit-identical to the pre-harness behavior.
+    self.clock = clock
+    self.fault_injector = fault_injector
+    self.max_fetch_retries = max_fetch_retries
+    #: rid -> virtual completion time of its in-flight host->device fetch
+    self._transfer_ready: dict = {}
+
     self.stats = EngineStats(max_batch=max_batch)
     self._lengths = np.zeros((max_batch,), np.int32)
     self._cur = np.zeros((max_batch,), np.int32)
@@ -293,7 +362,10 @@ class ServeEngine:
           f"request needs more KV blocks than the whole pool holds "
           f"({self.layout!r}); raise num_blocks or shorten the request")
     req = RequestHandle(rid=self._next_rid, prompt=prompt,
-                        max_new_tokens=max_new_tokens)
+                        max_new_tokens=max_new_tokens,
+                        submitted_step=self._step_no)
+    if self.clock is not None and req.submit_s is None:
+      req.submit_s = self.clock.now
     self._next_rid += 1
     self._queue.append(req)
     return req
@@ -323,19 +395,38 @@ class ServeEngine:
     this instead of reaching into the layout."""
     total = req.prompt_len + req.max_new_tokens
     if req.spilled:
-      return self.layout.can_fetch(req.rid, total)
+      return (self.layout.can_fetch(req.rid, total)
+              and self._transfer_ready_ok(req.rid))
     if self.prefix_cache:
       plan = self.layout.prefix_plan(req.prompt, total)
       return plan["need"] <= self.layout.free_blocks
     return self.layout.can_admit(req.prompt_len, total)
 
+  @property
+  def fetch_depth(self) -> int:
+    """How many host->device fetches may be materializing at once: 1 on a
+    wall-clock engine (the PR 3 one-step hint), 2 under an overlapping
+    virtual clock (double-buffered: one transfer finalizing while the next
+    drains behind it), 0 in serialized-fallback mode (every transfer is
+    charged at the admit that needs it — the bit-identity oracle)."""
+    if self.clock is None:
+      return 1
+    return 2 if self.clock.overlap else 0
+
+  @property
+  def transfers_in_flight(self) -> Tuple[int, ...]:
+    """Rids whose fetch transfer has started but not been finalized."""
+    return tuple(self._transfer_ready)
+
   def step(self) -> List[RequestHandle]:
     """Admit queued requests into free slots, run one batched decode step,
     and return the requests that finished this step."""
+    self.stats.queue_depth_samples.append(len(self._queue))
     finished = self._admit()
     if self.active_count == 0:
       self._step_no += 1
       self.stats.steps += 1
+      self._sync_clock_stats()
       return finished
 
     # every active row grows by one token this step; secure its block first
@@ -344,6 +435,7 @@ class ServeEngine:
     if self.active_count == 0:            # everything preempted back to queue
       self._step_no += 1
       self.stats.steps += 1
+      self._sync_clock_stats()
       return finished
 
     t0 = time.perf_counter()
@@ -351,6 +443,8 @@ class ServeEngine:
     # np.asarray blocks on the device result: the sample spans launch->sync
     next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
     self.stats.decode_step_s.append(time.perf_counter() - t0)
+    if self.clock is not None:
+      self.clock.advance(self.clock.decode_step_s)
     self.stats.decode_steps += 1
     self.stats.busy_slot_steps += self.active_count
     self.stats.wasted_slot_steps += self.max_batch - self.active_count
@@ -373,6 +467,7 @@ class ServeEngine:
     self._fetch_ahead()
     self._step_no += 1
     self.stats.steps += 1
+    self._sync_clock_stats()
     return finished
 
   def run_to_completion(self, max_steps: int = 10_000) -> List[RequestHandle]:
@@ -410,6 +505,13 @@ class ServeEngine:
         evicted = True
       if evicted:
         finished.extend(self._admit_pass())
+    # overlap-mode liveness: if nothing is running and the only admissible
+    # work is behind an in-flight transfer, time must jump to the earliest
+    # completion — otherwise an idle engine would spin at a frozen clock
+    if (self.clock is not None and not self.active_count and self._queue
+        and self._transfer_ready):
+      self.clock.stall_until(min(self._transfer_ready.values()))
+      finished.extend(self._admit_pass())
     return finished
 
   def _admit_pass(self) -> List[RequestHandle]:
@@ -426,9 +528,44 @@ class ServeEngine:
         if not self.layout.can_fetch(req.rid,
                                      req.prompt_len + req.max_new_tokens):
           break                     # wait for running requests to free blocks
+        if not self._transfer_ready_ok(req.rid):
+          break                     # transfer still draining; decode goes on
+        fate = self._fetch_fault(req)
+        if fate is not None:
+          # the transfer "failed": roll any IN_FLIGHT blocks back to the
+          # host tier and either retry from the queue tail (transient) or
+          # drop the request after bounded retries — never crash the step
+          del self._queue[idx]
+          self.layout.abort_prefetch(req.rid)
+          self._transfer_ready.pop(req.rid, None)
+          self.stats.fetch_failures += 1
+          if fate == "drop":
+            self.layout.drop_spilled(req.rid)
+            req.failed = True
+            req.done = True
+            req.finished_step = self._step_no
+            if self.clock is not None:
+              req.finish_s = self.clock.now
+            self.stats.failed_requests += 1
+            finished.append(req)
+          else:
+            self._queue.append(req)
+          self._sync_transfer_stats()
+          continue
         del self._queue[idx]
         slot = free_slots.pop(0)
+        ready = self._transfer_ready.pop(req.rid, None)
+        ledger = getattr(self.layout, "ledger", None)
+        before = ledger.total_bytes if ledger is not None else 0
         self.layout.fetch(req.rid, slot)
+        if self.clock is not None:
+          if ready is not None:
+            self.clock.stall_until(ready)   # no-op: readiness gated above
+          elif ledger is not None:
+            # no fetch-ahead happened: the transfer serializes right here
+            moved = ledger.total_bytes - before
+            self.clock.stall_until(
+                self.clock.start_transfer(ledger.transfer_s(moved)))
         req.spilled = False
         req.slot = slot
         req.admitted_step = self._step_no
@@ -451,6 +588,11 @@ class ServeEngine:
         break                       # wait for running requests to free blocks
       del self._queue[idx]
       slot = free_slots.pop(0)
+      if req.submitted_step is not None:
+        self.stats.queue_wait_steps.append(
+            self._step_no - req.submitted_step)
+      if self.clock is not None and req.admit_s is None:
+        req.admit_s = self.clock.now   # queueing delay ends; prefill starts
       first = self._prefill_into(slot, req, plan)
       req.slot = slot
       req.admitted_step = self._step_no
@@ -479,6 +621,7 @@ class ServeEngine:
       self.stats.prefix_full_hits += 1
       self.stats.prefix_hit_tokens += p_len
       self.layout.prefix_index.record_hit(p_len, full=True)
+      self._charge_prefill(req, 0)      # snapshot hit: zero compute
       return int(entry.first_token)
     if plan is not None and plan["kind"] == "chain":
       matched = plan["matched_tokens"]
@@ -489,6 +632,7 @@ class ServeEngine:
       self.stats.prefill_tokens += p_len - matched
       self.layout.prefix_index.record_hit(matched)
       self.layout.prefix_publish(slot, req.prompt, first)
+      self._charge_prefill(req, p_len - matched)
       return first
     padded = np.zeros((1, self.prompt_capacity), np.int32)
     padded[0, :p_len] = req.prompt
@@ -499,7 +643,18 @@ class ServeEngine:
     self.stats.prefill_tokens += p_len
     if self.prefix_cache:
       self.layout.prefix_publish(slot, req.prompt, first)
+    self._charge_prefill(req, p_len)
     return first
+
+  def _charge_prefill(self, req: RequestHandle, computed_tokens: int) -> None:
+    """Spend virtual time on the tokens this admission actually computed
+    (zero for a snapshot hit, the suffix for a chain hit) and stamp the
+    request's first-token time — TTFT ends here."""
+    if self.clock is None:
+      return
+    self.clock.advance(computed_tokens * self.clock.prefill_token_s)
+    if req.first_token_s is None:
+      req.first_token_s = self.clock.now
 
   def _prefill_suffix(self, slot: int, req: RequestHandle, start: int) -> int:
     """Suffix-only prefill: run the uncached prompt tail [start, prompt_len)
@@ -567,7 +722,15 @@ class ServeEngine:
     assert req is not None, f"swapping out empty slot {slot}"
     req.resume_len = int(self._lengths[slot])
     req.resume_cur = int(self._cur[slot])
+    ledger = getattr(self.layout, "ledger", None)
+    before = ledger.total_bytes if ledger is not None else 0
     self.layout.spill(slot, req.rid, req.resume_len)
+    if self.clock is not None and ledger is not None:
+      # the spill occupies the link (overlapped with decode, or a stall in
+      # serialized mode); the device blocks are free either way — nothing
+      # waits on a spill's completion
+      self.clock.start_transfer(
+          ledger.transfer_s(ledger.total_bytes - before))
     req.spilled = True
     req.slot = None
     req.spill_count += 1
@@ -579,13 +742,57 @@ class ServeEngine:
     self._sync_transfer_stats()
 
   def _fetch_ahead(self) -> None:
-    """One-step fetch-ahead: start materializing the next spilled request's
-    blocks (IN_FLIGHT) so its admit next step only finalizes — the modeled
-    PCIe transfer overlaps the step boundary instead of serializing."""
-    rid = self.scheduler.fetch_ahead(self)
-    if rid is not None and self.layout.prefetch(rid):
-      self.stats.prefetches += 1
-      self._sync_transfer_stats()
+    """Start materializing upcoming spilled requests' blocks (IN_FLIGHT) so
+    their admits only finalize.  Wall-clock engines keep the PR 3 one-step
+    hint; under an overlapping virtual clock this is a double-buffered
+    async stage — up to `fetch_depth` transfers drain on the modeled PCIe
+    link while decode proceeds on resident requests, each completing at a
+    deadline drawn from `TransferLedger.transfer_s`."""
+    if self.clock is None:
+      rid = self.scheduler.fetch_ahead(self)
+      if rid is not None and self.layout.prefetch(rid):
+        self.stats.prefetches += 1
+        self._sync_transfer_stats()
+      return
+    depth = self.fetch_depth
+    if depth == 0:
+      return                        # serialized fallback: no async stage
+    ledger = getattr(self.layout, "ledger", None)
+    if ledger is None:
+      return                        # single-tier layout: nothing to fetch
+    for rid in self.scheduler.fetch_ahead_many(self, depth):
+      if len(self._transfer_ready) >= depth:
+        break
+      if rid in self._transfer_ready:
+        continue
+      before = ledger.total_bytes
+      if self.layout.prefetch(rid):
+        self._transfer_ready[rid] = self.clock.start_transfer(
+            ledger.transfer_s(ledger.total_bytes - before))
+        self.stats.prefetches += 1
+    self._sync_transfer_stats()
+
+  def _transfer_ready_ok(self, rid: int) -> bool:
+    """May this spilled request finalize its fetch now?  True unless an
+    overlapped transfer for it is still draining on the link."""
+    if self.clock is None or not self.clock.overlap:
+      return True
+    ready = self._transfer_ready.get(rid)
+    return ready is None or ready <= self.clock.now + 1e-12
+
+  def _fetch_fault(self, req: RequestHandle) -> Optional[str]:
+    """Consult the fault injector about this fetch attempt: None (proceed),
+    'retry' (transient fault, requeue), or 'drop' (retries exhausted)."""
+    if self.fault_injector is None:
+      return None
+    try:
+      self.fault_injector.check_fetch(req.rid, req.fetch_failures)
+    except fault_tolerance.SimulatedFailure:
+      req.fetch_failures += 1
+      if req.fetch_failures > self.max_fetch_retries:
+        return "drop"
+      return "retry"
+    return None
 
   def _sync_transfer_stats(self) -> None:
     ledger = getattr(self.layout, "ledger", None)
@@ -593,6 +800,17 @@ class ServeEngine:
       self.stats.spill_bytes = ledger.spill_bytes
       self.stats.fetch_bytes = ledger.fetch_bytes
       self.stats.modeled_pcie_s = ledger.modeled_pcie_s
+      self.stats.fetch_aborts = ledger.fetch_aborts
+
+  def _sync_clock_stats(self) -> None:
+    c = self.clock
+    if c is None:
+      return
+    self.stats.virtual_s = c.now
+    self.stats.compute_s = c.compute_s
+    self.stats.transfer_stall_s = c.transfer_stall_s
+    self.stats.idle_s = c.idle_s
+    self.stats.link_busy_s = c.link_busy_s
 
   def _preempt(self, slot: int) -> None:
     """Recompute preemption: release the slot, requeue the request; greedy
@@ -602,6 +820,8 @@ class ServeEngine:
     req.tokens = []
     req.slot = None
     req.admitted_step = None
+    req.admit_s = None               # re-admission re-measures queueing
+    req.first_token_s = None         # regenerated tokens re-stamp TTFT
     req.preempt_count += 1
     self.layout.release(slot)
     self._slots[slot] = None
@@ -613,6 +833,8 @@ class ServeEngine:
   def _finish(self, slot: int, req: RequestHandle) -> RequestHandle:
     req.done = True
     req.finished_step = self._step_no
+    if self.clock is not None:
+      req.finish_s = self.clock.now
     self.layout.release(slot)
     self._slots[slot] = None
     self._lengths[slot] = 0

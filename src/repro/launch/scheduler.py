@@ -88,6 +88,15 @@ class Scheduler:
     del engine
     return None
 
+  def fetch_ahead_many(self, engine, depth: int) -> Sequence[int]:
+    """Rids (up to `depth`) whose host->device transfers should be in
+    flight now — the async double-buffered generalization of fetch_ahead
+    used by the virtual-clock engine.  The engine skips rids that already
+    have a transfer draining; still only a hint."""
+    del depth
+    rid = self.fetch_ahead(engine)
+    return [] if rid is None else [rid]
+
   def __repr__(self) -> str:
     return f"{type(self).__name__}()"
 
@@ -228,3 +237,18 @@ class TieredScheduler(Scheduler):
       if req.spilled:
         return req.rid                 # layout.prefetch no-ops if unready
     return None
+
+  def fetch_ahead_many(self, engine, depth):
+    """The next `depth` spilled queued requests, in queue order.  Unlike
+    the one-step hint this does *not* gate on a free slot: under the
+    overlapping virtual clock a transfer drains while every slot decodes,
+    precisely so the data is resident the moment a slot frees (the engine's
+    fetch_depth already bounds how many drain at once, and layout.prefetch
+    refuses when the device pool lacks headroom)."""
+    out = []
+    for req in engine.queue_view:
+      if req.spilled:
+        out.append(req.rid)
+        if len(out) >= depth:
+          break
+    return out

@@ -24,6 +24,17 @@ fetches it back later).  Per-run occupancy/waste/preempt/spill counters
 print from `engine.stats`; `--stats-json PATH` dumps them machine-readably
 (plus `layout_bytes` and the tier-boundary `transfer` ledger) so CI and
 benches can assert on them.
+
+`--workload N` switches to the trace-driven harness (launch/workload.py):
+N seeded requests arrive over a virtual clock (`--arrival poisson|bursty|
+trace`, `--arrival-rate`, `--burstiness`, `--trace-file`), each carrying an
+SLO (`--slo-ttft`/`--slo-tpot`); host-tier transfers overlap decode through
+the double-buffered fetch stage (or serialize with `--no-overlap` — same
+greedy tokens either way), `--fetch-fail-rate` injects host-tier fetch
+faults the engine must survive, and the run reports TTFT/TPOT percentiles,
+goodput, and compute/transfer/idle stall attribution instead of wall-clock
+throughput.  Deterministic end to end: two runs with one seed produce
+identical token streams and reports.
 """
 from __future__ import annotations
 
@@ -163,9 +174,11 @@ class ServeRun:
     }
 
 
-def build_engine(args):
+def build_engine(args, clock=None, fault_injector=None):
   """Construct the ServeEngine exactly as the CLI flags describe it (kept
-  separate so tests can assert every flag reaches the engine/config)."""
+  separate so tests can assert every flag reaches the engine/config).
+  `clock`/`fault_injector` are the workload harness's virtual clock and
+  fetch-fault injector (None for the wall-clock demo paths)."""
   from repro.launch.engine import ServeEngine
   cfg = get_arch(args.arch, reduced=args.reduced)
   # host_blocks passes through as-is: an explicit --host-blocks 0 (no host
@@ -180,15 +193,25 @@ def build_engine(args):
                             prefix_cache_blocks=args.prefix_cache_blocks,
                             decode_kernel=args.decode_kernel)
   context = args.prompt_len + args.gen
-  return ServeEngine(cfg, context_len=context, max_batch=args.batch,
-                     prompt_capacity=args.prompt_len,
-                     num_blocks=args.num_blocks)
+  engine = ServeEngine(cfg, context_len=context, max_batch=args.batch,
+                       prompt_capacity=args.prompt_len,
+                       num_blocks=args.num_blocks, clock=clock,
+                       fault_injector=fault_injector)
+  if getattr(args, "pcie_gbps", None):
+    ledger = getattr(engine.layout, "ledger", None)
+    if ledger is not None:
+      ledger.pcie_gbps = args.pcie_gbps
+  return engine
 
 
-def dump_stats_json(engine, path: str) -> None:
+def dump_stats_json(engine, path: str, extra: Any = None) -> None:
   """Machine-readable run record: EngineStats.as_dict() + the layout's true
-  footprint + (tiered) the tier-boundary transfer ledger."""
+  footprint + (tiered) the tier-boundary transfer ledger.  `extra` merges
+  additional top-level sections (the workload harness adds its SLO report
+  under the "workload" key)."""
   payload = engine.stats.as_dict()
+  if extra:
+    payload.update(extra)
   payload["layout"] = engine.layout.name
   payload["scheduler"] = engine.scheduler.name
   payload["decode_kernel"] = (
@@ -282,6 +305,61 @@ def run_engine_demo(args) -> None:
     print(f"stats written to {args.stats_json}")
 
 
+def workload_spec_from_args(args):
+  """Translate the --workload/--arrival/--slo-* flag family into a
+  `WorkloadSpec` (kept separate so tests can assert the plumbing)."""
+  from repro.launch import slo as slo_lib
+  from repro.launch import workload as workload_lib
+  slo = slo_lib.SLOSpec(ttft_s=args.slo_ttft, tpot_s=args.slo_tpot)
+  p_lo = max(1, args.prompt_len // 2)
+  g_lo = max(1, args.gen // 2)
+  tenants = []
+  for i in range(max(1, args.tenants)):
+    # tenant 0 of a multi-tenant mix shares a prompt prefix (the traffic
+    # pattern the prefix cache exists for); the rest are distinct
+    shared = p_lo // 2 if (i == 0 and args.tenants > 1) else 0
+    tenants.append(workload_lib.TenantSpec(
+        name=f"t{i}", prompt_len=(p_lo, args.prompt_len),
+        max_new_tokens=(g_lo, args.gen), shared_prefix_len=shared, slo=slo))
+  return workload_lib.WorkloadSpec(
+      arrival=args.arrival, rate=args.arrival_rate,
+      burstiness=args.burstiness, n_requests=args.workload,
+      seed=args.workload_seed, tenants=tuple(tenants),
+      trace_path=args.trace_file, fetch_fail_rate=args.fetch_fail_rate,
+      fetch_fail_seed=args.workload_seed)
+
+
+def run_workload_demo(args) -> None:
+  """Trace-driven serving under the virtual clock: seeded arrivals feed the
+  engine, transfers overlap decode (or serialize with --no-overlap), and
+  the run reports SLO metrics instead of wall-clock throughput."""
+  from repro.launch import slo as slo_lib
+  from repro.launch import workload as workload_lib
+  from repro.runtime.fault_tolerance import FetchFaultInjector
+  spec = workload_spec_from_args(args)
+  clock = workload_lib.VirtualClock(overlap=not args.no_overlap)
+  injector = None
+  if spec.fetch_fail_rate > 0:
+    injector = FetchFaultInjector(fail_rate=spec.fetch_fail_rate,
+                                  seed=spec.fetch_fail_seed)
+  engine = build_engine(args, clock=clock, fault_injector=injector)
+  driver = workload_lib.WorkloadDriver(engine, spec)
+  result = driver.run()
+  mode = "serialized" if args.no_overlap else "overlapped"
+  print(f"workload: {spec.arrival} arrivals at {spec.rate}/s, "
+        f"{len(driver.requests)} requests, {mode} spill/fetch "
+        f"[layout={args.cache_layout} scheduler={args.scheduler} "
+        f"policy={args.cache_policy}]")
+  print(f"slo: {slo_lib.summary(result.report)}")
+  print(f"engine stats: {engine.stats.summary()}")
+  if args.stats_json:
+    dump_stats_json(engine, args.stats_json,
+                    extra={"workload": dict(
+                        result.report, arrival=spec.arrival, rate=spec.rate,
+                        seed=spec.seed, overlap=not args.no_overlap)})
+    print(f"stats written to {args.stats_json}")
+
+
 def make_parser() -> argparse.ArgumentParser:
   ap = argparse.ArgumentParser(description=__doc__)
   ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -336,6 +414,42 @@ def make_parser() -> argparse.ArgumentParser:
                   help="legacy alias for --cache-policy exact")
   ap.add_argument("--engine", action="store_true",
                   help="run the continuous-batching ServeEngine demo")
+  # ---- workload harness (trace-driven traffic under a virtual clock) ----
+  ap.add_argument("--workload", type=int, default=None, metavar="N",
+                  help="drive the engine with N seeded trace-generated "
+                       "requests under a virtual clock (implies --engine); "
+                       "reports TTFT/TPOT/goodput SLO metrics")
+  ap.add_argument("--arrival", default="poisson",
+                  choices=("poisson", "bursty", "trace"),
+                  help="arrival process: poisson (exponential gaps), bursty "
+                       "(Gamma gaps, cv^2=--burstiness), or trace (replay "
+                       "--trace-file)")
+  ap.add_argument("--arrival-rate", type=float, default=50.0,
+                  help="mean arrivals per virtual second")
+  ap.add_argument("--burstiness", type=float, default=4.0,
+                  help="cv^2 of bursty interarrivals (1 = Poisson)")
+  ap.add_argument("--trace-file", default=None, metavar="PATH",
+                  help="JSON arrival trace for --arrival trace")
+  ap.add_argument("--slo-ttft", type=float, default=0.5,
+                  help="SLO: time-to-first-token budget (virtual seconds)")
+  ap.add_argument("--slo-tpot", type=float, default=0.05,
+                  help="SLO: per-output-token budget (virtual seconds)")
+  ap.add_argument("--workload-seed", type=int, default=0,
+                  help="seed for the workload trace and fault injection "
+                       "(same seed = identical trace, byte for byte)")
+  ap.add_argument("--tenants", type=int, default=1,
+                  help="synthetic tenant count; tenant 0 of a multi-tenant "
+                       "mix shares a prompt prefix")
+  ap.add_argument("--no-overlap", action="store_true",
+                  help="serialized spill/fetch fallback: every transfer "
+                       "stalls the virtual clock (tokens must stay "
+                       "bit-identical to overlapped mode)")
+  ap.add_argument("--fetch-fail-rate", type=float, default=0.0,
+                  help="inject host-tier fetch faults at this per-attempt "
+                       "probability (engine retries with bounded backoff)")
+  ap.add_argument("--pcie-gbps", type=float, default=None,
+                  help="override the modeled tier-boundary link bandwidth "
+                       "(smaller = transfers dominate, stressing overlap)")
   return ap
 
 
@@ -348,9 +462,17 @@ def main():
     if args.cache_policy not in ("pq", "exact"):
       ap.error(f"--no-pq conflicts with --cache-policy {args.cache_policy}")
     args.cache_policy = "exact"
+  if args.workload is not None:
+    args.engine = True               # the harness drives the engine
   if args.stats_json and not args.engine:
     ap.error("--stats-json requires --engine (EngineStats are engine-mode)")
+  if args.arrival == "trace" and args.workload is not None \
+      and not args.trace_file:
+    ap.error("--arrival trace requires --trace-file")
 
+  if args.workload is not None:
+    run_workload_demo(args)
+    return
   if args.engine:
     run_engine_demo(args)
     return

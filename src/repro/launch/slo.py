@@ -1,0 +1,191 @@
+"""SLO metrics layer for the workload harness: per-request latency targets
+and the report the serving benchmarks assert on.
+
+The PIM serving papers this repo tracks (LoL-PIM, PIM-AI — PAPERS.md)
+evaluate long-context serving against *latency SLOs*, not raw throughput:
+a request is only useful if its first token lands within a TTFT budget and
+subsequent tokens keep up with a per-token (TPOT) budget.  This module owns
+those definitions so the workload driver, the serve CLI, the benchmark
+records, and CI all measure the same thing:
+
+  ``SLOSpec``        the per-request targets (TTFT + TPOT seconds) and the
+                     deadline they induce;
+  ``RequestTiming``  one served request's virtual-time trajectory
+                     (arrival -> admit -> first token -> finish) with the
+                     derived TTFT / TPOT / queueing-delay metrics;
+  ``build_report``   aggregates timings + the engine's virtual clock into
+                     the ``workload`` record family: TTFT/TPOT/queue
+                     percentiles, goodput (tokens served within deadline),
+                     and stall-time attribution (compute vs transfer vs
+                     idle) — the paper's 90-98.5% communication-share claim
+                     as a per-run measured split.
+
+Everything here is pure host-side arithmetic over virtual timestamps; no
+wall clock, no RNG — two runs of the same seeded workload produce the
+identical report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+  """Per-request latency targets, LoL-PIM style.
+
+  `ttft_s` bounds arrival -> first token (queueing + prefill); `tpot_s`
+  bounds the steady-state per-token cadence.  Together they induce one
+  deadline for the whole generation: a request that finishes past it
+  produced no *good* tokens, however many it produced.
+  """
+  ttft_s: float = 0.5
+  tpot_s: float = 0.05
+
+  def deadline_s(self, arrival_s: float, max_new_tokens: int) -> float:
+    return arrival_s + self.ttft_s + self.tpot_s * max(max_new_tokens, 1)
+
+
+@dataclasses.dataclass
+class RequestTiming:
+  """One request's virtual-time trajectory and its derived SLO metrics.
+
+  All timestamps are virtual-clock seconds.  `first_token_s` is when the
+  prefill emitted token 0 (TTFT ends there); `finish_s` when the last token
+  landed.  A `failed` request (dropped after bounded fetch retries) counts
+  against goodput but keeps whatever timings it accumulated.
+  """
+  rid: int
+  tenant: str
+  arrival_s: float
+  deadline_s: float
+  max_new_tokens: int
+  n_tokens: int = 0
+  admit_s: Optional[float] = None
+  first_token_s: Optional[float] = None
+  finish_s: Optional[float] = None
+  failed: bool = False
+
+  @property
+  def ttft_s(self) -> Optional[float]:
+    if self.first_token_s is None:
+      return None
+    return self.first_token_s - self.arrival_s
+
+  @property
+  def tpot_s(self) -> Optional[float]:
+    """Mean per-token time after the first token (None for 1-token runs)."""
+    if self.first_token_s is None or self.finish_s is None:
+      return None
+    if self.n_tokens <= 1:
+      return None
+    return (self.finish_s - self.first_token_s) / (self.n_tokens - 1)
+
+  @property
+  def queue_s(self) -> Optional[float]:
+    if self.admit_s is None:
+      return None
+    return self.admit_s - self.arrival_s
+
+  @property
+  def met_deadline(self) -> bool:
+    return (not self.failed and self.finish_s is not None
+            and self.finish_s <= self.deadline_s + 1e-12)
+
+  @property
+  def good_tokens(self) -> int:
+    """Tokens that count toward goodput: all of them iff the deadline held."""
+    return self.n_tokens if self.met_deadline else 0
+
+
+def percentiles_s(values: Sequence[Optional[float]]) -> dict:
+  """p50/p99/mean over virtual seconds — the one percentile definition the
+  workload record family uses (mirrors `timing.latency_percentiles_ms`)."""
+  vals = [v for v in values if v is not None]
+  if not vals:
+    return dict(n=0, p50_s=None, p99_s=None, mean_s=None)
+  a = np.asarray(vals, np.float64)
+  return dict(n=int(a.size),
+              p50_s=round(float(np.percentile(a, 50)), 6),
+              p99_s=round(float(np.percentile(a, 99)), 6),
+              mean_s=round(float(a.mean()), 6))
+
+
+def _stall_attribution(clock) -> dict:
+  """Where the run's virtual time went: decode/prefill compute, transfer
+  stall (blocked on the modeled PCIe link), or idle (no work due)."""
+  total = max(clock.now, 1e-12)
+  return dict(
+      virtual_s=round(clock.now, 6),
+      compute_s=round(clock.compute_s, 6),
+      transfer_stall_s=round(clock.transfer_stall_s, 6),
+      idle_s=round(clock.idle_s, 6),
+      link_busy_s=round(clock.link_busy_s, 6),
+      compute_frac=round(clock.compute_s / total, 4),
+      transfer_stall_frac=round(clock.transfer_stall_s / total, 4),
+      idle_frac=round(clock.idle_s / total, 4))
+
+
+def build_report(records: Sequence[RequestTiming], clock=None) -> dict:
+  """The ``workload`` record: SLO percentiles + goodput + stall attribution.
+
+  `clock` is the run's `workload.VirtualClock` (None for wall-clock-free
+  callers; the stall section is then omitted).  Goodput is measured two
+  ways: the fraction of served tokens that were *good* (whole-request
+  deadline held) and those good tokens over the virtual makespan (tok/s).
+  """
+  records = list(records)
+  total_tokens = sum(r.n_tokens for r in records)
+  good_tokens = sum(r.good_tokens for r in records)
+  met = sum(1 for r in records if r.met_deadline)
+  out = dict(
+      requests=len(records),
+      failed=sum(1 for r in records if r.failed),
+      tokens_total=total_tokens,
+      tokens_within_deadline=good_tokens,
+      goodput_frac=round(good_tokens / total_tokens, 4) if total_tokens
+      else 0.0,
+      deadline_met_frac=round(met / len(records), 4) if records else 0.0,
+      ttft=percentiles_s([r.ttft_s for r in records]),
+      tpot=percentiles_s([r.tpot_s for r in records]),
+      queue=percentiles_s([r.queue_s for r in records]))
+  if clock is not None:
+    makespan = max(clock.now, 1e-12)
+    out["goodput_tok_s"] = round(good_tokens / makespan, 2)
+    out["served_tok_s"] = round(total_tokens / makespan, 2)
+    out["stall"] = _stall_attribution(clock)
+  per_tenant: Dict[str, List[RequestTiming]] = {}
+  for r in records:
+    per_tenant.setdefault(r.tenant, []).append(r)
+  out["per_tenant"] = {
+      name: dict(
+          requests=len(rs),
+          tokens=sum(r.n_tokens for r in rs),
+          goodput_frac=round(sum(r.good_tokens for r in rs)
+                             / max(sum(r.n_tokens for r in rs), 1), 4),
+          ttft_p99_s=percentiles_s([r.ttft_s for r in rs])["p99_s"],
+          queue_p99_s=percentiles_s([r.queue_s for r in rs])["p99_s"])
+      for name, rs in sorted(per_tenant.items())}
+  return out
+
+
+def summary(report: dict) -> str:
+  """One-line human rendering of a build_report() dict."""
+  s = (f"{report['requests']} requests ({report['failed']} failed), "
+       f"goodput {100 * report['goodput_frac']:.1f}% of "
+       f"{report['tokens_total']} tokens "
+       f"({100 * report['deadline_met_frac']:.1f}% of deadlines met)")
+  if report["ttft"]["n"]:
+    s += (f" | TTFT p50 {report['ttft']['p50_s'] * 1e3:.1f} / p99 "
+          f"{report['ttft']['p99_s'] * 1e3:.1f} ms")
+  if report["tpot"]["n"]:
+    s += (f" | TPOT p50 {report['tpot']['p50_s'] * 1e3:.2f} / p99 "
+          f"{report['tpot']['p99_s'] * 1e3:.2f} ms")
+  stall = report.get("stall")
+  if stall:
+    s += (f" | time: {100 * stall['compute_frac']:.0f}% compute, "
+          f"{100 * stall['transfer_stall_frac']:.0f}% transfer stall, "
+          f"{100 * stall['idle_frac']:.0f}% idle")
+  return s

@@ -1,0 +1,403 @@
+"""Trace-driven workload harness: arrival processes, tenant prompt mixes,
+and the virtual-clock driver that feeds `ServeEngine.submit`.
+
+The engine (launch/engine.py) answers "given these requests, what happens?";
+this module answers "which requests, *when*?" — the missing half of the
+paper's serving story.  LoL-PIM and PIM-AI (PAPERS.md) both evaluate
+long-context PIM serving under arrival-driven load with latency SLOs; the
+ROADMAP names the production traffic harness as an open item.  Three pieces:
+
+- **Arrival processes**, a string-keyed registry mirroring the scheduler /
+  layout registries (`workload.make_arrival("poisson", ...)`):
+
+    | key       | interarrival model                                       |
+    |-----------|----------------------------------------------------------|
+    | `poisson` | exponential gaps at `rate` req/s (memoryless baseline)   |
+    | `bursty`  | Gamma gaps, mean `1/rate`, cv^2 = `burstiness` — bursts  |
+    |           | of back-to-back arrivals separated by long quiet gaps    |
+    | `trace`   | replay absolute arrival times from a JSON trace file     |
+
+- **Tenant mixes** (`TenantSpec`): each tenant has a sampling weight,
+  prompt/generation length ranges, an optional shared prompt prefix (its
+  requests exercise the prefix cache / COW paths), and an `SLOSpec`.
+  `generate()` samples a full request trace from one seeded
+  `np.random.default_rng` — no wallclock RNG anywhere, so a (spec, seed)
+  pair IS the workload, byte-for-byte, across machines and CI runs.
+
+- **`VirtualClock` + `WorkloadDriver`**: simulated time.  Decode steps and
+  prefill tokens cost fixed virtual durations; host-tier transfers occupy a
+  single modeled PCIe link (`TransferLedger.transfer_s`) that the engine
+  either overlaps with decode (`overlap=True`: IN_FLIGHT blocks complete at
+  the transfer deadline while resident requests keep decoding) or
+  serializes against (`overlap=False`: every transfer stalls the clock —
+  the PR 3 behavior, kept as the bit-identity oracle).  The driver submits
+  arrivals when the clock reaches them, steps the engine, and folds each
+  finished request into an `slo.RequestTiming` for `slo.build_report`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import zlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch import slo as slo_lib
+
+# ---------------------------------------------------------------------------
+# arrival-process registry
+# ---------------------------------------------------------------------------
+
+_ARRIVALS: Dict[str, Callable] = {}
+
+
+def register_arrival(name: str) -> Callable:
+  def deco(fn: Callable) -> Callable:
+    if name in _ARRIVALS and _ARRIVALS[name] is not fn:
+      raise ValueError(f"arrival process {name!r} already registered")
+    _ARRIVALS[name] = fn
+    return fn
+  return deco
+
+
+def get_arrival(name: str) -> Callable:
+  try:
+    return _ARRIVALS[name]
+  except KeyError:
+    raise KeyError(
+        f"unknown arrival process {name!r}; available: {arrival_names()}"
+    ) from None
+
+
+def arrival_names() -> Tuple[str, ...]:
+  return tuple(sorted(_ARRIVALS))
+
+
+@register_arrival("poisson")
+def poisson_arrivals(spec: "WorkloadSpec", rng: np.random.Generator
+                     ) -> np.ndarray:
+  """Memoryless arrivals: exponential interarrival gaps at `rate` req/s."""
+  gaps = rng.exponential(1.0 / spec.rate, size=spec.n_requests)
+  return np.cumsum(gaps)
+
+
+@register_arrival("bursty")
+def bursty_arrivals(spec: "WorkloadSpec", rng: np.random.Generator
+                    ) -> np.ndarray:
+  """Overdispersed arrivals: Gamma interarrival gaps with the same mean as
+  the Poisson process (`1/rate`) but cv^2 = `burstiness` (> 1): most gaps
+  are near zero (a burst), a few are long (the quiet tail).  burstiness=1
+  degenerates to Poisson."""
+  if spec.burstiness <= 0:
+    raise ValueError(f"burstiness must be > 0, got {spec.burstiness}")
+  shape = 1.0 / spec.burstiness
+  scale = spec.burstiness / spec.rate
+  gaps = rng.gamma(shape, scale, size=spec.n_requests)
+  return np.cumsum(gaps)
+
+
+@register_arrival("trace")
+def trace_arrivals(spec: "WorkloadSpec", rng: np.random.Generator
+                   ) -> np.ndarray:
+  """Replay absolute arrival times from `spec.trace_path` (see load_trace).
+  The file fixes `t` (and optionally per-request shapes); sampling for the
+  unfixed fields still comes from the seeded rng in generate()."""
+  del rng
+  events = load_trace(spec.trace_path)
+  return np.asarray([e["t"] for e in events], np.float64)
+
+
+def load_trace(path: Optional[str]) -> List[dict]:
+  """A trace file is JSON: either a list of events or {"events": [...]},
+  each event `{"t": seconds, ...}` with optional `tenant`, `prompt_len`,
+  `max_new_tokens`, and literal `prompt` (token list) overrides.  Events
+  are sorted by `t`; times must be non-negative."""
+  if not path:
+    raise ValueError("arrival='trace' requires trace_path")
+  with open(path) as f:
+    data = json.load(f)
+  events = data["events"] if isinstance(data, dict) else data
+  out = []
+  for e in events:
+    t = float(e["t"])
+    if t < 0:
+      raise ValueError(f"trace arrival time must be >= 0, got {t}")
+    out.append(dict(e, t=t))
+  out.sort(key=lambda e: e["t"])
+  return out
+
+
+# ---------------------------------------------------------------------------
+# workload specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+  """One traffic class: sampling weight, length distributions, SLO.
+
+  `shared_prefix_len > 0` gives every request from this tenant the same
+  leading tokens (drawn once from a stream seeded by (workload seed, crc32
+  of the tenant name) — stable across runs and across tenant-list order),
+  which is what drives the prefix-cache / COW sharing paths under load.
+  """
+  name: str = "default"
+  weight: float = 1.0
+  prompt_len: Tuple[int, int] = (16, 48)       # inclusive range
+  max_new_tokens: Tuple[int, int] = (4, 16)    # inclusive range
+  shared_prefix_len: int = 0
+  slo: slo_lib.SLOSpec = slo_lib.SLOSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+  """Everything that defines a workload; (spec, seed) fully determines the
+  request trace.  `fetch_fail_rate` is the fault-injection knob: the
+  probability each host-tier fetch attempt fails (engine retries with
+  bounded backoff; see `runtime.fault_tolerance.FetchFaultInjector`)."""
+  arrival: str = "poisson"
+  rate: float = 50.0                  # mean arrivals per virtual second
+  burstiness: float = 4.0             # cv^2 of bursty interarrivals
+  n_requests: int = 16
+  seed: int = 0
+  tenants: Tuple[TenantSpec, ...] = (TenantSpec(),)
+  trace_path: Optional[str] = None
+  fetch_fail_rate: float = 0.0
+  fetch_fail_seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadRequest:
+  """One generated request: when it arrives and what it asks for."""
+  index: int
+  arrival_s: float
+  tenant: str
+  tokens: Tuple[int, ...]
+  max_new_tokens: int
+  slo: slo_lib.SLOSpec
+
+  @property
+  def prompt_len(self) -> int:
+    return len(self.tokens)
+
+
+def _shared_prefix(spec: WorkloadSpec, tenant: TenantSpec, vocab_size: int
+                   ) -> np.ndarray:
+  """The tenant's common leading tokens.  Seeded by (workload seed, crc32
+  of the tenant name): stable across runs and independent of tenant-list
+  order (python's hash() is salted per process — useless here)."""
+  rng = np.random.default_rng(
+      (spec.seed, zlib.crc32(tenant.name.encode("utf-8"))))
+  return rng.integers(1, vocab_size, size=tenant.shared_prefix_len,
+                      dtype=np.int64)
+
+
+def generate(spec: WorkloadSpec, *, vocab_size: int, max_prompt_len: int,
+             max_total_len: int) -> List[WorkloadRequest]:
+  """Sample the full request trace for `spec`, clamped to engine capacity
+  (`max_prompt_len` = prompt_capacity, `max_total_len` = context_len).
+  One master rng seeded by `spec.seed` drives every draw in a fixed order,
+  so the trace is reproducible byte-for-byte."""
+  if spec.n_requests < 1:
+    raise ValueError(f"n_requests must be >= 1, got {spec.n_requests}")
+  if spec.rate <= 0:
+    raise ValueError(f"rate must be > 0, got {spec.rate}")
+  if not spec.tenants:
+    raise ValueError("workload needs at least one tenant")
+  rng = np.random.default_rng(spec.seed)
+  arrivals = get_arrival(spec.arrival)(spec, rng)
+  trace_events: List[dict] = []
+  if spec.arrival == "trace":
+    trace_events = load_trace(spec.trace_path)
+  n = len(arrivals) if spec.arrival == "trace" else spec.n_requests
+
+  tenants = {t.name: t for t in spec.tenants}
+  weights = np.asarray([t.weight for t in spec.tenants], np.float64)
+  if weights.sum() <= 0:
+    raise ValueError("tenant weights must sum to > 0")
+  weights = weights / weights.sum()
+  prefixes = {t.name: _shared_prefix(spec, t, vocab_size)
+              for t in spec.tenants if t.shared_prefix_len > 0}
+
+  out: List[WorkloadRequest] = []
+  for i in range(n):
+    event = trace_events[i] if trace_events else {}
+    if "tenant" in event:
+      tenant = tenants[event["tenant"]]
+    else:
+      tenant = spec.tenants[int(rng.choice(len(spec.tenants), p=weights))]
+    lo, hi = tenant.prompt_len
+    p_len = int(event.get("prompt_len", rng.integers(lo, hi + 1)))
+    p_len = max(1, min(p_len, max_prompt_len))
+    lo, hi = tenant.max_new_tokens
+    gen = int(event.get("max_new_tokens", rng.integers(lo, hi + 1)))
+    gen = max(1, min(gen, max_total_len - p_len - 1))
+    if "prompt" in event:
+      toks = np.asarray(event["prompt"], np.int64)[:p_len]
+    else:
+      toks = rng.integers(1, vocab_size, size=p_len, dtype=np.int64)
+      shared = prefixes.get(tenant.name)
+      if shared is not None:
+        k = min(len(shared), p_len)
+        toks[:k] = shared[:k]
+    out.append(WorkloadRequest(
+        index=i, arrival_s=float(arrivals[i]), tenant=tenant.name,
+        tokens=tuple(int(x) for x in toks), max_new_tokens=gen,
+        slo=tenant.slo))
+  out.sort(key=lambda w: (w.arrival_s, w.index))
+  return out
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class VirtualClock:
+  """Deterministic simulated time with one modeled PCIe link.
+
+  Compute (decode steps, prefill tokens) advances `now` by fixed budgets.
+  Transfers occupy the link back-to-back from `link_free_at`; with
+  `overlap=True` a transfer's completion is a *deadline* the engine waits
+  on only when it needs the data (decode keeps running meanwhile), with
+  `overlap=False` every transfer stalls the clock on the spot — the
+  serialized fallback whose tokens the overlapped mode must match bit for
+  bit.  The four accumulators are the stall-attribution the SLO report
+  breaks a run's makespan into.
+  """
+  decode_step_s: float = 2e-3      # virtual cost of one batched decode step
+  prefill_token_s: float = 2e-5    # virtual cost per prefilled prompt token
+  overlap: bool = True
+  now: float = 0.0
+  link_free_at: float = 0.0
+  compute_s: float = 0.0           # decode + prefill time
+  transfer_stall_s: float = 0.0    # blocked waiting on the link
+  idle_s: float = 0.0              # no work due (waiting for arrivals)
+  link_busy_s: float = 0.0         # link occupancy (overlapped or not)
+
+  def advance(self, dt: float) -> None:
+    """Spend `dt` seconds of compute."""
+    if dt < 0:
+      raise ValueError(f"cannot advance by {dt}")
+    self.now += dt
+    self.compute_s += dt
+
+  def start_transfer(self, duration_s: float) -> float:
+    """Queue a transfer on the link; returns its completion time.  The link
+    is serial: a transfer starts when the previous one drains.  In
+    serialized mode the clock stalls here; in overlapped mode the caller
+    holds the returned deadline and stalls only if it needs the data."""
+    if duration_s < 0:
+      raise ValueError(f"negative transfer duration {duration_s}")
+    start = max(self.now, self.link_free_at)
+    ready = start + duration_s
+    self.link_free_at = ready
+    self.link_busy_s += duration_s
+    if not self.overlap:
+      self.stall_until(ready)
+    return ready
+
+  def stall_until(self, t: float) -> None:
+    """Block on a transfer deadline (attributed as transfer stall)."""
+    if t > self.now:
+      self.transfer_stall_s += t - self.now
+      self.now = t
+
+  def idle_until(self, t: float) -> None:
+    """Sleep until the next arrival (attributed as idle, not stall)."""
+    if t > self.now:
+      self.idle_s += t - self.now
+      self.now = t
+
+  def as_dict(self) -> dict:
+    return dict(now=self.now, compute_s=self.compute_s,
+                transfer_stall_s=self.transfer_stall_s, idle_s=self.idle_s,
+                link_busy_s=self.link_busy_s, overlap=self.overlap)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+  """One driven run: the SLO report plus everything needed to compare two
+  runs (per-request greedy token streams keyed by workload index)."""
+  report: dict
+  records: List[slo_lib.RequestTiming]
+  token_streams: Dict[int, Tuple[int, ...]]
+  clock: VirtualClock
+  failed_indices: Tuple[int, ...] = ()
+
+
+class WorkloadDriver:
+  """Feeds a generated trace into a `ServeEngine` under its virtual clock.
+
+  The engine must have been built with `clock=` (the driver refuses a
+  wall-clock engine: without a clock there is no "when" for arrivals to
+  happen at).  The loop: submit every request whose arrival time has come,
+  idle the clock forward when the engine has nothing to do, step, and fold
+  finished requests into `slo.RequestTiming` records.
+  """
+
+  def __init__(self, engine, spec: WorkloadSpec):
+    if getattr(engine, "clock", None) is None:
+      raise ValueError(
+          "WorkloadDriver needs an engine built with clock=VirtualClock(...)")
+    self.engine = engine
+    self.spec = spec
+    self.clock: VirtualClock = engine.clock
+    self.requests = generate(
+        spec, vocab_size=engine.cfg.vocab_size,
+        max_prompt_len=engine.prompt_capacity,
+        max_total_len=engine.context_len)
+
+  def run(self, max_steps: int = 100_000) -> WorkloadResult:
+    eng, clock = self.engine, self.clock
+    pending = self.requests
+    timings: Dict[int, slo_lib.RequestTiming] = {}
+    rid_to_index: Dict[int, int] = {}
+    records: List[slo_lib.RequestTiming] = []
+    token_streams: Dict[int, Tuple[int, ...]] = {}
+    failed: List[int] = []
+    i = 0
+    steps = 0
+    while i < len(pending) or eng.has_work:
+      while i < len(pending) and pending[i].arrival_s <= clock.now + 1e-12:
+        w = pending[i]
+        h = eng.submit(list(w.tokens), max_new_tokens=w.max_new_tokens)
+        h.submit_s = w.arrival_s
+        rid_to_index[h.rid] = w.index
+        timings[h.rid] = slo_lib.RequestTiming(
+            rid=h.rid, tenant=w.tenant, arrival_s=w.arrival_s,
+            deadline_s=w.slo.deadline_s(w.arrival_s, w.max_new_tokens),
+            max_new_tokens=w.max_new_tokens)
+        i += 1
+      if not eng.has_work:
+        clock.idle_until(pending[i].arrival_s)
+        continue
+      for h in eng.step():
+        t = timings[h.rid]
+        t.n_tokens = len(h.tokens)
+        t.admit_s = h.admit_s
+        t.first_token_s = h.first_token_s
+        t.finish_s = h.finish_s
+        t.failed = h.failed
+        records.append(t)
+        idx = rid_to_index[h.rid]
+        token_streams[idx] = tuple(h.tokens)
+        if h.failed:
+          failed.append(idx)
+      steps += 1
+      if steps > max_steps:
+        raise RuntimeError(
+            f"workload did not drain within {max_steps} steps "
+            f"({len(records)}/{len(pending)} finished)")
+    records.sort(key=lambda t: rid_to_index[t.rid])
+    report = slo_lib.build_report(records, clock)
+    return WorkloadResult(report=report, records=records,
+                          token_streams=token_streams, clock=clock,
+                          failed_indices=tuple(sorted(failed)))

@@ -14,6 +14,7 @@ on this single-process container.
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -34,6 +35,40 @@ class FailureInjector:
     if step in self.fail_at and step not in self._fired:
       self._fired.add(step)
       raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class FetchFaultInjector:
+  """Seeded host-tier fetch faults for the serve engine's retry path.
+
+  The workload harness injects these to prove the engine survives a failed
+  spill/fetch transfer: `check_fetch` raises `SimulatedFailure` with
+  probability `fail_rate` per attempt, from a private seeded stream —
+  deterministic across runs, independent of traffic order (each (rid,
+  attempt) pair draws from a stream derived from the base seed, so two runs
+  that fetch in different orders still fault the same attempts).  An
+  optional `max_failures` bounds total injections so a high rate cannot
+  starve a small workload forever.
+  """
+  fail_rate: float = 0.0
+  seed: int = 0
+  max_failures: Optional[int] = None
+  injected: int = 0
+
+  def check_fetch(self, rid: int, attempt: int = 0) -> None:
+    if self.fail_rate <= 0.0:
+      return
+    if self.max_failures is not None and self.injected >= self.max_failures:
+      return
+    # integer seed mix (tuple seeding is hash-based and deprecated); the
+    # multipliers are primes large enough that (seed, rid, attempt) triples
+    # from any realistic run never collide
+    key = (self.seed * 1_000_003 + rid) * 1_000_003 + attempt
+    draw = random.Random(key).random()
+    if draw < self.fail_rate:
+      self.injected += 1
+      raise SimulatedFailure(
+          f"injected fetch fault for request {rid} (attempt {attempt})")
 
 
 @dataclasses.dataclass

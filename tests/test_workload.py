@@ -1,0 +1,449 @@
+"""Workload harness + async engine loop: seeded arrival processes, tenant
+mixes, the virtual-clock driver, SLO report math, overlap-vs-serialized
+token identity, IN_FLIGHT-never-decoded, and fault-injected fetch retries."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import tiers
+from repro.launch import slo as slo_lib
+from repro.launch import workload as wl
+from repro.launch.engine import ServeEngine
+from repro.runtime.fault_tolerance import FetchFaultInjector
+
+from test_tiers import _pool_drained
+
+
+def _cfg(policy="exact", dtype="float32", **kw):
+  return dataclasses.replace(get_arch("tinyllama-1.1b", reduced=True),
+                             cache_policy=policy, dtype_str=dtype, **kw)
+
+
+# Pressure sizings known to force spills under the tiered pool (mirrors
+# benchmarks/run.py::run_workload; pq needs prompt_capacity >= sink+recent
+# and longer prompts because its streaming window retires blocks).
+_SIZING = {
+    "exact": dict(context_len=64, prompt_capacity=32, num_blocks=5,
+                  host_blocks=24, prompt_len=(20, 30), gen=(10, 16)),
+    "pq": dict(context_len=96, prompt_capacity=64, num_blocks=7,
+               host_blocks=32, prompt_len=(42, 58), gen=(12, 24)),
+}
+
+
+def _spec(policy, arrival="poisson", n=8, seed=3, **kw):
+  sz = _SIZING[policy]
+  tenant = wl.TenantSpec(prompt_len=sz["prompt_len"],
+                         max_new_tokens=sz["gen"])
+  return wl.WorkloadSpec(arrival=arrival, rate=400.0, burstiness=6.0,
+                         n_requests=n, seed=seed, tenants=(tenant,), **kw)
+
+
+def _tiered(policy, params=None, clock=None, dtype=None, **kw):
+  sz = _SIZING[policy]
+  cfg = _cfg(policy, dtype=dtype or ("bfloat16" if policy == "pq"
+                                     else "float32"))
+  eng = ServeEngine(cfg, context_len=sz["context_len"], max_batch=2,
+                    prompt_capacity=sz["prompt_capacity"], params=params,
+                    cache_layout="tiered", scheduler="tiered",
+                    num_blocks=sz["num_blocks"],
+                    host_blocks=sz["host_blocks"], clock=clock, **kw)
+  # slow the modeled link so transfer time is visible against the decode
+  # budget (reduced-config payloads drain in microseconds at 16 GB/s)
+  eng.layout.ledger.pcie_gbps = 0.002
+  return eng
+
+
+def _paged(policy, params=None, clock=None):
+  sz = _SIZING[policy]
+  cfg = _cfg(policy, dtype="bfloat16" if policy == "pq" else "float32")
+  return ServeEngine(cfg, context_len=sz["context_len"], max_batch=2,
+                     prompt_capacity=sz["prompt_capacity"], params=params,
+                     cache_layout="paged", scheduler="paged",
+                     num_blocks=2 * (sz["context_len"] // 16), clock=clock)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_arrival_registry_and_determinism():
+  assert set(wl.arrival_names()) >= {"poisson", "bursty", "trace"}
+  with pytest.raises(KeyError):
+    wl.get_arrival("nope")
+  spec = wl.WorkloadSpec(n_requests=512, rate=50.0, seed=7)
+  a1 = wl.poisson_arrivals(spec, np.random.default_rng(7))
+  a2 = wl.poisson_arrivals(spec, np.random.default_rng(7))
+  a3 = wl.poisson_arrivals(spec, np.random.default_rng(8))
+  np.testing.assert_array_equal(a1, a2)
+  assert not np.array_equal(a1, a3)
+  assert np.all(np.diff(a1) >= 0)       # cumulative times are monotone
+
+
+def test_bursty_same_mean_higher_variance():
+  spec = wl.WorkloadSpec(n_requests=4096, rate=50.0, burstiness=6.0, seed=1)
+  pois = np.diff(wl.poisson_arrivals(spec, np.random.default_rng(1)),
+                 prepend=0.0)
+  burst = np.diff(wl.bursty_arrivals(spec, np.random.default_rng(1)),
+                  prepend=0.0)
+  assert burst.mean() == pytest.approx(1.0 / 50.0, rel=0.1)
+  assert pois.mean() == pytest.approx(1.0 / 50.0, rel=0.1)
+  # cv^2 = burstiness for Gamma gaps vs 1 for exponential
+  cv2 = burst.var() / burst.mean() ** 2
+  assert cv2 > 3.0, cv2
+  with pytest.raises(ValueError):
+    wl.bursty_arrivals(dataclasses.replace(spec, burstiness=0.0),
+                       np.random.default_rng(0))
+
+
+def test_trace_replay_with_overrides(tmp_path):
+  trace = [
+      {"t": 0.5, "tenant": "b", "prompt_len": 9, "max_new_tokens": 3},
+      {"t": 0.0, "prompt": [5, 6, 7], "prompt_len": 3, "max_new_tokens": 2},
+      {"t": 1.25},
+  ]
+  path = tmp_path / "trace.json"
+  path.write_text(json.dumps({"events": trace}))
+  spec = wl.WorkloadSpec(
+      arrival="trace", trace_path=str(path), seed=0,
+      tenants=(wl.TenantSpec(name="a", prompt_len=(4, 6)),
+               wl.TenantSpec(name="b", prompt_len=(4, 6))))
+  reqs = wl.generate(spec, vocab_size=100, max_prompt_len=32,
+                     max_total_len=64)
+  assert [r.arrival_s for r in reqs] == [0.0, 0.5, 1.25]
+  assert reqs[0].tokens == (5, 6, 7) and reqs[0].max_new_tokens == 2
+  assert reqs[1].tenant == "b" and reqs[1].prompt_len == 9
+  assert reqs[1].max_new_tokens == 3
+  assert 4 <= reqs[2].prompt_len <= 6    # unfixed fields stay sampled
+  with pytest.raises(ValueError):
+    wl.load_trace(None)
+  bad = tmp_path / "bad.json"
+  bad.write_text(json.dumps([{"t": -1.0}]))
+  with pytest.raises(ValueError):
+    wl.load_trace(str(bad))
+
+
+def test_generate_validation_and_clamps():
+  with pytest.raises(ValueError):
+    wl.generate(wl.WorkloadSpec(n_requests=0), vocab_size=10,
+                max_prompt_len=8, max_total_len=16)
+  with pytest.raises(ValueError):
+    wl.generate(wl.WorkloadSpec(rate=0.0), vocab_size=10,
+                max_prompt_len=8, max_total_len=16)
+  with pytest.raises(ValueError):
+    wl.generate(wl.WorkloadSpec(tenants=()), vocab_size=10,
+                max_prompt_len=8, max_total_len=16)
+  spec = wl.WorkloadSpec(
+      n_requests=32, seed=2,
+      tenants=(wl.TenantSpec(prompt_len=(50, 90),
+                             max_new_tokens=(30, 60)),))
+  reqs = wl.generate(spec, vocab_size=100, max_prompt_len=24,
+                     max_total_len=32)
+  for r in reqs:
+    assert r.prompt_len <= 24
+    assert r.prompt_len + r.max_new_tokens < 32   # total fits the context
+
+
+def test_multitenant_shared_prefix_and_determinism():
+  tenants = (wl.TenantSpec(name="shared", weight=2.0, prompt_len=(12, 20),
+                           shared_prefix_len=8),
+             wl.TenantSpec(name="cold", weight=1.0, prompt_len=(12, 20)))
+  spec = wl.WorkloadSpec(n_requests=48, seed=5, tenants=tenants)
+  reqs = wl.generate(spec, vocab_size=500, max_prompt_len=32,
+                     max_total_len=64)
+  again = wl.generate(spec, vocab_size=500, max_prompt_len=32,
+                      max_total_len=64)
+  assert reqs == again                    # (spec, seed) IS the workload
+  shared = [r for r in reqs if r.tenant == "shared"]
+  cold = [r for r in reqs if r.tenant == "cold"]
+  assert shared and cold                  # both tenants actually sampled
+  prefix = shared[0].tokens[:8]
+  assert all(r.tokens[:8] == prefix for r in shared)
+  assert not all(r.tokens[:8] == prefix for r in cold)
+  # weighted mix: the weight-2 tenant dominates
+  assert len(shared) > len(cold)
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_overlap_vs_serialized_accounting():
+  ovl = wl.VirtualClock(overlap=True)
+  ready = ovl.start_transfer(0.1)
+  assert ready == pytest.approx(0.1)
+  assert ovl.now == 0.0                   # overlapped: deadline, no stall
+  ovl.advance(0.04)
+  ovl.stall_until(ready)                  # data needed now -> partial stall
+  assert ovl.now == pytest.approx(0.1)
+  assert ovl.transfer_stall_s == pytest.approx(0.06)
+  assert ovl.compute_s == pytest.approx(0.04)
+  # the link is serial: a second transfer queues behind the first
+  assert ovl.start_transfer(0.2) == pytest.approx(0.3)
+  assert ovl.link_busy_s == pytest.approx(0.3)
+
+  ser = wl.VirtualClock(overlap=False)
+  ser.start_transfer(0.1)
+  assert ser.now == pytest.approx(0.1)    # serialized: stalls on the spot
+  assert ser.transfer_stall_s == pytest.approx(0.1)
+  ser.idle_until(0.5)
+  assert ser.idle_s == pytest.approx(0.4)
+  with pytest.raises(ValueError):
+    ser.advance(-1.0)
+  with pytest.raises(ValueError):
+    ser.start_transfer(-1.0)
+  assert json.dumps(ser.as_dict())        # record-family serializable
+
+
+# ---------------------------------------------------------------------------
+# SLO report math
+# ---------------------------------------------------------------------------
+
+def test_slo_report_math():
+  slo = slo_lib.SLOSpec(ttft_s=0.5, tpot_s=0.05)
+  assert slo.deadline_s(1.0, 10) == pytest.approx(2.0)
+  good = slo_lib.RequestTiming(rid=0, tenant="a", arrival_s=0.0,
+                               deadline_s=1.0, max_new_tokens=4, n_tokens=5,
+                               admit_s=0.1, first_token_s=0.2, finish_s=0.9)
+  late = slo_lib.RequestTiming(rid=1, tenant="a", arrival_s=0.0,
+                               deadline_s=1.0, max_new_tokens=4, n_tokens=5,
+                               admit_s=0.3, first_token_s=0.6, finish_s=1.5)
+  dead = slo_lib.RequestTiming(rid=2, tenant="b", arrival_s=0.0,
+                               deadline_s=1.0, max_new_tokens=4, n_tokens=2,
+                               admit_s=0.1, first_token_s=0.2, finish_s=0.5,
+                               failed=True)
+  assert good.ttft_s == pytest.approx(0.2)
+  assert good.tpot_s == pytest.approx((0.9 - 0.2) / 4)
+  assert good.queue_s == pytest.approx(0.1)
+  assert good.met_deadline and good.good_tokens == 5
+  assert not late.met_deadline and late.good_tokens == 0
+  assert not dead.met_deadline            # failed can never meet deadline
+  one_tok = slo_lib.RequestTiming(rid=3, tenant="a", arrival_s=0.0,
+                                  deadline_s=1.0, max_new_tokens=1,
+                                  n_tokens=1, first_token_s=0.2,
+                                  finish_s=0.2)
+  assert one_tok.tpot_s is None           # undefined for 1-token runs
+
+  rep = slo_lib.build_report([good, late, dead])
+  assert rep["requests"] == 3 and rep["failed"] == 1
+  assert rep["tokens_total"] == 12 and rep["tokens_within_deadline"] == 5
+  assert rep["goodput_frac"] == pytest.approx(5 / 12, abs=1e-4)
+  assert rep["deadline_met_frac"] == pytest.approx(1 / 3, abs=1e-4)
+  assert rep["ttft"]["n"] == 3 and rep["ttft"]["p50_s"] is not None
+  assert set(rep["per_tenant"]) == {"a", "b"}
+  assert rep["per_tenant"]["b"]["goodput_frac"] == 0.0
+  assert "stall" not in rep               # no clock given
+
+  clock = wl.VirtualClock(now=2.0, compute_s=1.5, transfer_stall_s=0.3,
+                          idle_s=0.2)
+  rep2 = slo_lib.build_report([good], clock)
+  assert rep2["goodput_tok_s"] == pytest.approx(5 / 2.0)
+  assert rep2["stall"]["transfer_stall_frac"] == pytest.approx(0.15)
+  assert slo_lib.percentiles_s([]) == dict(n=0, p50_s=None, p99_s=None,
+                                           mean_s=None)
+  assert "goodput" in slo_lib.summary(rep)
+  assert json.dumps(rep2)                 # record-family serializable
+
+
+# ---------------------------------------------------------------------------
+# driver end-to-end
+# ---------------------------------------------------------------------------
+
+def test_driver_requires_clock():
+  eng = ServeEngine(_cfg(), context_len=64, max_batch=1, prompt_capacity=16)
+  with pytest.raises(ValueError):
+    wl.WorkloadDriver(eng, _spec("exact"))
+
+
+def test_driver_end_to_end_deterministic():
+  spec = _spec("exact", arrival="bursty", n=8)
+  base = _tiered("exact", clock=wl.VirtualClock())
+  res1 = wl.WorkloadDriver(base, spec).run()
+  eng2 = _tiered("exact", params=base.params, clock=wl.VirtualClock())
+  res2 = wl.WorkloadDriver(eng2, spec).run()
+  assert res1.report["requests"] == 8 and res1.report["failed"] == 0
+  assert res1.report["goodput_frac"] > 0
+  assert res1.report["ttft"]["p99_s"] is not None
+  assert res1.report["tpot"]["p99_s"] is not None
+  assert base.stats.spills >= 1           # pressure config actually spilled
+  assert res1.report == res2.report       # same seed -> identical report
+  assert res1.token_streams == res2.token_streams
+  _pool_drained(base.layout)
+  _pool_drained(eng2.layout)
+
+
+# ---------------------------------------------------------------------------
+# overlap on/off token identity (the tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["paged", "tiered"])
+@pytest.mark.parametrize("policy", ["exact", "pq"])
+def test_overlap_matches_serialized_and_wallclock_oracle(layout, policy):
+  """Greedy tokens are bit-identical with the async spill/fetch stage on
+  (overlap=True), off (serialized fallback), and absent (wall-clock
+  engine fed the same trace) — for both layouts and both cache policies."""
+  n = 6
+  spec = _spec(policy, arrival="poisson", n=n)
+  build = _tiered if layout == "tiered" else _paged
+  base = build(policy, clock=wl.VirtualClock(overlap=True))
+  res_o = wl.WorkloadDriver(base, spec).run()
+  ser = build(policy, params=base.params,
+              clock=wl.VirtualClock(overlap=False))
+  res_s = wl.WorkloadDriver(ser, spec).run()
+  assert res_o.token_streams == res_s.token_streams
+  assert len(res_o.token_streams) == n
+
+  # wall-clock oracle: same generated requests, submitted upfront
+  oracle = build(policy, params=base.params)
+  reqs = wl.generate(spec, vocab_size=base.cfg.vocab_size,
+                     max_prompt_len=base.prompt_capacity,
+                     max_total_len=base.context_len)
+  handles = {w.index: oracle.submit(list(w.tokens),
+                                    max_new_tokens=w.max_new_tokens)
+             for w in reqs}
+  oracle.run_to_completion()
+  assert {i: tuple(h.tokens) for i, h in handles.items()} \
+      == res_o.token_streams
+
+  if layout == "tiered":
+    assert base.stats.spills >= 1, "trace never exercised the spill path"
+    # overlap hides transfer time the serialized fallback eats as stall
+    assert base.clock.transfer_stall_s <= ser.clock.transfer_stall_s
+    _pool_drained(base.layout)
+    _pool_drained(ser.layout)
+
+
+def test_overlap_reduces_transfer_stall():
+  """On a spill-heavy bursty trace the double-buffered fetch stage must
+  strictly beat the serialized fallback's transfer-stall attribution."""
+  spec = _spec("exact", arrival="bursty", n=10)
+  base = _tiered("exact", clock=wl.VirtualClock(overlap=True))
+  res_o = wl.WorkloadDriver(base, spec).run()
+  ser = _tiered("exact", params=base.params,
+                clock=wl.VirtualClock(overlap=False))
+  res_s = wl.WorkloadDriver(ser, spec).run()
+  assert res_o.token_streams == res_s.token_streams
+  assert base.stats.spills >= 1 and base.stats.prefetches >= 1
+  assert ser.clock.transfer_stall_s > 0
+  assert base.clock.transfer_stall_s < ser.clock.transfer_stall_s
+  ratio = base.clock.transfer_stall_s / ser.clock.transfer_stall_s
+  assert ratio < 1.0, ratio
+
+
+def test_in_flight_blocks_never_decoded():
+  """Step the overlapped engine by hand under randomized spill traffic: a
+  rid with an IN_FLIGHT transfer is never in an active slot, and active
+  slots' tiered records are never IN_FLIGHT (decode additionally asserts
+  BLOCK_RESIDENT on every gathered block inside the layout)."""
+  spec = _spec("exact", arrival="bursty", n=10, seed=11)
+  eng = _tiered("exact", clock=wl.VirtualClock(overlap=True))
+  reqs = wl.generate(spec, vocab_size=eng.cfg.vocab_size,
+                     max_prompt_len=eng.prompt_capacity,
+                     max_total_len=eng.context_len)
+  for w in reqs:
+    eng.submit(list(w.tokens), max_new_tokens=w.max_new_tokens)
+  saw_in_flight = False
+  for _ in range(10_000):
+    if not eng.has_work:
+      break
+    eng.step()
+    active = {req.rid for _, req in eng.active_requests}
+    in_flight = set(eng.transfers_in_flight)
+    saw_in_flight = saw_in_flight or bool(in_flight)
+    assert not (active & in_flight), (active, in_flight)
+    for rid in active:
+      rec = eng.layout.records.get(rid)
+      assert rec is None or rec.state != tiers.BLOCK_IN_FLIGHT, rid
+  assert not eng.has_work
+  assert saw_in_flight, "no transfer was ever in flight — test is vacuous"
+  _pool_drained(eng.layout)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: bounded retries, drops, no leaks
+# ---------------------------------------------------------------------------
+
+def test_fetch_fault_injector_determinism():
+  inj = FetchFaultInjector(fail_rate=0.5, seed=3)
+  fates = [True, True]
+  for i, _ in enumerate(fates):
+    try:
+      inj.check_fetch(rid=7, attempt=i)
+      fates[i] = False
+    except Exception:
+      pass
+  inj2 = FetchFaultInjector(fail_rate=0.5, seed=3)
+  for i, want in enumerate(fates):        # (seed, rid, attempt) keyed draw
+    try:
+      inj2.check_fetch(rid=7, attempt=i)
+      assert not want
+    except Exception:
+      assert want
+  none = FetchFaultInjector(fail_rate=0.0, seed=3)
+  none.check_fetch(rid=7, attempt=0)      # never raises at rate 0
+
+
+def test_fault_injected_retries_keep_tokens_identical():
+  """Transient fetch faults requeue the request (bounded retries); every
+  surviving request's greedy tokens match the fault-free run."""
+  spec = _spec("exact", arrival="bursty", n=10)
+  clean = _tiered("exact", clock=wl.VirtualClock())
+  res_clean = wl.WorkloadDriver(clean, spec).run()
+  faulty = _tiered("exact", params=clean.params, clock=wl.VirtualClock(),
+                   fault_injector=FetchFaultInjector(fail_rate=0.3, seed=5))
+  res_fault = wl.WorkloadDriver(faulty, spec).run()
+  assert faulty.stats.fetch_failures >= 1, "fault injection never fired"
+  for idx, toks in res_fault.token_streams.items():
+    if idx in res_fault.failed_indices:
+      continue
+    assert toks == res_clean.token_streams[idx], idx
+  assert res_fault.report["failed"] == len(res_fault.failed_indices)
+  _pool_drained(faulty.layout)
+
+
+def test_fetch_retry_exhaustion_drops_request_cleanly():
+  """At fail_rate=1.0 every fetch attempt fails: spilled requests exhaust
+  max_fetch_retries, are dropped as failed (host blocks reclaimed), and
+  the rest of the workload still completes with a clean pool."""
+  spec = _spec("exact", arrival="bursty", n=10)
+  eng = _tiered("exact", clock=wl.VirtualClock(),
+                fault_injector=FetchFaultInjector(fail_rate=1.0, seed=0),
+                max_fetch_retries=2)
+  res = wl.WorkloadDriver(eng, spec).run()
+  assert eng.stats.spills >= 1
+  assert res.report["failed"] >= 1
+  assert eng.stats.failed_requests == res.report["failed"]
+  assert eng.stats.fetch_failures >= 3    # retries actually happened
+  assert eng.stats.fetch_aborts == eng.layout.ledger.fetch_aborts
+  done = [i for i in res.token_streams if i not in res.failed_indices]
+  assert done, "every request failed — workload sizing regressed"
+  assert res.report["goodput_frac"] >= 0.0
+  _pool_drained(eng.layout)               # dropped requests leak nothing
+
+
+# ---------------------------------------------------------------------------
+# stats snapshot + queue gauges
+# ---------------------------------------------------------------------------
+
+def test_stats_as_dict_snapshots_without_mutating():
+  spec = _spec("exact", n=6)
+  eng = _tiered("exact", clock=wl.VirtualClock())
+  wl.WorkloadDriver(eng, spec).run()
+  before_depth = list(eng.stats.queue_depth_samples)
+  before_wait = list(eng.stats.queue_wait_steps)
+  d1 = eng.stats.as_dict()
+  d2 = eng.stats.as_dict()
+  assert d1 == d2                         # snapshot, not drain
+  assert list(eng.stats.queue_depth_samples) == before_depth
+  assert list(eng.stats.queue_wait_steps) == before_wait
+  assert json.dumps(d1)                   # deques excluded -> serializable
+  q = d1["queue"]
+  assert q["depth_samples"] == len(before_depth) > 0
+  assert q["depth_max"] >= q["depth_mean"] >= 0
+  assert q["wait_steps_max"] >= q["wait_steps_mean"] >= 0
+  assert d1["virtual_s"] == pytest.approx(eng.clock.now)
+  assert d1["compute_s"] == pytest.approx(eng.clock.compute_s)
+  gauges = eng.stats.queue_gauges()
+  assert gauges["depth_now"] == 0         # drained
