@@ -98,6 +98,37 @@ def _stall_ratio(run: dict, policy: str):
   return _workload_cell(run, policy).get("transfer_stall_ratio")
 
 
+def _mesh_cell(run: dict, policy: str, size: int) -> dict:
+  """One sharded-serving cell; {} on records predating PR 7."""
+  pols = (run.get("mesh") or {}).get("policies", {})
+  return pols.get(policy, {}).get("mesh", {}).get(str(size), {})
+
+
+def _mesh_toks(run: dict, policy: str, size: int):
+  return _mesh_cell(run, policy, size).get("tok_per_s")
+
+
+def _mesh_scale(run: dict, policy: str, size: int):
+  """tok/s at mesh=size relative to mesh=1 (host-device CPU meshes measure
+  collective overhead, not speedup); None pre-PR7."""
+  base = _mesh_toks(run, policy, 1)
+  at = _mesh_toks(run, policy, size)
+  if not base or at is None:
+    return None
+  return at / base
+
+
+def _mesh_bytes_frac(run: dict, policy: str, size: int):
+  """Per-shard pool bytes at mesh=size as a fraction of the total pool
+  (heads mode: ~1/size, the capacity-wall win); None pre-PR7."""
+  cell = _mesh_cell(run, policy, size)
+  total = cell.get("total_bytes")
+  per = cell.get("bytes_per_shard")
+  if not total or per is None:
+    return None
+  return per / total
+
+
 def render_terminal(runs: list) -> None:
   def fmt(v, pat="{:8.1f}", blank="       —"):
     return blank if v is None else pat.format(v)
@@ -105,7 +136,7 @@ def render_terminal(runs: list) -> None:
   print(f"{'run':>3} {'sha':>8} {'timestamp':>20} {'pq tok/s':>9} "
         f"{'exact tok/s':>11} {'spill pq/raw':>12} {'prefix saved':>12} "
         f"{'hit(pq)':>8} {'p99(pq) ms':>10} {'goodput(pq)':>11} "
-        f"{'ttft p99 s':>10} {'stall o/s':>9}")
+        f"{'ttft p99 s':>10} {'stall o/s':>9} {'mesh x4(pq)':>11}")
   for i, run in enumerate(runs):
     print(f"{i:>3} {run.get('git_sha', '?'):>8} "
           f"{run.get('timestamp', '?'):>20} "
@@ -117,7 +148,8 @@ def render_terminal(runs: list) -> None:
           f"{fmt(_decode_p99(run, 'pq'), '{:10.2f}', '         —')} "
           f"{fmt(_goodput(run, 'pq'), '{:11.2%}', '          —')} "
           f"{fmt(_ttft_p99(run, 'pq'), '{:10.4f}', '         —')} "
-          f"{fmt(_stall_ratio(run, 'pq'), '{:9.3f}', '        —')}")
+          f"{fmt(_stall_ratio(run, 'pq'), '{:9.3f}', '        —')} "
+          f"{fmt(_mesh_scale(run, 'pq', 4), '{:11.3f}', '          —')}")
   print()
   for label, series in (
       ("pq tok/s      ", [_policy_toks(r, "pq") for r in runs]),
@@ -130,6 +162,9 @@ def render_terminal(runs: list) -> None:
       ("goodput exact ", [_goodput(r, "exact") for r in runs]),
       ("ttft p99 s pq ", [_ttft_p99(r, "pq") for r in runs]),
       ("stall o/s pq  ", [_stall_ratio(r, "pq") for r in runs]),
+      ("mesh x2 pq    ", [_mesh_scale(r, "pq", 2) for r in runs]),
+      ("mesh x4 pq    ", [_mesh_scale(r, "pq", 4) for r in runs]),
+      ("shard B x4 pq ", [_mesh_bytes_frac(r, "pq", 4) for r in runs]),
   ):
     vals = [v for v in series if v is not None]
     if vals:
@@ -151,7 +186,7 @@ def render_png(runs: list, path: str) -> bool:
           "the dashboard)")
     return False
   xs = list(range(len(runs)))
-  fig, axes = plt.subplots(5, 1, figsize=(8, 12), sharex=True)
+  fig, axes = plt.subplots(6, 1, figsize=(8, 14), sharex=True)
   axes[0].plot(xs, [_policy_toks(r, "pq") for r in runs], marker="o",
                label="pq")
   axes[0].plot(xs, [_policy_toks(r, "exact") for r in runs], marker="s",
@@ -185,8 +220,19 @@ def render_png(runs: list, path: str) -> bool:
                color="tab:red", label="pq stall overlap/serial")
   axes[4].axhline(1.0, ls="--", lw=1, color="gray")
   axes[4].set_ylabel("workload SLO")
-  axes[4].set_xlabel("run")
   axes[4].legend(loc="best")
+  # sharded serving: tok/s vs mesh size relative to mesh=1 plus the
+  # per-shard pool-byte fraction (records before PR 7 plot as gaps)
+  axes[5].plot(xs, [_mesh_scale(r, "pq", 2) for r in runs], marker="o",
+               color="tab:blue", label="pq tok/s x2 / x1")
+  axes[5].plot(xs, [_mesh_scale(r, "pq", 4) for r in runs], marker="s",
+               color="tab:purple", label="pq tok/s x4 / x1")
+  axes[5].plot(xs, [_mesh_bytes_frac(r, "pq", 4) for r in runs], marker="^",
+               color="tab:green", label="pq pool B/shard x4 (frac)")
+  axes[5].axhline(0.25, ls="--", lw=1, color="gray")
+  axes[5].set_ylabel("mesh scaling")
+  axes[5].set_xlabel("run")
+  axes[5].legend(loc="best")
   fig.tight_layout()
   fig.savefig(path, dpi=120)
   plt.close(fig)

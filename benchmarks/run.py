@@ -390,6 +390,97 @@ def run_workload(arch: str = "tinyllama-1.1b", n_requests: int = 12,
   return out
 
 
+# One mesh cell, run in a fresh interpreter: the bench process's jax is
+# already initialized with a single CPU device, and
+# --xla_force_host_platform_device_count only takes effect before the first
+# jax import — so every cell (mesh=1 included, same numerics baseline) is a
+# subprocess with the flag in its environment.  Prints one JSON line.
+_MESH_PROBE = r'''
+import dataclasses, json, sys
+import jax
+from repro.common.timing import Stopwatch
+from repro.configs import get_arch
+from repro.launch.engine import ServeEngine
+
+arch, policy, mesh_model = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cfg = dataclasses.replace(
+    get_arch(arch, reduced=True), cache_policy=policy, dtype_str="bfloat16",
+    cache_layout="paged", scheduler="paged", kv_block_size=16,
+    # every probed mesh size must divide the kv heads for heads-mode
+    # identity; the reduced configs ship 2 kv heads, so widen to 4x4 (g=1)
+    n_heads=4, n_kv_heads=4)
+eng = ServeEngine(cfg, context_len=48, max_batch=2, prompt_capacity=32,
+                  mesh_model=mesh_model)
+eng.submit([1] * 8, max_new_tokens=2)          # absorb the compiles
+eng.run_to_completion()
+eng.reset_stats()
+trace = [(list(range(3, 35 - 5 * i)), 12) for i in range(4)]
+hs = [eng.submit(p, max_new_tokens=m) for p, m in trace]
+with Stopwatch() as sw:
+  eng.run_to_completion()
+n_tok = sum(len(h.tokens) for h in hs)
+mi = eng.mesh_info()
+ps = mi.get("per_shard")
+if ps is None:                                 # mesh=1: no plan, pool local
+  total = sum(l.nbytes for l in jax.tree_util.tree_leaves(eng.layout.storage))
+  ps = {"bytes_per_shard": total, "total_bytes": total}
+print(json.dumps({
+    "tok_per_s": round(n_tok / max(sw.seconds, 1e-9), 2),
+    "tokens": [h.tokens for h in hs],
+    "mode": mi["mode"],
+    "bytes_per_shard": ps["bytes_per_shard"],
+    "total_bytes": ps["total_bytes"],
+}))
+'''
+
+
+def run_mesh(arch: str = "tinyllama-1.1b", sizes=(1, 2, 4)) -> dict:
+  """Sharded-serving scaling: tok/s and per-shard pool bytes vs mesh size.
+
+  Each (policy, mesh) cell replays the identical staggered trace through the
+  paged engine on a forced 8-host-device CPU mesh (see `_MESH_PROBE` for why
+  each cell is a subprocess) and the record asserts greedy-token identity
+  against the mesh=1 cell.  On CPU the tok/s column measures overhead, not
+  speedup — the scaling claim needs real devices; the byte column is the
+  capacity-wall figure: heads-mode pool bytes per shard drop ~1/N.
+  """
+  out = {"devices_forced": 8, "cache_layout": "paged", "scheduler": "paged",
+         "batch": 2, "prompt_len": 32, "gen": 12, "sizes": list(sizes),
+         "policies": {}}
+  root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+  env = dict(os.environ,
+             XLA_FLAGS="--xla_force_host_platform_device_count=8",
+             JAX_PLATFORMS="cpu")
+  env["PYTHONPATH"] = os.pathsep.join(
+      [os.path.join(root, "src")]
+      + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+  for policy in ("pq", "exact"):
+    cells = {}
+    for m in sizes:
+      proc = subprocess.run(
+          [sys.executable, "-c", _MESH_PROBE, arch, policy, str(m)],
+          env=env, capture_output=True, text=True, timeout=1200)
+      if proc.returncode != 0:
+        raise RuntimeError(
+            f"mesh probe {policy}/mesh={m} failed:\n{proc.stderr[-2000:]}")
+      cells[m] = json.loads(proc.stdout.strip().splitlines()[-1])
+    ref = cells[sizes[0]]["tokens"]
+    identical = all(cells[m]["tokens"] == ref for m in sizes)
+    out["policies"][policy] = {
+        "tokens_identical": identical,
+        "mesh": {str(m): {k: cells[m][k] for k in
+                          ("tok_per_s", "mode", "bytes_per_shard",
+                           "total_bytes")} for m in sizes},
+    }
+    line = ", ".join(
+        f"x{m}: {cells[m]['tok_per_s']} tok/s "
+        f"{cells[m]['bytes_per_shard']} B/shard ({cells[m]['mode']})"
+        for m in sizes)
+    print(f"mesh[{policy}]: {line}"
+          f"{'' if identical else '  TOKENS DIVERGED'}")
+  return out
+
+
 def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
                    batch: int = 2, prompt_len: int = 64, gen: int = 16) -> int:
   from repro.launch.serve import ServeRun
@@ -441,6 +532,11 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
   else:
     record["workload"] = None
     print(f"workload: skipped ({arch} family not engine-servable)")
+  if get_arch(arch, reduced=True).family in ("dense", "moe"):
+    record["mesh"] = run_mesh(arch)
+  else:
+    record["mesh"] = None
+    print(f"mesh: skipped ({arch} family not engine-servable)")
   history = _load_history(out_path)
   history.append(record)
   with open(out_path, "w") as f:

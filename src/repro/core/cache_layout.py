@@ -62,6 +62,7 @@ from repro.core import kv_cache as kvc
 from repro.core import prefix_index as pfx
 from repro.core import tiers as tiersmod
 from repro.core.cache_api import RESIDENT
+from repro.parallel import serve_sharding as ssh
 
 
 class BlockAllocator:
@@ -378,13 +379,18 @@ class ContiguousLayout(CacheLayout):
                num_blocks: Optional[int] = None,
                host_blocks: Optional[int] = None,
                prefix_cache: bool = False,
-               prefix_cache_blocks: Optional[int] = None):
+               prefix_cache_blocks: Optional[int] = None,
+               shard_plan: Optional[ssh.ShardPlan] = None):
     del block_size, num_blocks, host_blocks   # no block pool, no host tier
     del prefix_cache_blocks
     if prefix_cache:
       raise ValueError(
           "prefix cache requires a pooled layout: contiguous slabs have no "
           "shareable blocks — use --cache-layout paged or tiered")
+    if shard_plan is not None and shard_plan.active:
+      raise ValueError(
+          "sharded serving partitions a block pool; contiguous slabs have "
+          "none — use --cache-layout paged or tiered with --mesh-model > 1")
     self.model = model
     self.max_batch = max_batch
     self.storage = model.init_cache(max_batch)
@@ -442,7 +448,8 @@ class PagedLayout(CacheLayout):
                num_blocks: Optional[int] = None,
                host_blocks: Optional[int] = None,
                prefix_cache: bool = False,
-               prefix_cache_blocks: Optional[int] = None):
+               prefix_cache_blocks: Optional[int] = None,
+               shard_plan: Optional[ssh.ShardPlan] = None):
     del host_blocks   # single-tier pool; TieredLayout consumes it
     policy = model.cache_policy
     if policy is None:
@@ -450,6 +457,8 @@ class PagedLayout(CacheLayout):
                        "(attn-free families have no KV cache)")
     self.model = model
     self.max_batch = max_batch
+    self.shard_plan = shard_plan
+    plan_active = shard_plan is not None and shard_plan.active
     self.block = int(block_size or policy.spec.block or 16)
     cap = policy.paged_capacity()
     if self.block <= 0 or cap % self.block:
@@ -475,6 +484,11 @@ class PagedLayout(CacheLayout):
       return jnp.zeros(pool_shape, leaf.dtype)
 
     self.storage = jax.tree_util.tree_map(storage_leaf, self._axes, template)
+    if plan_active:
+      # commit pool + resident leaves to their mesh placement up front so
+      # the admission/fork/chunk programs (plain jits under GSPMD) keep the
+      # layout instead of re-deciding it per program
+      self.storage = ssh.place_storage(self.storage, shard_plan)
 
     def gather(storage, tables):
       def one(ax, st):
@@ -513,7 +527,12 @@ class PagedLayout(CacheLayout):
 
     self._gather = gather
     self._scatter = scatter
-    self._decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
+    if plan_active:
+      self._decode_fused = jax.jit(
+          ssh.wrap_decode(decode_fused, shard_plan, self.storage),
+          donate_argnums=(2,))
+    else:
+      self._decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
     self._admit_fused = jax.jit(admit_fused, donate_argnums=(0,))
 
     # -- block-table-native decode (kernel dispatch) -------------------------
@@ -525,8 +544,15 @@ class PagedLayout(CacheLayout):
     # prefill still use them — but the per-step decode traffic they cost
     # drops to zero.
     self.dispatch = policy.dispatch
+    if shard_plan is not None:
+      # mesh-aware second resolution: seq split-K lives only in the dense
+      # xla program, so an auto-picked pallas dispatch degrades (and an
+      # explicit one raises) before anything compiles
+      self.dispatch = decode_dispatch.resolve_for_mesh(
+          self.dispatch, shard_plan.mode)
     self.block_native = bool(
-        policy.block_native and model.cfg.family in ("dense", "moe")
+        policy.block_native and self.dispatch.use_pallas
+        and model.cfg.family in ("dense", "moe")
         and not model.cfg.hybrid)
     if self.block_native:
       axes_leaves = jax.tree_util.tree_leaves(self._axes)
@@ -543,6 +569,9 @@ class PagedLayout(CacheLayout):
                   for ax, r, p in zip(axes_leaves, res, pools)]
         return logits, jax.tree_util.tree_unflatten(treedef, merged)
 
+      if plan_active:
+        decode_native = ssh.wrap_decode(decode_native, shard_plan,
+                                        self.storage)
       self._decode_native = jax.jit(decode_native, donate_argnums=(2,))
     # layout-constant byte terms of the traffic model (storage shapes are
     # fixed): one pool block / one token row across all layers and heads,
@@ -939,7 +968,7 @@ class PagedLayout(CacheLayout):
     refs = collections.Counter(live)
     shared_blocks = sum(1 for c in refs.values() if c > 1)
     dedup_bytes = sum(c - 1 for c in refs.values() if c > 1) * block_bytes
-    return dict(
+    out = dict(
         kind="paged", block=self.block, num_blocks=self.num_blocks,
         allocated_blocks=allocated, peak_blocks=self.manager.peak_allocated,
         peak_mapped_blocks=self.manager.peak_mapped,
@@ -954,6 +983,9 @@ class PagedLayout(CacheLayout):
                      + active_slots * per_slot_resident),
         capacity_bytes=(self.num_blocks * block_bytes
                         + self.max_batch * per_slot_resident))
+    if self.shard_plan is not None:
+      out["sharding"] = ssh.per_shard_bytes(self.shard_plan, self.storage)
+    return out
 
   def __repr__(self) -> str:
     return (f"PagedLayout(block={self.block}, num_blocks={self.num_blocks}, "
@@ -984,11 +1016,13 @@ class TieredLayout(PagedLayout):
                num_blocks: Optional[int] = None,
                host_blocks: Optional[int] = None,
                prefix_cache: bool = False,
-               prefix_cache_blocks: Optional[int] = None):
+               prefix_cache_blocks: Optional[int] = None,
+               shard_plan: Optional[ssh.ShardPlan] = None):
     self._host_blocks_arg = host_blocks       # consumed by _make_allocator
     super().__init__(model, max_batch, block_size=block_size,
                      num_blocks=num_blocks, prefix_cache=prefix_cache,
-                     prefix_cache_blocks=prefix_cache_blocks)
+                     prefix_cache_blocks=prefix_cache_blocks,
+                     shard_plan=shard_plan)
     policy = model.cache_policy
     codec_tree = policy.spill_codecs()
     if (jax.tree_util.tree_structure(codec_tree)

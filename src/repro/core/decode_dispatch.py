@@ -90,6 +90,30 @@ def resolve(name: str) -> DecodeDispatch:
   return _RESOLVERS[name]()
 
 
+def resolve_for_mesh(dispatch: DecodeDispatch, shard_mode: str
+                     ) -> DecodeDispatch:
+  """Second, mesh-aware resolution stage for the sharded serve path.
+
+  `shard_mode` is the resolved `parallel.serve_sharding.ShardPlan.mode`
+  (kept a plain string so this module stays import-light).  Heads-mode
+  sharding keeps whatever the backend stage picked — the paged kernels are
+  head-shape-generic and each shard simply streams its own head slice of
+  the pool.  The seq split-K fallback lives only in the dense xla program,
+  so an explicitly requested kernel dispatch fails loudly there while
+  `auto`'s backend pick quietly degrades to xla (the same doctrine as
+  `auto` on CPU).
+  """
+  if shard_mode in ("none", "heads") or not dispatch.use_pallas:
+    return dispatch
+  if dispatch.name != "auto":
+    raise ValueError(
+        f"--decode-kernel {dispatch.name} cannot run under sequence "
+        f"split-K sharding (kv heads not divisible by the mesh model "
+        f"axis): the split lives in the dense xla program; use 'auto' or "
+        f"'xla', or pick a mesh size dividing the kv heads")
+  return DecodeDispatch(name=dispatch.name, use_pallas=False)
+
+
 @register("xla")
 def _xla() -> DecodeDispatch:
   return DecodeDispatch(name="xla", use_pallas=False)

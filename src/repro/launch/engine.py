@@ -73,8 +73,10 @@ import numpy as np
 from repro.common import timing
 from repro.configs.base import ModelConfig
 from repro.core import cache_registry
+from repro.launch import mesh as mesh_lib
 from repro.launch import scheduler as scheduler_lib
 from repro.models import Model
+from repro.parallel import serve_sharding as ssh
 from repro.runtime import fault_tolerance
 
 
@@ -114,6 +116,10 @@ class RequestHandle:
 class EngineStats:
   """Per-run engine counters (the wasted-compute blind spot, quantified)."""
   max_batch: int
+  # mesh-sharded serving (PR 7): shard count and partition mode of the run's
+  # ShardPlan ("none" | "heads" | "seq"); 1/"none" on single-device engines
+  mesh_shards: int = 1
+  mesh_mode: str = "none"
   steps: int = 0                 # step() calls, including idle ones
   decode_steps: int = 0          # batched decode launches
   busy_slot_steps: int = 0       # slot-steps that advanced a live request
@@ -237,6 +243,8 @@ class EngineStats:
             f"({1e3 * self.compute_s:.1f} ms compute, "
             f"{1e3 * self.transfer_stall_s:.1f} ms transfer stall, "
             f"{1e3 * self.idle_s:.1f} ms idle)")
+    if self.mesh_shards > 1:
+      s += f" | mesh {self.mesh_shards}-way ({self.mesh_mode})"
     return s
 
 
@@ -255,7 +263,9 @@ class ServeEngine:
                prefix_cache_blocks: Optional[int] = None,
                clock: Any = None,
                fault_injector: Any = None,
-               max_fetch_retries: int = 3):
+               max_fetch_retries: int = 3,
+               mesh: Any = None,
+               mesh_model: Optional[int] = None):
     if cfg.family not in ("dense", "moe"):
       raise ValueError(
           f"ServeEngine supports dense/moe attention families, got "
@@ -291,9 +301,26 @@ class ServeEngine:
           f"scheduler {sched_name!r} spills victims to the host tier; "
           f"it requires cache_layout='tiered', got {layout_name!r}")
 
+    # mesh-sharded serving (PR 7): resolve the partition plan before any
+    # storage is built so placement, dispatch resolution, and the decode
+    # shard_map all see the same frozen decision
+    if mesh is None and mesh_model is not None and mesh_model > 1:
+      mesh = mesh_lib.make_local_mesh(model=mesh_model)
+    self.shard_plan = None if mesh is None else ssh.plan_for(cfg, mesh)
+    plan_active = self.shard_plan is not None and self.shard_plan.active
+    if plan_active and not layout_cls.pooled:
+      raise ValueError(
+          f"sharded serving (mesh model axis "
+          f"{self.shard_plan.size}) partitions the block pool; it requires "
+          f"cache_layout='paged' or 'tiered', got {layout_name!r}")
+
     self.model = Model(cfg, context_len=context_len)
     if params is None:
       params = jax.jit(self.model.init)(jax.random.PRNGKey(seed))
+    if plan_active:
+      # the network outside attention is replicated — commit params to every
+      # mesh device once instead of letting GSPMD re-broadcast per program
+      params = ssh.replicate(params, self.shard_plan)
     self.params = params
     self._prefill = jax.jit(
         lambda p, t, ln: self.model.prefill(p, t, None, lengths=ln))
@@ -307,7 +334,8 @@ class ServeEngine:
         else cfg.host_blocks,
         prefix_cache=self.prefix_cache,
         prefix_cache_blocks=prefix_cache_blocks
-        if prefix_cache_blocks is not None else cfg.prefix_cache_blocks)
+        if prefix_cache_blocks is not None else cfg.prefix_cache_blocks,
+        shard_plan=self.shard_plan)
     if self.prefix_cache:
       # the chunked suffix prefill must attend over exactly the padded
       # extent the full prefill uses — that is the bit-exactness contract
@@ -324,7 +352,7 @@ class ServeEngine:
     #: rid -> virtual completion time of its in-flight host->device fetch
     self._transfer_ready: dict = {}
 
-    self.stats = EngineStats(max_batch=max_batch)
+    self.stats = self._new_stats()
     self._lengths = np.zeros((max_batch,), np.int32)
     self._cur = np.zeros((max_batch,), np.int32)
     self._slots: List[Optional[RequestHandle]] = [None] * max_batch
@@ -336,13 +364,32 @@ class ServeEngine:
   # public API
   # -------------------------------------------------------------------------
 
+  def _new_stats(self) -> EngineStats:
+    plan = self.shard_plan
+    return EngineStats(
+        max_batch=self.max_batch,
+        mesh_shards=plan.size if plan is not None else 1,
+        mesh_mode=plan.mode if plan is not None else "none")
+
+  def mesh_info(self) -> dict:
+    """Stats-json `mesh` section: the resolved plan plus what each shard
+    actually holds (pool bytes split sharded/replicated)."""
+    plan = self.shard_plan
+    if plan is None:
+      return dict(axis=ssh.MODEL_AXIS, mode="none", shards=1,
+                  devices=[str(jax.devices()[0])], bit_identical=True)
+    info = plan.describe()
+    if hasattr(self.layout, "storage"):
+      info["per_shard"] = ssh.per_shard_bytes(plan, self.layout.storage)
+    return info
+
   def reset_stats(self) -> None:
     """Fresh counters (e.g. after a warmup drain so latency percentiles
     measure steady-state steps).  Fields mirroring the layout's cumulative
     ledger (spill/fetch bytes, modeled PCIe time, forked blocks) are
     re-synced immediately and stay cumulative over the engine's life —
     event *counts* restart at zero."""
-    self.stats = EngineStats(max_batch=self.max_batch)
+    self.stats = self._new_stats()
     self._sync_transfer_stats()
     self._sync_prefix_stats()
 

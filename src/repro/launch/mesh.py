@@ -16,8 +16,32 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(model: int = 1, data: int | None = None):
-  """Mesh over whatever devices exist (tests / CPU smoke)."""
+  """Mesh over whatever devices exist (tests / CPU smoke / --mesh-model N).
+
+  Axis sizes must tile the device count exactly: the old `data = n // model`
+  silently built an (n//model, model) mesh that *dropped* devices whenever
+  `model` did not divide n (or, with an explicit `data`, let `make_mesh`
+  fail deep inside jax with an opaque reshape error).  Both are now loud,
+  named errors at the call site.
+  """
   n = len(jax.devices())
+  if model < 1:
+    raise ValueError(f"mesh model axis must be >= 1, got {model}")
+  if n % model != 0:
+    raise ValueError(
+        f"model axis size {model} does not divide the device count {n}; "
+        f"pick a model axis from the divisors of {n} (or force more host "
+        f"devices via XLA_FLAGS=--xla_force_host_platform_device_count=N)")
   if data is None:
     data = n // model
+  if data * model != n:
+    raise ValueError(
+        f"mesh axes (data={data}, model={model}) cover {data * model} "
+        f"devices but {n} exist; axis sizes must tile the device count "
+        f"exactly")
   return jax.make_mesh((data, model), ("data", "model"))
+
+
+def model_axis_size(mesh) -> int:
+  """Size of the mesh's `model` axis (1 when the axis is absent)."""
+  return int(dict(mesh.shape).get("model", 1))

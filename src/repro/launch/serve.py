@@ -196,7 +196,8 @@ def build_engine(args, clock=None, fault_injector=None):
   engine = ServeEngine(cfg, context_len=context, max_batch=args.batch,
                        prompt_capacity=args.prompt_len,
                        num_blocks=args.num_blocks, clock=clock,
-                       fault_injector=fault_injector)
+                       fault_injector=fault_injector,
+                       mesh_model=getattr(args, "mesh_model", None))
   if getattr(args, "pcie_gbps", None):
     ledger = getattr(engine.layout, "ledger", None)
     if ledger is not None:
@@ -224,6 +225,7 @@ def dump_stats_json(engine, path: str, extra: Any = None) -> None:
   ledger = getattr(engine.layout, "ledger", None)
   if ledger is not None:
     payload["transfer"] = ledger.as_dict()
+  payload["mesh"] = engine.mesh_info()
   index = getattr(engine.layout, "prefix_index", None)
   if index is not None:
     payload["prefix_cache"] = dict(
@@ -275,6 +277,13 @@ def run_engine_demo(args) -> None:
           f"materialized {tm['dense_materialized_bytes_per_step']} B, "
           f"block reads {tm['block_read_bytes_per_step']} B, row writes "
           f"{tm['row_write_bytes_per_step']} B")
+  if engine.shard_plan is not None and engine.shard_plan.active:
+    mi = engine.mesh_info()
+    ps = mi.get("per_shard", {})
+    print(f"mesh: {mi['shards']}-way over '{mi['axis']}' ({mi['mode']} "
+          f"mode, bit_identical={mi['bit_identical']}), "
+          f"{ps.get('bytes_per_shard', 0)} B pool/shard of "
+          f"{ps.get('total_bytes', 0)} B total")
   print(f"engine stats: {engine.stats.summary()}")
   by = engine.layout.bytes(active_slots=engine.active_count)
   if by["kind"] in ("paged", "tiered"):
@@ -407,6 +416,12 @@ def make_parser() -> argparse.ArgumentParser:
   ap.add_argument("--prefix-cache-blocks", type=int, default=None,
                   help="device blocks the prefix index may pin "
                        "(refcount+LRU budget; default: half the pool)")
+  ap.add_argument("--mesh-model", type=int, default=None, metavar="N",
+                  help="shard the engine decode over an N-way mesh model "
+                  "axis (kv heads when divisible, else split-K over the "
+                  "sequence for the exact policy); pooled layouts only. "
+                  "N must divide the device count — on CPU force devices "
+                  "with XLA_FLAGS=--xla_force_host_platform_device_count")
   ap.add_argument("--stats-json", default=None, metavar="PATH",
                   help="engine mode: dump EngineStats.as_dict() + layout "
                        "footprint + transfer ledger as JSON")

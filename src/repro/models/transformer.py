@@ -25,6 +25,7 @@ from repro.core import importance as imp
 from repro.core import kv_cache as kvc
 from repro.core import pq as pqlib
 from repro.models import layers, moe as moe_mod, rwkv6, ssm
+from repro.parallel import serve_sharding as ssh
 
 
 # ---------------------------------------------------------------------------
@@ -141,10 +142,28 @@ def _attn_qkv_step(p: dict, x: Array, lengths: Array, cfg):
 def _attn_step(
     p: dict, x: Array, cache, lengths: Array, cfg, policy
 ) -> Tuple[Array, Any]:
-  """Single-token attention against the cache.  x (B, 1, D), lengths (B,)."""
+  """Single-token attention against the cache.  x (B, 1, D), lengths (B,).
+
+  Under an active shard plan (traced inside the sharded serve path's
+  shard_map) the per-kv-head independence of every policy is the partition
+  seam: q/k/v come out of the replicated projections full-width, each shard
+  attends only its kv-head slice against its local cache shard, and an
+  ordered all_gather reassembles the exact per-head context before the
+  replicated `wo` projection — bit-identical to the unsharded step.  The
+  seq fallback instead split-Ks the exact-store softmax across shards.
+  """
   lengths = kvc.as_lengths(lengths, x.shape[0])
   q, k, v = _attn_qkv_step(p, x, lengths, cfg)
-  attn, new_cache = policy.append_and_attend(cache, q, k, v, lengths)
+  plan = ssh.active_plan()
+  if plan is None:
+    attn, new_cache = policy.append_and_attend(cache, q, k, v, lengths)
+  elif plan.mode == "heads":
+    q_l, k_l, v_l = ssh.shard_attn_inputs(q, k, v, plan)
+    attn, new_cache = policy.append_and_attend(cache, q_l, k_l, v_l, lengths)
+    attn = ssh.gather_attn_outputs(attn, plan)
+  else:                                   # seq split-K (exact store only)
+    attn, new_cache = ssh.seq_append_and_attend(
+        cache, q, k, v, lengths, cfg.head_dim ** -0.5, plan)
   out = jnp.einsum("bhk,hkd->bd", attn.astype(x.dtype),
                    layers.wv(p["wo"], x.dtype))
   return out[:, None, :], new_cache
@@ -163,8 +182,20 @@ def _attn_step_paged(
   """
   lengths = kvc.as_lengths(lengths, x.shape[0])
   q, k, v = _attn_qkv_step(p, x, lengths, cfg)
-  attn, resident, pools = policy.append_and_attend_paged(
-      resident, pools, layer, tables, q, k, v, lengths)
+  plan = ssh.active_plan()
+  if plan is None:
+    attn, resident, pools = policy.append_and_attend_paged(
+        resident, pools, layer, tables, q, k, v, lengths)
+  else:
+    # heads mode only: the block-native kernels are H-shape-generic, so the
+    # same slice/attend/gather seam as `_attn_step` applies — each shard's
+    # kernel streams its own head-slice of the pool through the shared
+    # scalar-prefetched tables.  (Seq mode forces the dense program at
+    # dispatch resolution; see core.decode_dispatch.resolve_for_plan.)
+    q_l, k_l, v_l = ssh.shard_attn_inputs(q, k, v, plan)
+    attn, resident, pools = policy.append_and_attend_paged(
+        resident, pools, layer, tables, q_l, k_l, v_l, lengths)
+    attn = ssh.gather_attn_outputs(attn, plan)
   out = jnp.einsum("bhk,hkd->bd", attn.astype(x.dtype),
                    layers.wv(p["wo"], x.dtype))
   return out[:, None, :], resident, pools

@@ -153,8 +153,21 @@ def batch_pspecs(mesh: Mesh, with_modal: bool = False) -> dict:
 
 
 def cache_pspecs(cache: PyTree, mesh: Mesh, batch: int,
-                 shard_sequence: bool = False) -> PyTree:
-  """PartitionSpecs for a decode-cache tree (see module docstring)."""
+                 shard_sequence: bool = False,
+                 paged_axes: Optional[PyTree] = None) -> PyTree:
+  """PartitionSpecs for a decode-cache tree (see module docstring).
+
+  `paged_axes` (a tree matching `cache`, the policy's `paged_axes()`)
+  marks physical *pool* leaves: an entry >= 0 says this leaf is block-pooled
+  storage `(P+1, L, H, block, ...)` — heads at axis 2, the paged token axis
+  blocked behind a leading physical-block axis — rather than a dense
+  per-request `(L, B, H, N, ...)` cache.  Pool leaves predate none of the
+  dense chains' assumptions (their axis 1 is *layers*, not batch), so they
+  get their own fallback chain: kv heads (axis 2) over `model` when
+  divisible, else flash-decoding split-K over the sequence via the leading
+  block axis, else replicate.  Entries < 0 (RESIDENT) and
+  `paged_axes=None` fall through to the dense rules unchanged.
+  """
   axes = dict(mesh.shape)
   da = data_axes(mesh)
   n_data = _axis_size(axes, da)
@@ -163,7 +176,20 @@ def cache_pspecs(cache: PyTree, mesh: Mesh, batch: int,
   seq_both = ("data", M) if "pod" not in mesh.axis_names else \
       (("pod", "data", M))
 
-  def rule(path, leaf) -> P:
+  def pool_rule(leaf) -> P:
+    sh, nd = leaf.shape, leaf.ndim
+    if nd < 4:
+      return P(*([None] * nd))
+    return _choose(sh, [
+        # kv heads (axis 2 of (P+1, L, H, block, ...)) over model
+        (M,) + (None,) * (nd - 3),
+        # split-K fallback: partition the physical-block (sequence) axis
+        (M,) + (None,) * (nd - 1),
+    ], axes)
+
+  def rule(path, leaf, ax_hint=None) -> P:
+    if ax_hint is not None and ax_hint >= 0:
+      return pool_rule(leaf)
     s = _path_str(path)
     sh = leaf.shape
     nd = leaf.ndim
@@ -208,6 +234,8 @@ def cache_pspecs(cache: PyTree, mesh: Mesh, batch: int,
                           (None, batch_ax, None)], axes)
     return P(*([None] * nd))
 
+  if paged_axes is not None:
+    return jax.tree_util.tree_map_with_path(rule, cache, paged_axes)
   return jax.tree_util.tree_map_with_path(rule, cache)
 
 
