@@ -98,6 +98,18 @@ def _stall_ratio(run: dict, policy: str):
   return _workload_cell(run, policy).get("transfer_stall_ratio")
 
 
+def _packed_spill(run: dict):
+  """q4 spill bytes / int8 spill bytes on the forced-spill trace (< 0.55 =
+  the sub-byte layout halves int8); None on records predating PR 8."""
+  return (run.get("packed") or {}).get("q4_vs_int8_spill_bytes")
+
+
+def _packed_resident(run: dict):
+  """Resident-q4 exact pool capacity as a fraction of the fp32 pool
+  (~0.19 at head_dim 16); None on records predating PR 8."""
+  return (run.get("packed") or {}).get("resident_q4_vs_fp32_bytes")
+
+
 def _mesh_cell(run: dict, policy: str, size: int) -> dict:
   """One sharded-serving cell; {} on records predating PR 7."""
   pols = (run.get("mesh") or {}).get("policies", {})
@@ -136,7 +148,8 @@ def render_terminal(runs: list) -> None:
   print(f"{'run':>3} {'sha':>8} {'timestamp':>20} {'pq tok/s':>9} "
         f"{'exact tok/s':>11} {'spill pq/raw':>12} {'prefix saved':>12} "
         f"{'hit(pq)':>8} {'p99(pq) ms':>10} {'goodput(pq)':>11} "
-        f"{'ttft p99 s':>10} {'stall o/s':>9} {'mesh x4(pq)':>11}")
+        f"{'ttft p99 s':>10} {'stall o/s':>9} {'mesh x4(pq)':>11} "
+        f"{'q4/int8 B':>9}")
   for i, run in enumerate(runs):
     print(f"{i:>3} {run.get('git_sha', '?'):>8} "
           f"{run.get('timestamp', '?'):>20} "
@@ -149,7 +162,8 @@ def render_terminal(runs: list) -> None:
           f"{fmt(_goodput(run, 'pq'), '{:11.2%}', '          —')} "
           f"{fmt(_ttft_p99(run, 'pq'), '{:10.4f}', '         —')} "
           f"{fmt(_stall_ratio(run, 'pq'), '{:9.3f}', '        —')} "
-          f"{fmt(_mesh_scale(run, 'pq', 4), '{:11.3f}', '          —')}")
+          f"{fmt(_mesh_scale(run, 'pq', 4), '{:11.3f}', '          —')} "
+          f"{fmt(_packed_spill(run), '{:9.3f}', '        —')}")
   print()
   for label, series in (
       ("pq tok/s      ", [_policy_toks(r, "pq") for r in runs]),
@@ -165,6 +179,8 @@ def render_terminal(runs: list) -> None:
       ("mesh x2 pq    ", [_mesh_scale(r, "pq", 2) for r in runs]),
       ("mesh x4 pq    ", [_mesh_scale(r, "pq", 4) for r in runs]),
       ("shard B x4 pq ", [_mesh_bytes_frac(r, "pq", 4) for r in runs]),
+      ("q4/int8 spill ", [_packed_spill(r) for r in runs]),
+      ("q4/fp32 pool  ", [_packed_resident(r) for r in runs]),
   ):
     vals = [v for v in series if v is not None]
     if vals:
@@ -186,7 +202,7 @@ def render_png(runs: list, path: str) -> bool:
           "the dashboard)")
     return False
   xs = list(range(len(runs)))
-  fig, axes = plt.subplots(6, 1, figsize=(8, 14), sharex=True)
+  fig, axes = plt.subplots(7, 1, figsize=(8, 16), sharex=True)
   axes[0].plot(xs, [_policy_toks(r, "pq") for r in runs], marker="o",
                label="pq")
   axes[0].plot(xs, [_policy_toks(r, "exact") for r in runs], marker="s",
@@ -231,8 +247,17 @@ def render_png(runs: list, path: str) -> bool:
                color="tab:green", label="pq pool B/shard x4 (frac)")
   axes[5].axhline(0.25, ls="--", lw=1, color="gray")
   axes[5].set_ylabel("mesh scaling")
-  axes[5].set_xlabel("run")
   axes[5].legend(loc="best")
+  # packed KV codecs (records before PR 8 plot as gaps)
+  axes[6].plot(xs, [_packed_spill(r) for r in runs], marker="o",
+               color="tab:brown", label="q4/int8 spill bytes")
+  axes[6].plot(xs, [_packed_resident(r) for r in runs], marker="s",
+               color="tab:pink", label="resident q4/fp32 pool")
+  axes[6].axhline(0.55, ls="--", lw=1, color="gray")
+  axes[6].axhline(0.30, ls=":", lw=1, color="gray")
+  axes[6].set_ylabel("packed bytes\n(frac of baseline)")
+  axes[6].set_xlabel("run")
+  axes[6].legend(loc="best")
   fig.tight_layout()
   fig.savefig(path, dpi=120)
   plt.close(fig)

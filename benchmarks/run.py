@@ -23,6 +23,11 @@ asserting greedy-token identity and recording the modeled decode HBM bytes
 per step — dense gather->decode->scatter vs block-table-native pool reads
 (`pq_block_native_dense_bytes` must be 0: the kernels read paged storage in
 place).
+
+Since PR 8 a ``packed`` section measures the sub-byte KV codecs: q4/q8
+spill traffic vs int8 on the forced-spill trace, and the resident-q4
+exact policy's pool footprint + kernel-vs-XLA greedy-token identity; the
+trajectory file keeps only the newest ``BENCH_HISTORY_KEEP`` records.
 """
 import argparse
 import json
@@ -481,6 +486,107 @@ def run_mesh(arch: str = "tinyllama-1.1b", sizes=(1, 2, 4)) -> dict:
   return out
 
 
+def run_packed_codecs(arch: str = "tinyllama-1.1b", prompt_len: int = 352,
+                      gen: int = 48, block: int = 16, num_blocks: int = 46,
+                      host_blocks: int = 192) -> dict:
+  """Packed KV codec measurements (kernels/packing.py), two levels.
+
+  Spill: the PR 3 forced-spill trace through the tiered engine with the
+  exact policy under spill codec int8 vs q4/q8 — identical traffic, only
+  the host-tier representation differs.  `q4_vs_int8_spill_bytes` is the
+  headline: the sub-byte group layout (f16 scale/min per 32 values +
+  nibble codes) roughly halves int8's per-row f32-header layout.
+
+  Resident: a short decode trace with the exact policy, dense fp32 store
+  vs q4 packed resident store, each under `xla` vs `pallas-interpret` and
+  across {paged, tiered} — asserting greedy-token identity between the
+  packed block-native kernel and the dequantizing XLA reference (they
+  share one dequant formula), and recording the pool capacity ratio
+  (`resident_q4_vs_fp32_bytes`, ~0.19 at head_dim 16).
+  """
+  import dataclasses
+  from repro.configs import get_arch
+  from repro.launch.engine import ServeEngine
+
+  out = {"kv_block_size": block, "batch": 2, "prompt_len": prompt_len,
+         "gen": gen, "spill": {}, "resident": {}}
+  for codec in ("int8", "q4", "q8"):
+    cfg = dataclasses.replace(
+        get_arch(arch, reduced=True), cache_policy="exact",
+        dtype_str="bfloat16", cache_layout="tiered", scheduler="tiered",
+        kv_block_size=block, spill_codec=codec)
+    eng = ServeEngine(cfg, context_len=prompt_len + gen, max_batch=2,
+                      prompt_capacity=prompt_len, num_blocks=num_blocks,
+                      host_blocks=host_blocks)
+    for i in range(2):
+      eng.submit([7 + i] * (prompt_len - 8 * i), max_new_tokens=gen)
+    eng.run_to_completion()
+    led = eng.layout.ledger
+    out["spill"][codec] = {
+        "spills": eng.stats.spills, "fetches": eng.stats.fetches,
+        "spill_bytes": led.spill_bytes,
+        "spill_raw_bytes": led.spill_raw_bytes,
+        "fetch_bytes": led.fetch_bytes,
+        "modeled_pcie_s": round(led.modeled_pcie_s, 6),
+    }
+    print(f"packed-spill[{codec}]: {eng.stats.spills} spills "
+          f"({led.spill_bytes} B post-codec, {led.spill_raw_bytes} B raw)")
+  int8_b = out["spill"]["int8"]["spill_bytes"]
+  for codec in ("q4", "q8"):
+    out[f"{codec}_vs_int8_spill_bytes"] = (
+        round(out["spill"][codec]["spill_bytes"] / int8_b, 4)
+        if int8_b else None)
+  print(f"packed: q4 spill traffic = {out['q4_vs_int8_spill_bytes']} of "
+        f"int8 (q8 = {out['q8_vs_int8_spill_bytes']})")
+
+  trace = [(list(range(3, 3 + 32 - 4 * i)), 16) for i in range(4)]
+  params = None
+  for layout in ("paged", "tiered"):
+    toks = {}
+    cap = {}
+    for codec in ("none", "q4"):
+      for kern in ("xla", "pallas-interpret"):
+        cfg = dataclasses.replace(
+            get_arch(arch, reduced=True), cache_policy="exact",
+            dtype_str="float32", cache_layout=layout, scheduler=layout,
+            kv_block_size=block, decode_kernel=kern,
+            kv_resident_codec=codec)
+        eng = ServeEngine(cfg, context_len=48, max_batch=2,
+                          prompt_capacity=32, params=params)
+        params = eng.params
+        hs = [eng.submit(p, max_new_tokens=m) for p, m in trace]
+        eng.run_to_completion()
+        toks[(codec, kern)] = [h.tokens for h in hs]
+        cap[codec] = eng.kv_bytes()["capacity_bytes"]
+    cell = {
+        "tokens_identical_q4": (toks[("q4", "xla")]
+                                == toks[("q4", "pallas-interpret")]),
+        "tokens_identical_fp32": (toks[("none", "xla")]
+                                  == toks[("none", "pallas-interpret")]),
+        "capacity_bytes_fp32": cap["none"],
+        "capacity_bytes_q4": cap["q4"],
+    }
+    out["resident"][layout] = cell
+    print(f"packed-resident[{layout}]: pool {cap['none']} B fp32 -> "
+          f"{cap['q4']} B q4; kernel==xla tokens "
+          f"q4={cell['tokens_identical_q4']} "
+          f"fp32={cell['tokens_identical_fp32']}")
+  fp32_cap = out["resident"]["paged"]["capacity_bytes_fp32"]
+  out["resident_q4_vs_fp32_bytes"] = (
+      round(out["resident"]["paged"]["capacity_bytes_q4"] / fp32_cap, 4)
+      if fp32_cap else None)
+  print(f"packed: resident q4 pool = {out['resident_q4_vs_fp32_bytes']} "
+        f"of fp32")
+  return out
+
+
+#: --json keeps this many newest run records; the trajectory file was
+#: growing ~400 lines per PR unbounded.  Legacy records (including a
+#: pre-trajectory single-record file, migrated by _load_history) are
+#: preserved until they age past the window.
+BENCH_HISTORY_KEEP = 50
+
+
 def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
                    batch: int = 2, prompt_len: int = 64, gen: int = 16) -> int:
   from repro.launch.serve import ServeRun
@@ -537,8 +643,18 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
   else:
     record["mesh"] = None
     print(f"mesh: skipped ({arch} family not engine-servable)")
+  if get_arch(arch, reduced=True).family in ("dense", "moe"):
+    record["packed"] = run_packed_codecs(arch)
+  else:
+    record["packed"] = None
+    print(f"packed codecs: skipped ({arch} family not engine-servable)")
   history = _load_history(out_path)
   history.append(record)
+  dropped = len(history) - BENCH_HISTORY_KEEP
+  if dropped > 0:
+    history = history[-BENCH_HISTORY_KEEP:]
+    print(f"pruned {dropped} oldest run record(s); keeping the newest "
+          f"{BENCH_HISTORY_KEEP}")
   with open(out_path, "w") as f:
     json.dump({"runs": history}, f, indent=2)
     f.write("\n")

@@ -69,9 +69,14 @@ class ModelConfig:
                                      # in blocks; None -> layout default (4x
                                      # device), 0 -> no host tier (exhaustion
                                      # falls back to recompute preemption)
-  spill_codec: str = "raw"         # tiered-layout exact-KV spill codec:
-                                   # raw | int8 (PQ codes always spill
+  spill_codec: str = "raw"         # tiered-layout exact-KV spill codec: any
+                                   # core.tiers.SPILL_CODECS key (raw | int8
+                                   # | q4 | q8; PQ codes always spill
                                    # verbatim — they ARE the compressed form)
+  kv_resident_codec: str = "none"  # exact-policy resident KV store: none
+                                   # (dense floats) | q4 | q8 (sub-byte
+                                   # packed pages decoded in-kernel —
+                                   # kernels/packing.py block format)
   prefix_cache: bool = False       # share prompt-prefix KV blocks across
                                    # requests (copy-on-write tables +
                                    # suffix-only prefill; paged/tiered
@@ -146,6 +151,7 @@ class ModelConfig:
         block=(self.kv_block_size
                if self.cache_layout in ("paged", "tiered") else 0),
         spill_codec=self.spill_codec,
+        kv_resident_codec=self.kv_resident_codec,
         decode_kernel=self.decode_kernel,
         pq=self.pq_cache_config(context_len) if name == "pq" else None)
     return cache_registry.make(name, spec)

@@ -44,6 +44,8 @@ from repro.core import baselines, cache_registry, decode_dispatch
 from repro.core import kv_cache as kvc
 from repro.core import pq as pqlib
 from repro.core import pq_attention
+from repro.core import tiers
+from repro.kernels import packing
 
 
 def _fit_m(m: int, d: int) -> int:
@@ -69,9 +71,14 @@ class CacheSpec:
   group: int = 32            # skvq channel-group size
   keep_frac: float = 0.25    # snapkv / pqcache kept-token fraction
   block: int = 0             # paged-layout token-block size (0 = contiguous)
-  spill_codec: str = "raw"   # tiered-layout float-KV spill codec: raw | int8
-                             # (int8 reuses the skvq per-group machinery and
-                             # is lossy — PQ code rows always spill verbatim)
+  spill_codec: str = "raw"   # tiered-layout float-KV spill codec: any key in
+                             # core.tiers.SPILL_CODECS (raw | int8 | q4 | q8;
+                             # non-raw are lossy — PQ code rows always spill
+                             # verbatim)
+  kv_resident_codec: str = "none"  # exact-policy *resident* store format:
+                             # none keeps dense floats; q4/q8 store packed
+                             # codes + f16 headers (kernels/packing.py) and
+                             # decode in-kernel.  Other policies ignore it.
   decode_kernel: str = "auto"  # decode attention implementation: registry key
                                # in core.decode_dispatch (xla | pallas |
                                # pallas-interpret | auto); resolved once at
@@ -96,9 +103,15 @@ class CacheSpec:
           f"{self.window}")
     if self.block < 0:
       raise ValueError(f"block must be >= 0, got {self.block}")
-    if self.spill_codec not in ("raw", "int8"):
+    if self.spill_codec not in tiers.SPILL_CODECS:
       raise ValueError(
-          f"spill_codec must be 'raw' or 'int8', got {self.spill_codec!r}")
+          f"spill_codec must be one of {tuple(sorted(tiers.SPILL_CODECS))}, "
+          f"got {self.spill_codec!r}")
+    if self.kv_resident_codec not in packing.RESIDENT_CODECS:
+      raise ValueError(
+          f"kv_resident_codec must be one of "
+          f"{tuple(packing.RESIDENT_CODECS)}, got "
+          f"{self.kv_resident_codec!r}")
     decode_dispatch.validate(self.decode_kernel)
     if self.block and self.capacity % self.block:
       raise ValueError(
@@ -362,8 +375,19 @@ class ExactPolicy(_ExactStorePolicy):
   flash-decode kernel (`kernels/paged_flash_decode.flash_decode_kernel`) and
   the paged step is block-table-native (`paged_flash_decode_kernel` reads the
   K/V pool in place — no dense gather, one inserted row written).
+
+  With `CacheSpec.kv_resident_codec` set to q4/q8, construction transparently
+  yields a `PackedExactPolicy` — same registry key, packed resident store.
   """
   kernel_decode = True
+
+  def __new__(cls, spec: CacheSpec):
+    # the resident codec is a storage-format switch, not a different
+    # algorithm: "exact" stays the one registry key and the spec picks the
+    # store, so every construction path (registry, config, tests) agrees
+    if cls is ExactPolicy and spec.kv_resident_codec != "none":
+      return super().__new__(PackedExactPolicy)
+    return super().__new__(cls)
 
   @property
   def block_native(self) -> bool:
@@ -392,6 +416,74 @@ class ExactPolicy(_ExactStorePolicy):
     per_head = self.spec.capacity * d * fp * 2
     return dict(per_head_bytes=per_head, total_bytes=per_head * b * h,
                 equivalent_exact_bytes=per_head * b * h, reduction_ratio=1.0)
+
+
+class PackedExactPolicy(ExactPolicy):
+  """Exact attention over a sub-byte packed resident store (q4/q8).
+
+  State is `kv_cache.PackedExactLayerCache`: split-half nibble codes plus
+  per-group f16 scale/min pages (kernels/packing.py block format) — ~0.19x
+  the fp32 store at q4 — making the exact policy capacity-competitive with
+  pq while keeping its attend semantics.  With a pallas dispatch the paged
+  step is block-native through `packed_paged_flash_decode_kernel` (codes
+  unpacked in VMEM); the XLA path dequantizes the dense store with the same
+  formula, so greedy decode agrees bit-for-bit across dispatches.
+
+  Constructed via `ExactPolicy.__new__` when `spec.kv_resident_codec` is
+  q4/q8 — never registered under its own key.
+  """
+  # packed rows are causal per position, but the chunked suffix-prefill path
+  # (_attn_chunk) inserts into dense k/v leaves only — so prefix blocks are
+  # not shareable; full-prompt entries (prefix_cacheable) still hit
+  prefix_shareable = False
+
+  def __init__(self, spec: CacheSpec):
+    super().__init__(spec)
+    self.bits = packing.RESIDENT_CODECS[spec.kv_resident_codec]
+
+  def init(self, b: int, h: int, d: int):
+    return kvc.packed_exact_cache_init(b, h, self.spec.capacity, d,
+                                       self.bits)
+
+  def prefill(self, k, v, weights=None, lengths=None):
+    del weights, lengths  # padding rows are masked at attend time
+    return kvc.packed_exact_cache_prefill(k, v, self.spec.capacity,
+                                          self.bits)
+
+  def append_and_attend(self, state, q, k_new, v_new, lengths):
+    return kvc.packed_exact_cache_append_and_attend(
+        state, q, k_new, v_new, lengths, self.spec.sm_scale(q.shape[-1]),
+        bits=self.bits, use_kernel=self.use_kernel,
+        interpret=self.dispatch.interpret)
+
+  def append_and_attend_paged(self, resident_leaves, pool_leaves, layer,
+                              tables, q, k_new, v_new, lengths):
+    out, pools = kvc.packed_exact_cache_paged_step(
+        pool_leaves, layer, tables, q, k_new, v_new, lengths,
+        self.spec.sm_scale(q.shape[-1]), bits=self.bits,
+        interpret=self.dispatch.interpret)
+    return out, list(resident_leaves), pools
+
+  def paged_axes(self):
+    return kvc.PackedExactLayerCache(k_pack=2, k_scale=2, k_min=2,
+                                     v_pack=2, v_scale=2, v_min=2)
+
+  def spill_codecs(self):
+    # already sub-byte: packed pages must cross the tier boundary verbatim
+    # (re-quantizing codes would corrupt them; they *are* the compression)
+    return kvc.PackedExactLayerCache(k_pack="raw", k_scale="raw",
+                                     k_min="raw", v_pack="raw",
+                                     v_scale="raw", v_min="raw")
+
+  def bytes(self, b: int, h: int, d: int) -> dict:
+    group = packing.group_size(d)
+    # codes + f16 scale/min headers, k and v
+    per_tok = packing.packed_width(d, self.bits) + (d // group) * 4
+    per_head = self.spec.capacity * per_tok * 2
+    exact = self.spec.capacity * d * 2 * 2
+    return dict(per_head_bytes=per_head, total_bytes=per_head * b * h,
+                equivalent_exact_bytes=exact * b * h,
+                reduction_ratio=exact / per_head)
 
 
 @cache_registry.register("streamingllm")

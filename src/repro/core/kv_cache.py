@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.common import Array
 from repro.core import pq, pq_attention, windowed
 from repro.kernels import ops as kops
+from repro.kernels import packing
 
 
 def as_lengths(length, b: int) -> Array:
@@ -188,6 +189,155 @@ def exact_cache_append_and_attend(
       functools.partial(_exact_append_attend_one, scale=scale)
   )(cache.k, cache.v, q, k_new, v_new, lengths)
   return out, ExactLayerCache(k=k_c, v=v_c)
+
+
+# ---------------------------------------------------------------------------
+# Packed exact cache: sub-byte resident KV (kernels/packing.py block format)
+# ---------------------------------------------------------------------------
+
+class PackedExactLayerCache(NamedTuple):
+  """Exact KV stored as q4/q8 block-quantized pages (kernels/packing.py).
+
+  Token axis is 2 on every leaf, mirroring ExactLayerCache, so the paged/
+  tiered layouts page this state exactly like the dense one — the pool
+  blocks simply hold codes + f16 headers instead of floats.
+  """
+  k_pack: Array          # (B, H, N, d*bits/8) uint8 — split-half nibbles
+  k_scale: Array         # (B, H, N, G) f16 — per-group scale, G = d/group
+  k_min: Array           # (B, H, N, G) f16 — per-group minimum
+  v_pack: Array
+  v_scale: Array
+  v_min: Array
+
+
+def packed_exact_cache_init(b: int, h: int, n_max: int, d: int,
+                            bits: int) -> PackedExactLayerCache:
+  group = packing.group_size(d)
+  zp = jnp.zeros((b, h, n_max, packing.packed_width(d, bits)), jnp.uint8)
+  zs = jnp.zeros((b, h, n_max, d // group), jnp.float16)
+  return PackedExactLayerCache(k_pack=zp, k_scale=zs, k_min=zs,
+                               v_pack=zp, v_scale=zs, v_min=zs)
+
+
+def packed_exact_cache_prefill(k: Array, v: Array, n_max: int,
+                               bits: int) -> PackedExactLayerCache:
+  """k/v (B, H, N, D) -> quantized cache padded to n_max."""
+  b, h, n, d = k.shape
+  group = packing.group_size(d)
+  kp, ks, km = packing.pack_rows(k, bits=bits, group=group)
+  vp, vs, vm = packing.pack_rows(v, bits=bits, group=group)
+  pad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, n_max - n), (0, 0)))
+  return PackedExactLayerCache(k_pack=pad(kp), k_scale=pad(ks),
+                               k_min=pad(km), v_pack=pad(vp),
+                               v_scale=pad(vs), v_min=pad(vm))
+
+
+def packed_exact_dequant(cache: PackedExactLayerCache,
+                         bits: int) -> Tuple[Array, Array]:
+  """Whole-store dequant -> (k, v) f32 (..., N, D); the XLA reference path
+  (same formula the kernel applies per mapped block)."""
+  d = cache.k_pack.shape[-1] * 8 // bits
+  group = packing.group_size(d)
+  k = packing.dequant_page(cache.k_pack, cache.k_scale, cache.k_min,
+                           bits=bits, group=group)
+  v = packing.dequant_page(cache.v_pack, cache.v_scale, cache.v_min,
+                           bits=bits, group=group)
+  return k, v
+
+
+def _packed_insert_one(kp, ks, km, vp, vs, vm, k_new, v_new, length, *,
+                       bits: int):
+  """Quantize one token row and insert it at `length` (leaves are (H, N, x),
+  k_new/v_new (H, D)) — the packed analogue of `exact_insert_one`."""
+  d = k_new.shape[-1]
+  group = packing.group_size(d)
+  knp, kns, knm = packing.pack_rows(k_new, bits=bits, group=group)
+  vnp, vns, vnm = packing.pack_rows(v_new, bits=bits, group=group)
+
+  def ins(buf, row):
+    return jax.lax.dynamic_update_slice(
+        buf, row[:, None, :].astype(buf.dtype), (0, length, 0))
+
+  return (ins(kp, knp), ins(ks, kns), ins(km, knm),
+          ins(vp, vnp), ins(vs, vns), ins(vm, vnm))
+
+
+def packed_exact_cache_append_and_attend(
+    cache: PackedExactLayerCache,
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,       # scalar int32 OR (B,) per-request lengths
+    scale: float,
+    bits: int,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> Tuple[Array, PackedExactLayerCache]:
+  """Dense-storage packed decode step: quantize-insert the new row, then
+  attend over the dequantized store (flash-decode kernel or masked XLA)."""
+  b, hq, d = q.shape
+  h = cache.k_pack.shape[1]
+  g = hq // h
+  lengths = as_lengths(length, b)
+  leaves = jax.vmap(functools.partial(_packed_insert_one, bits=bits))(
+      *cache, k_new, v_new, lengths)
+  cache = PackedExactLayerCache(*leaves)
+  k_c, v_c = packed_exact_dequant(cache, bits)      # (B, H, N, D) f32
+  if use_kernel:
+    out = kops.flash_decode(q.reshape(b, h, g, d), k_c, v_c, lengths + 1,
+                            scale, interpret=interpret)
+    return out.reshape(b, hq, d), cache
+  n_max = k_c.shape[2]
+
+  def one(kk, vv, qq, ln):
+    mask = jnp.arange(n_max) < (ln + 1)
+    qg = qq.reshape(h, g, d)
+    out = jax.vmap(
+        lambda qh, kh, vh: pq_attention.exact_decode_attention(
+            qh, kh, vh, mask, scale))(qg, kk, vv)
+    return out.reshape(hq, d)
+
+  out = jax.vmap(one)(k_c, v_c, q, lengths)
+  return out, cache
+
+
+def packed_exact_cache_paged_step(
+    pool_leaves,         # 6 pools, PackedExactLayerCache leaf order:
+                         # (P+1, L, H, block, x) with x = dp | G | G
+    layer: Array,        # scalar int32
+    tables: Array,       # (B, nb) int32
+    q: Array,            # (B, Hq, D)
+    k_new: Array,        # (B, H, D)
+    v_new: Array,
+    length: Array,
+    scale: float,
+    bits: int,
+    interpret: bool = True,
+):
+  """Block-table-native packed decode step: quantize the new row, write its
+  codes + headers into the mapped pool block, attend in place through the
+  packed kernel (codes are unpacked in VMEM — never densified in HBM)."""
+  kp, ks, km, vp, vs, vm = pool_leaves
+  b, hq, d = q.shape
+  h = kp.shape[2]
+  g = hq // h
+  block = kp.shape[3]
+  group = packing.group_size(d)
+  lengths = as_lengths(length, b)
+  pids = tables[jnp.arange(b), lengths // block]
+  rows = lengths % block
+  knp, kns, knm = packing.pack_rows(k_new, bits=bits, group=group)
+  vnp, vns, vnm = packing.pack_rows(v_new, bits=bits, group=group)
+  kp = kp.at[pids, layer, :, rows].set(knp.astype(kp.dtype))
+  ks = ks.at[pids, layer, :, rows].set(kns.astype(ks.dtype))
+  km = km.at[pids, layer, :, rows].set(knm.astype(km.dtype))
+  vp = vp.at[pids, layer, :, rows].set(vnp.astype(vp.dtype))
+  vs = vs.at[pids, layer, :, rows].set(vns.astype(vs.dtype))
+  vm = vm.at[pids, layer, :, rows].set(vnm.astype(vm.dtype))
+  out = kops.packed_paged_flash_decode(
+      q.reshape(b, h, g, d), kp, ks, km, vp, vs, vm, tables, layer,
+      lengths + 1, scale, bits=bits, interpret=interpret)
+  return out.reshape(b, hq, d), [kp, ks, km, vp, vs, vm]
 
 
 # ---------------------------------------------------------------------------

@@ -153,6 +153,35 @@ def paged_flash_decode(
   return out.reshape(b, h, g, d)
 
 
+def packed_paged_flash_decode(
+    q: jax.Array,        # (B, H_kv, g, d)
+    k_pack: jax.Array,   # (P+1, L, H_kv, blk, d*bits/8) uint8
+    k_scale: jax.Array,  # (P+1, L, H_kv, blk, G) f16
+    k_min: jax.Array,
+    v_pack: jax.Array,
+    v_scale: jax.Array,
+    v_min: jax.Array,
+    tables: jax.Array,   # (B, nb) int32
+    layer: jax.Array,    # scalar int32
+    length: jax.Array,   # (B,) valid tokens per row
+    scale: float,
+    bits: int,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+  """Block-table-native flash decode over sub-byte packed pooled K/V
+  (exact policy with `kv_resident_codec` q4/q8): mapped code pages are
+  bit-unpacked and dequantized in VMEM, never densified in HBM."""
+  b, h, g, d = q.shape
+  bh = b * h
+  tables_bh = jnp.repeat(tables.astype(jnp.int32), h, axis=0)
+  length_bh = jnp.repeat(length.astype(jnp.int32), h, axis=0)
+  out = _pfd.packed_paged_flash_decode_kernel(
+      q.reshape(bh, g, d), k_pack, k_scale, k_min, v_pack, v_scale, v_min,
+      tables_bh, jnp.reshape(layer, (1,)).astype(jnp.int32), length_bh,
+      scale=scale, bits=bits, interpret=_auto_interpret(interpret))
+  return out.reshape(b, h, g, d)
+
+
 def kmeans_assign(
     x: jax.Array,          # (m, N, dsub)
     centroids: jax.Array,  # (m, K, dsub)

@@ -43,6 +43,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import _compat
+from repro.kernels import packing
 
 NEG_INF = -1e30
 
@@ -235,3 +236,109 @@ def paged_flash_decode_kernel(
       interpret=interpret,
       name="paged_flash_decode",
   )(tables, layer, length, q, k_pool, v_pool)
+
+
+def _packed_paged_flash_decode_kernel(
+    tables_ref,            # (BH, nb) int32 — per-slot block tables
+    layer_ref,             # (1,) int32
+    length_ref,            # (BH,) int32
+    q_ref,                 # (1, g, d)
+    kp_ref,                # (1, 1, 1, blk, dp) uint8 — packed K codes
+    ks_ref,                # (1, 1, 1, blk, G) f16 — K group scales
+    km_ref,                # (1, 1, 1, blk, G) f16 — K group minima
+    vp_ref, vs_ref, vm_ref,
+    out_ref,               # (1, g, d) f32
+    acc_ref, m_ref, l_ref,
+    *, scale: float, blk: int, n_blocks: int, bits: int, group: int,
+):
+  bh = pl.program_id(0)
+  j = pl.program_id(1)
+  g, d = q_ref.shape[1], q_ref.shape[2]
+
+  @pl.when(j == 0)
+  def _init():
+    _init_scratch(g, d, acc_ref, m_ref, l_ref)
+
+  length = length_ref[bh]
+  pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)[0]
+
+  @pl.when(j * blk < length)
+  def _block():
+    # widen the nibble pages in VMEM: the only HBM reads are the packed
+    # codes + f16 headers — ~0.35x the bytes of the float block
+    k = packing.dequant_page(kp_ref[0, 0, 0], ks_ref[0, 0, 0],
+                             km_ref[0, 0, 0], bits=bits, group=group)
+    v = packing.dequant_page(vp_ref[0, 0, 0], vs_ref[0, 0, 0],
+                             vm_ref[0, 0, 0], bits=bits, group=group)
+    _accumulate_block(q_ref[0].astype(jnp.float32), k, v,
+                      pos < length, scale, acc_ref, m_ref, l_ref)
+
+  @pl.when(j == n_blocks - 1)
+  def _done():
+    _finalize(out_ref, acc_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "bits", "interpret"))
+def packed_paged_flash_decode_kernel(
+    q: jax.Array,          # (BH, g, d)
+    k_pack: jax.Array,     # (P+1, L, H, blk, d*bits/8) uint8
+    k_scale: jax.Array,    # (P+1, L, H, blk, G) f16
+    k_min: jax.Array,      # (P+1, L, H, blk, G) f16
+    v_pack: jax.Array,
+    v_scale: jax.Array,
+    v_min: jax.Array,
+    tables: jax.Array,     # (BH, nb) int32 — logical block j -> pool block
+    layer: jax.Array,      # (1,) int32
+    length: jax.Array,     # (BH,) int32 — valid tokens per row
+    scale: float,
+    bits: int,
+    interpret: bool = True,
+) -> jax.Array:
+  """Block-table-native flash decode over *packed* pooled K/V.
+
+  Same grid/scratch structure as `paged_flash_decode_kernel`; the two float
+  pool inputs become six (codes + f16 scale/min per tensor) and each mapped
+  block is bit-unpacked and dequantized in VMEM before the flash accumulate.
+  """
+  bhn, g, d = q.shape
+  n_heads = k_pack.shape[2]
+  blk = k_pack.shape[3]
+  dp = k_pack.shape[4]
+  n_groups = k_scale.shape[4]
+  group = d // n_groups
+  n_blocks = tables.shape[1]
+  kernel = functools.partial(
+      _packed_paged_flash_decode_kernel, scale=scale, blk=blk,
+      n_blocks=n_blocks, bits=bits, group=group)
+
+  def pool_spec(width):
+    return pl.BlockSpec(
+        (1, 1, 1, blk, width),
+        lambda bh, j, tbl, lyr, L: (tbl[bh, j], lyr[0], bh % n_heads, 0, 0))
+
+  return pl.pallas_call(
+      kernel,
+      grid_spec=_compat.scalar_grid_spec(
+          num_scalar_prefetch=3,
+          grid=(bhn, n_blocks),
+          in_specs=[
+              pl.BlockSpec((1, g, d), lambda bh, j, tbl, lyr, L: (bh, 0, 0)),
+              pool_spec(dp), pool_spec(n_groups), pool_spec(n_groups),
+              pool_spec(dp), pool_spec(n_groups), pool_spec(n_groups),
+          ],
+          out_specs=pl.BlockSpec((1, g, d),
+                                 lambda bh, j, tbl, lyr, L: (bh, 0, 0)),
+          scratch_shapes=[
+              pltpu.VMEM((g, d), jnp.float32),
+              pltpu.VMEM((g, 1), jnp.float32),
+              pltpu.VMEM((g, 1), jnp.float32),
+          ],
+      ),
+      out_shape=jax.ShapeDtypeStruct((bhn, g, d), jnp.float32),
+      compiler_params=_compat.compiler_params(
+          dimension_semantics=("arbitrary", "arbitrary")),
+      interpret=interpret,
+      name="packed_paged_flash_decode",
+  )(tables, layer, length, q, k_pack, k_scale, k_min,
+    v_pack, v_scale, v_min)

@@ -371,6 +371,16 @@ class ServeEngine:
         mesh_shards=plan.size if plan is not None else 1,
         mesh_mode=plan.mode if plan is not None else "none")
 
+  def kv_bytes(self) -> dict:
+    """Stats-json `kv_bytes` section: the codecs shaping KV storage plus
+    what the layout's live arrays actually occupy — the packed-codec
+    capacity claim measured on allocated buffers, not modeled."""
+    info = dict(spill_codec=self.cfg.spill_codec,
+                kv_resident_codec=self.cfg.kv_resident_codec)
+    if hasattr(self.layout, "bytes"):
+      info.update(self.layout.bytes(active_slots=self.active_count))
+    return info
+
   def mesh_info(self) -> dict:
     """Stats-json `mesh` section: the resolved plan plus what each shard
     actually holds (pool bytes split sharded/replicated)."""

@@ -70,6 +70,30 @@ def test_decode_kernel_flag_reaches_config_and_layout(argv, want_key, native):
   assert getattr(eng.layout, "block_native", False) == native
 
 
+def test_kv_resident_codec_flag_reaches_policy():
+  """--kv-resident-codec q4 must swap the exact policy's resident store to
+  the packed variant (same 'exact' registry key, storage-format switch)."""
+  from repro.core import cache_api
+  args, eng = _engine_for(BASE + ["--cache-policy", "exact",
+                                  "--cache-layout", "paged",
+                                  "--scheduler", "paged",
+                                  "--kv-block-size", "8",
+                                  "--kv-resident-codec", "q4"])
+  assert eng.cfg.kv_resident_codec == args.kv_resident_codec == "q4"
+  policy = eng.model.cache_policy
+  assert isinstance(policy, cache_api.PackedExactPolicy)
+  assert policy.bits == 4
+
+
+def test_unknown_codec_flags_fail_at_argparse_with_choices():
+  # registry-driven choices: the parser itself rejects unknown keys and its
+  # usage error lists the valid set (SystemExit, not a deep ValueError)
+  for flag in ("--spill-codec", "--kv-resident-codec"):
+    with pytest.raises(SystemExit):
+      serve.make_parser().parse_args(BASE + [flag, "zstd"])
+  assert set(serve.make_parser().get_default("spill_codec").split()) == {"raw"}
+
+
 def test_prefix_cache_flags_reach_engine_and_layout():
   args, eng = _engine_for(BASE + ["--cache-policy", "exact",
                                   "--cache-layout", "paged",
