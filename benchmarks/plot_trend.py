@@ -110,6 +110,31 @@ def _packed_resident(run: dict):
   return (run.get("packed") or {}).get("resident_q4_vs_fp32_bytes")
 
 
+def _shed_goodput_gain(run: dict):
+  """SLO-shedding goodput tok/s over the stalling baseline on the overload
+  trace (> 1 = shedding doomed work helps the survivors); None on records
+  predating PR 9."""
+  return (run.get("recovery") or {}).get("shedding", {}).get(
+      "shed_vs_stall_goodput")
+
+
+def _restored_blocks(run: dict):
+  """Prefix blocks a restarted engine revived from the snapshot; None on
+  records predating PR 9."""
+  return (run.get("recovery") or {}).get("restore", {}).get(
+      "restored_prefix_blocks")
+
+
+def _warm_hit_tokens(run: dict):
+  return (run.get("recovery") or {}).get("restore", {}).get(
+      "warm_hit_tokens")
+
+
+def _cold_hit_tokens(run: dict):
+  return (run.get("recovery") or {}).get("restore", {}).get(
+      "cold_hit_tokens")
+
+
 def _mesh_cell(run: dict, policy: str, size: int) -> dict:
   """One sharded-serving cell; {} on records predating PR 7."""
   pols = (run.get("mesh") or {}).get("policies", {})
@@ -181,6 +206,8 @@ def render_terminal(runs: list) -> None:
       ("shard B x4 pq ", [_mesh_bytes_frac(r, "pq", 4) for r in runs]),
       ("q4/int8 spill ", [_packed_spill(r) for r in runs]),
       ("q4/fp32 pool  ", [_packed_resident(r) for r in runs]),
+      ("shed/stall gp ", [_shed_goodput_gain(r) for r in runs]),
+      ("restored blks ", [_restored_blocks(r) for r in runs]),
   ):
     vals = [v for v in series if v is not None]
     if vals:
@@ -202,7 +229,7 @@ def render_png(runs: list, path: str) -> bool:
           "the dashboard)")
     return False
   xs = list(range(len(runs)))
-  fig, axes = plt.subplots(7, 1, figsize=(8, 16), sharex=True)
+  fig, axes = plt.subplots(8, 1, figsize=(8, 18), sharex=True)
   axes[0].plot(xs, [_policy_toks(r, "pq") for r in runs], marker="o",
                label="pq")
   axes[0].plot(xs, [_policy_toks(r, "exact") for r in runs], marker="s",
@@ -256,8 +283,16 @@ def render_png(runs: list, path: str) -> bool:
   axes[6].axhline(0.55, ls="--", lw=1, color="gray")
   axes[6].axhline(0.30, ls=":", lw=1, color="gray")
   axes[6].set_ylabel("packed bytes\n(frac of baseline)")
-  axes[6].set_xlabel("run")
   axes[6].legend(loc="best")
+  # fault-tolerant serving (records before PR 9 plot as gaps)
+  axes[7].plot(xs, [_shed_goodput_gain(r) for r in runs], marker="o",
+               color="tab:red", label="shed/stall goodput")
+  axes[7].plot(xs, [_restored_blocks(r) for r in runs], marker="s",
+               color="tab:green", label="restored prefix blocks")
+  axes[7].axhline(1.0, ls="--", lw=1, color="gray")
+  axes[7].set_ylabel("recovery")
+  axes[7].set_xlabel("run")
+  axes[7].legend(loc="best")
   fig.tight_layout()
   fig.savefig(path, dpi=120)
   plt.close(fig)

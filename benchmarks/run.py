@@ -28,6 +28,13 @@ Since PR 8 a ``packed`` section measures the sub-byte KV codecs: q4/q8
 spill traffic vs int8 on the forced-spill trace, and the resident-q4
 exact policy's pool footprint + kernel-vs-XLA greedy-token identity; the
 trajectory file keeps only the newest ``BENCH_HISTORY_KEEP`` records.
+
+Since PR 9 a ``recovery`` section measures fault-tolerant serving: SLO
+shedding vs stalling goodput on an overload trace, corrupted-spill-page
+recovery (survivor tokens bit-identical to the fault-free oracle), and
+prefix-cache snapshot/restore (a restarted engine's warm hit tokens beat
+cold).  The trajectory file itself is written atomically (temp +
+``os.replace``) so a crashed bench never leaves a torn history.
 """
 import argparse
 import json
@@ -580,6 +587,142 @@ def run_packed_codecs(arch: str = "tinyllama-1.1b", prompt_len: int = 352,
   return out
 
 
+def run_recovery(arch: str = "tinyllama-1.1b", n_requests: int = 16,
+                 seed: int = 3, pcie_gbps: float = 0.002) -> dict:
+  """Fault-tolerant serving measurements (PR 9), three legs.
+
+  Shedding: an overload trace (tight SLOs against the fixed virtual-clock
+  decode budget, small device pool) through the SLO-enforcing engine
+  (`--scheduler slo --slo-enforce`) vs the stalling baseline on the
+  identical trace.  The headline is `shed_vs_stall_goodput`: shedding
+  doomed requests early must *raise* goodput tok/s — the survivors make
+  their deadlines instead of everyone missing together.
+
+  Faults: the corrupt-spill plan (checksummed spill frames, recovery via
+  recompute-prefill) over the forced-spill trace, asserting surviving
+  requests' greedy tokens match the fault-free oracle bit for bit.
+
+  Restore: a shared-prefix trace served, the prefix cache snapshotted
+  (checkpoint/ckpt.py), and a *fresh* engine restored from it replaying
+  the trace — warm prefix hit-tokens must beat the cold engine's, with
+  bit-identical token streams.
+  """
+  import dataclasses
+  import tempfile
+  from repro.configs import get_arch
+  from repro.launch import slo as slo_lib
+  from repro.launch import workload as wl
+  from repro.launch.engine import ServeEngine
+  from repro.runtime.fault_tolerance import make_fault_plan
+
+  sz = dict(context_len=64, prompt_capacity=32, num_blocks=5,
+            host_blocks=24, prompt_len=(20, 30), gen=(10, 16))
+  cfg = dataclasses.replace(
+      get_arch(arch, reduced=True), cache_policy="exact",
+      dtype_str="bfloat16", cache_layout="tiered", scheduler="tiered",
+      kv_block_size=16)
+  params_box: dict = {}
+
+  def tiered(scheduler="tiered", **kw):
+    c = dataclasses.replace(cfg, scheduler=scheduler)
+    eng = ServeEngine(c, context_len=sz["context_len"], max_batch=2,
+                      prompt_capacity=sz["prompt_capacity"],
+                      num_blocks=sz["num_blocks"],
+                      host_blocks=sz["host_blocks"],
+                      params=params_box.get("p"),
+                      clock=wl.VirtualClock(), **kw)
+    params_box["p"] = eng.params
+    eng.layout.ledger.pcie_gbps = pcie_gbps
+    return eng
+
+  out = {"cache_layout": "tiered", "batch": 2, "kv_block_size": 16,
+         "n_requests": n_requests, "seed": seed, "pcie_gbps": pcie_gbps}
+
+  # --- shedding vs stalling under overload -------------------------------
+  tight = slo_lib.SLOSpec(ttft_s=0.02, tpot_s=0.002)
+  tenant = wl.TenantSpec(prompt_len=sz["prompt_len"],
+                         max_new_tokens=sz["gen"], slo=tight)
+  over = wl.WorkloadSpec(arrival="poisson", rate=400.0, burstiness=6.0,
+                         n_requests=n_requests, seed=seed, tenants=(tenant,))
+  shed_eng = tiered(scheduler="slo", slo_enforce=True)
+  r_shed = wl.WorkloadDriver(shed_eng, over).run()
+  stall_eng = tiered()
+  r_stall = wl.WorkloadDriver(stall_eng, over).run()
+  out["shedding"] = {
+      "scheduler": "slo",
+      "shed_requests": shed_eng.stats.shed_requests,
+      "degradation_state": shed_eng.stats.degradation_state,
+      "degradation_transitions": len(shed_eng.stats.degradation_transitions),
+      "goodput_tok_s": r_shed.report["goodput_tok_s"],
+      "goodput_frac": r_shed.report["goodput_frac"],
+      "goodput_tok_s_no_shedding": r_stall.report["goodput_tok_s"],
+      "goodput_frac_no_shedding": r_stall.report["goodput_frac"],
+      "shed_vs_stall_goodput": (
+          round(r_shed.report["goodput_tok_s"]
+                / r_stall.report["goodput_tok_s"], 4)
+          if r_stall.report["goodput_tok_s"] else None),
+  }
+  print(f"recovery[shedding]: goodput {r_shed.report['goodput_tok_s']} "
+        f"tok/s shedding ({shed_eng.stats.shed_requests} shed) vs "
+        f"{r_stall.report['goodput_tok_s']} tok/s stalling")
+
+  # --- corrupted spill pages: survivors bit-identical to the oracle ------
+  base = wl.WorkloadSpec(
+      arrival="poisson", rate=400.0, burstiness=6.0, n_requests=8,
+      seed=seed, tenants=(wl.TenantSpec(prompt_len=sz["prompt_len"],
+                                        max_new_tokens=sz["gen"]),))
+  oracle_eng = tiered()
+  r_oracle = wl.WorkloadDriver(oracle_eng, base).run()
+  fault_eng = tiered(fault_injector=make_fault_plan(
+      "corrupt-spill", 1.0, seed=seed, max_failures=2))
+  r_fault = wl.WorkloadDriver(fault_eng, base).run()
+  survivors_ok = all(
+      toks == r_oracle.token_streams[i]
+      for i, toks in r_fault.token_streams.items()
+      if i not in r_fault.failed_indices)
+  out["faults"] = {
+      "kind": "corrupt-spill",
+      "corrupt_pages": fault_eng.stats.corrupt_pages,
+      "failed": len(r_fault.failed_indices),
+      "survivor_tokens_identical": survivors_ok,
+  }
+  print(f"recovery[faults]: {fault_eng.stats.corrupt_pages} corrupt pages "
+        f"recovered, survivors identical={survivors_ok}")
+
+  # --- snapshot/restore: warm prefix hits after a restart ----------------
+  def paged(snapshot_dir=None):
+    c = dataclasses.replace(cfg, cache_layout="paged", scheduler="paged")
+    return ServeEngine(c, context_len=sz["context_len"], max_batch=2,
+                       prompt_capacity=sz["prompt_capacity"], num_blocks=10,
+                       prefix_cache=True, params=params_box.get("p"),
+                       clock=wl.VirtualClock(), snapshot_dir=snapshot_dir)
+
+  shared = wl.WorkloadSpec(
+      arrival="poisson", rate=200.0, n_requests=6, seed=seed + 2,
+      tenants=(wl.TenantSpec(prompt_len=(20, 28), max_new_tokens=(6, 10),
+                             shared_prefix_len=16),))
+  with tempfile.TemporaryDirectory() as snap_dir:
+    e1 = paged(snapshot_dir=snap_dir)
+    wl.WorkloadDriver(e1, shared).run()
+    e1.save_snapshot(step=1)
+    warm = paged(snapshot_dir=snap_dir)
+    r_warm = wl.WorkloadDriver(warm, shared).run()
+    cold = paged()
+    r_cold = wl.WorkloadDriver(cold, shared).run()
+  tokens_ok = r_warm.token_streams == r_cold.token_streams
+  out["restore"] = {
+      "restored_prefix_blocks": warm.stats.restored_prefix_blocks,
+      "warm_hit_tokens": warm.layout.prefix_index.hit_tokens,
+      "cold_hit_tokens": cold.layout.prefix_index.hit_tokens,
+      "tokens_identical": tokens_ok,
+  }
+  print(f"recovery[restore]: {warm.stats.restored_prefix_blocks} blocks "
+        f"restored, hit tokens {cold.layout.prefix_index.hit_tokens} cold "
+        f"-> {warm.layout.prefix_index.hit_tokens} warm, "
+        f"tokens identical={tokens_ok}")
+  return out
+
+
 #: --json keeps this many newest run records; the trajectory file was
 #: growing ~400 lines per PR unbounded.  Legacy records (including a
 #: pre-trajectory single-record file, migrated by _load_history) are
@@ -648,6 +791,12 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
   else:
     record["packed"] = None
     print(f"packed codecs: skipped ({arch} family not engine-servable)")
+  if get_arch(arch, reduced=True).family == "dense":
+    record["recovery"] = run_recovery(arch)
+  else:
+    # the restore leg needs the prefix cache's chunked suffix prefill
+    record["recovery"] = None
+    print(f"recovery: skipped ({arch} family has no prefix cache)")
   history = _load_history(out_path)
   history.append(record)
   dropped = len(history) - BENCH_HISTORY_KEEP
@@ -655,9 +804,8 @@ def run_serve_json(out_path: str, arch: str = "tinyllama-1.1b",
     history = history[-BENCH_HISTORY_KEEP:]
     print(f"pruned {dropped} oldest run record(s); keeping the newest "
           f"{BENCH_HISTORY_KEEP}")
-  with open(out_path, "w") as f:
-    json.dump({"runs": history}, f, indent=2)
-    f.write("\n")
+  from repro.launch.serve import write_json_atomic
+  write_json_atomic(out_path, {"runs": history})
   print(f"appended run {len(history)} to {out_path}")
   return 0
 

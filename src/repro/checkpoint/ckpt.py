@@ -117,6 +117,26 @@ def latest_step(path: str) -> Optional[int]:
   return max(steps) if steps else None
 
 
+def load_raw(path: str, step: int) -> Tuple[dict, dict]:
+  """Restore a checkpoint without a target template: ``({name: array},
+  extra)``, arrays staying host-side numpy.
+
+  For consumers that own their tree layout and rebuild from leaf names
+  (the serve engine's prefix-cache snapshot).  Dtypes round-trip via the
+  manifest — bit-stored ml_dtypes leaves (bf16) are re-viewed."""
+  d = os.path.join(path, f"step_{step:08d}")
+  with open(os.path.join(d, "manifest.json")) as f:
+    manifest = json.load(f)
+  out = {}
+  for meta in manifest["leaves"]:
+    arr = np.load(os.path.join(d, meta["name"] + ".npy"))
+    saved_dtype = np.dtype(meta["dtype"])
+    if arr.dtype != saved_dtype:         # bit-stored ml_dtypes leaf
+      arr = arr.view(saved_dtype)
+    out[meta["name"]] = arr
+  return out, manifest.get("extra", {})
+
+
 def restore(path: str, step: int, target: PyTree,
             shardings: Optional[PyTree] = None) -> Tuple[PyTree, dict]:
   """Restore into the target tree structure, resharding to `shardings`.

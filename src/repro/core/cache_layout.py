@@ -50,7 +50,7 @@ slot-insert) so paging adds no per-step recompilation.
 from __future__ import annotations
 
 import collections
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -840,6 +840,113 @@ class PagedLayout(CacheLayout):
       self.manager.allocator.free(released, owner=pfx.INDEX_OWNER)
     return len(released)
 
+  # -- crash-safe snapshot/restore -------------------------------------------
+  def prefix_snapshot(self) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Host snapshot of the prefix cache: every index-held pool block's
+    contents plus the trie/full-entry structure, as a ckpt-able
+    ``{name: array}`` tree + JSON-able metadata.
+
+    Block ids are positional: the tree stores the held blocks' rows in
+    sorted-id order and the metadata references blocks by *position in
+    that order* — restore allocates fresh physical ids and remaps, so a
+    snapshot restores into any pool with room for it (the ids the saving
+    pool happened to use mean nothing to the restoring one).
+    """
+    idx = self._require_prefix()
+    paths = idx.chain_paths()
+    fulls = idx.full_values()
+    held = {bid for _, bids in paths for bid in bids}
+    held.update(bid for e in fulls for bid in e.block_ids)
+    ids = sorted(held)
+    pos = {bid: p for p, bid in enumerate(ids)}
+    tree: Dict[str, np.ndarray] = {}
+    axes_leaves = jax.tree_util.tree_leaves(self._axes)
+    if ids:
+      sel = jnp.asarray(ids, jnp.int32)
+      for k, (ax, st) in enumerate(
+          zip(axes_leaves, jax.tree_util.tree_leaves(self.storage))):
+        if ax == RESIDENT:
+          continue
+        tree[f"pool_{k}"] = np.asarray(st[sel])
+    full_meta = []
+    for i, e in enumerate(fulls):
+      resident = []
+      for k, row in enumerate(e.resident_rows):
+        resident.append(row is not None)
+        if row is not None:
+          tree[f"full_{i}_r{k}"] = np.asarray(row)
+      full_meta.append(dict(
+          tokens=[int(t) for t in e.tokens],
+          pairs=[[int(j), pos[bid]] for j, bid in e.pairs],
+          hwm=int(e.hwm), first_token=int(e.first_token),
+          tail_j=None if e.tail_j is None else int(e.tail_j),
+          resident=resident))
+    extra = dict(
+        kind="prefix-cache", block=self.block, n_blocks=len(ids),
+        chains=[[list(toks), [pos[b] for b in bids]]
+                for toks, bids in paths],
+        fulls=full_meta)
+    return tree, extra
+
+  def prefix_restore(self, tree: Dict[str, np.ndarray], extra: dict) -> int:
+    """Rebuild the prefix cache from a `prefix_snapshot` tree.
+
+    Meant for engine construction (empty tables, empty index): allocates
+    fresh physical blocks under the index owner tag, scatters the saved
+    contents, and re-publishes chains + full entries with block ids
+    remapped to the new allocation.  Conservatively returns 0 — restoring
+    nothing, which is always safe — when the snapshot is empty, was taken
+    under a different block size, exceeds this layout's index budget, or
+    the pool cannot hold it.  Returns the number of restored blocks.
+    """
+    if not self.prefix_enabled:
+      return 0
+    idx = self._require_prefix()
+    if (extra.get("kind") != "prefix-cache"
+        or int(extra.get("block", -1)) != self.block):
+      return 0
+    n = int(extra.get("n_blocks", 0))
+    if n == 0 or n > idx.budget_blocks:
+      return 0
+    mgr = self.manager
+    new_ids = mgr.allocator.alloc(n, owner=pfx.INDEX_OWNER)
+    if new_ids is None:
+      return 0
+    sel = jnp.asarray(new_ids, jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten(self.storage)
+    out = []
+    for k, (ax, st) in enumerate(
+        zip(jax.tree_util.tree_leaves(self._axes), leaves)):
+      if ax != RESIDENT:
+        st = st.at[sel].set(jnp.asarray(tree[f"pool_{k}"]).astype(st.dtype))
+      out.append(st)
+    self.storage = jax.tree_util.tree_unflatten(treedef, out)
+    if self.prefix_shareable:
+      for toks, poss in extra.get("chains", []):
+        idx.extend(toks, [new_ids[p] for p in poss])
+    for i, meta in enumerate(extra.get("fulls", [])):
+      rows = [np.asarray(tree[f"full_{i}_r{k}"]) if flag else None
+              for k, flag in enumerate(meta["resident"])]
+      idx.put_full(pfx.FullEntry(
+          tokens=tuple(int(t) for t in meta["tokens"]),
+          pairs=[(int(j), new_ids[p]) for j, p in meta["pairs"]],
+          hwm=int(meta["hwm"]), resident_rows=rows,
+          first_token=int(meta["first_token"]), tail_j=meta["tail_j"]))
+    # reconcile pool holds with the rebuilt ledger: alloc() took one hold
+    # per block, but the index may hold a block several times (chain node
+    # + full entries) or — when a unit was gated off, e.g. chains on a
+    # non-shareable policy — not at all
+    restored = 0
+    for bid in new_ids:
+      holds = idx.holds(bid)
+      if holds > 1:
+        mgr.allocator.ref([bid] * (holds - 1), owner=pfx.INDEX_OWNER)
+      elif holds == 0:
+        mgr.allocator.free([bid], owner=pfx.INDEX_OWNER)
+      if holds:
+        restored += 1
+    return restored
+
   def _make_allocator(self, num_blocks: int):
     """Pool-construction hook: TieredLayout substitutes a device-tier view
     of a refcounted two-tier pool."""
@@ -1112,7 +1219,9 @@ class TieredLayout(PagedLayout):
         rid=rid, length=length, hwm=hwm,
         pairs=[(j, hid) for (j, _), hid in zip(live, host_ids)],
         payloads=payloads, resident_rows=resident_rows,
-        shared_pairs=list(shared))
+        shared_pairs=list(shared),
+        checksums=[None if p is None else tiersmod.payload_checksum(p[1])
+                   for p in payloads])
     if shared:
       # pin shared blocks device-resident across the swap-out: the slot's
       # hold is about to be released and the index may evict at any time
@@ -1154,7 +1263,14 @@ class TieredLayout(PagedLayout):
     if ids is None:
       return False
     rec.device_ids = ids
-    rec.staged = self._decode_payloads(rec)
+    try:
+      rec.staged = self._decode_payloads(rec)
+    except tiersmod.SpillPageCorruption:
+      # roll the allocation back before surfacing: the record stays SPILLED
+      # and the destination blocks return to the free pool (no leak)
+      self.pool.unref(ids, owner=("fetch", rid))
+      rec.device_ids = None
+      raise
     rec.state = tiersmod.BLOCK_IN_FLIGHT
     self.ledger.record_fetch(rec.nbytes, rec.raw_bytes, rec.n_blocks)
     return True
@@ -1173,7 +1289,13 @@ class TieredLayout(PagedLayout):
             f"device pool exhausted fetching request {rid} "
             f"(need {rec.n_blocks}, free {mgr.free_count})")
       rec.device_ids = ids
-      rec.staged = self._decode_payloads(rec)
+      try:
+        rec.staged = self._decode_payloads(rec)
+      except tiersmod.SpillPageCorruption:
+        self.pool.unref(ids, owner=("fetch", rid))
+        rec.device_ids = None
+        self.records[rid] = rec           # restore: still SPILLED, no leak
+        raise
       self.ledger.record_fetch(rec.nbytes, rec.raw_bytes, rec.n_blocks)
     dev_ids = list(rec.device_ids or [])
     self.pool.set_state(dev_ids, tiersmod.BLOCK_RESIDENT)
@@ -1240,9 +1362,41 @@ class TieredLayout(PagedLayout):
     return rec.n_blocks
 
   def _decode_payloads(self, rec):
+    # verify the frame checksums stamped at spill time before decoding:
+    # a corrupted host page must never be scattered into decodable storage
+    sums = rec.checksums or [None] * len(rec.payloads)
+    for p, want in zip(rec.payloads, sums):
+      if p is None or want is None:
+        continue
+      if tiersmod.payload_checksum(p[1]) != want:
+        raise tiersmod.SpillPageCorruption(
+            f"request {rec.rid}: spilled page checksum mismatch "
+            f"(codec {p[0]!r})")
     return [None if p is None else
             tiersmod.get_codec(p[0]).decode(p[1], p[2], p[3])
             for p in rec.payloads]
+
+  def corrupt_spilled(self, rid: int) -> bool:
+    """Flip one byte in a spilled request's first encoded page (fault
+    injection): the stored checksum goes stale, so the next fetch attempt
+    raises `SpillPageCorruption` instead of decoding garbage.  Returns
+    False when the request has no encoded host-tier payload to corrupt."""
+    rec = self.records.get(rid)
+    if rec is None:
+      return False
+    for p in rec.payloads:
+      if p is None:
+        continue
+      enc = p[1]
+      arrs = ([v for v in (enc[k] for k in sorted(enc))
+               if isinstance(v, np.ndarray)]
+              if isinstance(enc, dict) else
+              [enc] if isinstance(enc, np.ndarray) else [])
+      for a in arrs:
+        if a.nbytes:
+          a.view(np.uint8).reshape(-1)[0] ^= 0xFF
+          return True
+    return False
 
   # -- compute ---------------------------------------------------------------
   def decode(self, params, cur, lengths):

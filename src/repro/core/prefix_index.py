@@ -218,6 +218,28 @@ class PrefixIndex:
       holds.append(bid)
     return holds
 
+  # -- snapshot (crash-safe restart) -----------------------------------------
+  def chain_paths(self) -> List[Tuple[Tuple[int, ...], List[int]]]:
+    """Root-to-leaf (tokens, block_ids) paths.  The trie is fully
+    determined by its leaf paths, so re-`extend`ing each one (with block
+    ids remapped to the restored pool's allocation) rebuilds an identical
+    structure — interior nodes dedup on the shared prefixes."""
+    out: List[Tuple[Tuple[int, ...], List[int]]] = []
+    stack: List[Tuple[_Node, List[int], List[int]]] = [(self._root, [], [])]
+    while stack:
+      node, toks, ids = stack.pop()
+      if not node.children:
+        if node is not self._root:
+          out.append((tuple(toks), ids))
+        continue
+      for blk, child in sorted(node.children.items()):
+        stack.append((child, toks + list(blk), ids + [child.block_id]))
+    return out
+
+  def full_values(self) -> List[FullEntry]:
+    """Published full-prompt entries, insertion-ordered (snapshot view)."""
+    return list(self._full.values())
+
   # -- eviction --------------------------------------------------------------
   def evict_for(self, incoming_blocks: int, in_use=None) -> List[int]:
     """Make room for `incoming_blocks` new holds under the budget; returns

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -402,9 +403,10 @@ class PackedSpillCodec(SpillCodec):
 
   Layout per group of 32 consecutive values: f16 scale + f16 min (4 B
   header) followed by the bit-packed codes — q4 split-half packs a group
-  into 16 B (0.625 B/value), q8 stores one byte per code (1.125 B/value).
-  Against Int8SpillCodec's per-row f32 scale/zero (1 B/value + 8 B/row)
-  this roughly halves the boundary traffic again.
+  into 16 B (0.625 B/value), q5 adds a fifth-bit mask plane (4 B/group,
+  0.75 B/value), q8 stores one byte per code (1.125 B/value).  Against
+  Int8SpillCodec's per-row f32 scale/zero (1 B/value + 8 B/row) this
+  roughly halves the boundary traffic again.
 
   Tail groups are padded by replicating the final value — padding with
   zeros would widen the last group's dynamic range and degrade every real
@@ -433,16 +435,30 @@ class PackedSpillCodec(SpillCodec):
     safe = np.where(s32 > 0, s32, 1.0)
     q = np.clip(np.rint((xg - mn.astype(np.float32)[:, None])
                         / safe[:, None]), 0, qmax).astype(np.uint8)
+    payload = dict(scale=scale, mn=mn, count=count)
+    half = self.GROUP // 2
     if self.bits == 4:
-      half = self.GROUP // 2
-      q = (q[:, :half] | (q[:, half:] << 4)).astype(np.uint8)
-    payload = dict(q=q, scale=scale, mn=mn, count=count)
-    return payload, q.nbytes + scale.nbytes + mn.nbytes
+      payload["q"] = (q[:, :half] | (q[:, half:] << 4)).astype(np.uint8)
+    elif self.bits == 5:
+      # low nibbles in the q4 split-half layout + fifth-bit mask plane
+      # (LSB-first within each byte, matching kernels/packing.pack_u5)
+      lo = q & 0xF
+      payload["q"] = (lo[:, :half] | (lo[:, half:] << 4)).astype(np.uint8)
+      payload["hi"] = np.packbits(((q >> 4) & 1).astype(np.uint8), axis=1,
+                                  bitorder="little")
+    else:
+      payload["q"] = q
+    nbytes = sum(v.nbytes for k, v in payload.items() if k != "count")
+    return payload, nbytes
 
   def decode(self, payload: Any, shape, dtype) -> np.ndarray:
     q = payload["q"]
-    if self.bits == 4:
+    if self.bits in (4, 5):
       q = np.concatenate([q & 0xF, (q >> 4) & 0xF], axis=1)
+    if self.bits == 5:
+      bit = np.unpackbits(payload["hi"], axis=1,
+                          bitorder="little")[:, :self.GROUP]
+      q = q | (bit << 4)
     xg = (q.astype(np.float32) * payload["scale"].astype(np.float32)[:, None]
           + payload["mn"].astype(np.float32)[:, None])
     return xg.reshape(-1)[:payload["count"]].reshape(shape).astype(dtype)
@@ -453,6 +469,11 @@ class Q4SpillCodec(PackedSpillCodec):
   bits = 4
 
 
+class Q5SpillCodec(PackedSpillCodec):
+  key = "q5"
+  bits = 5
+
+
 class Q8SpillCodec(PackedSpillCodec):
   key = "q8"
   bits = 8
@@ -460,7 +481,35 @@ class Q8SpillCodec(PackedSpillCodec):
 
 SPILL_CODECS: Dict[str, SpillCodec] = {
     c.key: c() for c in (RawSpillCodec, Int8SpillCodec,
-                         Q4SpillCodec, Q8SpillCodec)}
+                         Q4SpillCodec, Q5SpillCodec, Q8SpillCodec)}
+
+
+def payload_checksum(payload: Any) -> int:
+  """CRC32 over a spill payload's bytes (dict payloads folded key-sorted).
+
+  The frame checksum for corruption detection on fetch: cheap, order
+  deterministic, and codec-agnostic — raw arrays and dict payloads (packed
+  q/scale/mn planes, int8 q/scale/zero) hash the same way.
+  """
+  crc = 0
+  if isinstance(payload, dict):
+    for k in sorted(payload):
+      v = payload[k]
+      if isinstance(v, np.ndarray):
+        crc = zlib.crc32(np.ascontiguousarray(v).view(np.uint8).reshape(-1),
+                         crc)
+      else:
+        crc = zlib.crc32(repr(v).encode(), crc)
+  elif isinstance(payload, np.ndarray):
+    crc = zlib.crc32(np.ascontiguousarray(payload).view(np.uint8).reshape(-1),
+                     crc)
+  else:
+    crc = zlib.crc32(repr(payload).encode(), crc)
+  return crc
+
+
+class SpillPageCorruption(RuntimeError):
+  """A spilled page's stored checksum no longer matches its payload bytes."""
 
 
 def get_codec(key: str) -> SpillCodec:
@@ -576,6 +625,8 @@ class SpillRecord:
   staged: Optional[List[Optional[np.ndarray]]] = None
   shared_pairs: List[Tuple[int, int]] = dataclasses.field(
       default_factory=list)             # (logical_j, device_block_id)
+  checksums: List[Optional[int]] = dataclasses.field(
+      default_factory=list)             # per-payload CRC32 frame checksums
 
   @property
   def spill_owner(self) -> Tuple[str, int]:

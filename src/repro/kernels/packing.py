@@ -12,8 +12,11 @@ group stores
             concat of (p & 0xF, p >> 4) and channel order is preserved
             without any interleave shuffle (TPU-friendly: no gathers).
 
-q8 is the same layout with one byte per code.  Per-value cost:
-q4 = 0.625 B (group 32), q8 = 1.125 B, vs 2 B bf16 / 4 B f32.
+q8 is the same layout with one byte per code.  q5 stores the low nibble in
+the q4 split-half layout and appends a fifth-bit *mask plane* — one byte per
+8 channels, LSB-first — so unpacking is the q4 unpack plus one masked-or.
+Per-value cost: q4 = 0.625 B (group 32), q5 = 0.75 B, q8 = 1.125 B, vs
+2 B bf16 / 4 B f32.
 
 The quantization parameters are rounded through f16 *before* the codes are
 computed, so dequantizing with the stored f16 scale/min reproduces exactly
@@ -36,7 +39,7 @@ from jax.experimental import pallas as pl
 
 #: Resident-KV codec registry: CacheSpec.kv_resident_codec key -> code width.
 #: "none" keeps the dense float store (the pre-PR8 exact policy).
-RESIDENT_CODECS = {"none": 0, "q4": 4, "q8": 8}
+RESIDENT_CODECS = {"none": 0, "q4": 4, "q5": 5, "q8": 8}
 
 
 def group_size(d: int) -> int:
@@ -103,11 +106,38 @@ def unpack_u4(p: jax.Array) -> jax.Array:
   return jnp.concatenate([pi & 0xF, (pi >> 4) & 0xF], axis=-1)
 
 
+def pack_u5(q: jax.Array) -> jax.Array:
+  """(..., d) uint8 5-bit codes -> (..., 5*d//8) uint8.
+
+  Low nibbles in the q4 split-half layout (d/2 bytes) followed by the
+  fifth-bit mask plane: channel j's high bit lands in byte j // 8, bit
+  position j % 8 (LSB-first) — d/8 bytes.  Requires d % 8 == 0.
+  """
+  d = q.shape[-1]
+  lo = pack_u4(q & 0xF)
+  hb = ((q >> 4) & 1).astype(jnp.int32).reshape(q.shape[:-1] + (d // 8, 8))
+  weights = (jnp.int32(1) << jnp.arange(8, dtype=jnp.int32))
+  hi = jnp.sum(hb * weights, axis=-1).astype(jnp.uint8)
+  return jnp.concatenate([lo, hi], axis=-1)
+
+
+def unpack_u5(p: jax.Array) -> jax.Array:
+  """(..., 5*d//8) uint8 -> (..., d) int32 codes: q4 unpack + one masked-or."""
+  d = p.shape[-1] * 8 // 5
+  lo = unpack_u4(p[..., :d // 2])
+  hi = p[..., d // 2:].astype(jnp.int32)
+  shifts = jnp.arange(8, dtype=jnp.int32)
+  bit = ((hi[..., :, None] >> shifts) & 1).reshape(p.shape[:-1] + (d,))
+  return lo | (bit << 4)
+
+
 def pack_rows(x: jax.Array, *, bits: int, group: int):
   """x (..., d) float -> (packed uint8 (..., d*bits/8), scale f16, min f16)."""
   q, scale, mn = quantize_rows(x, bits=bits, group=group)
   if bits == 4:
     return pack_u4(q), scale, mn
+  if bits == 5:
+    return pack_u5(q), scale, mn
   return q, scale, mn
 
 
@@ -119,7 +149,12 @@ def dequant_page(pack: jax.Array, scale: jax.Array, mn: jax.Array,
   widen) and on the XLA reference path, which is what makes the two decode
   programs produce bit-identical attention inputs.
   """
-  q = unpack_u4(pack) if bits == 4 else pack.astype(jnp.int32)
+  if bits == 4:
+    q = unpack_u4(pack)
+  elif bits == 5:
+    q = unpack_u5(pack)
+  else:
+    q = pack.astype(jnp.int32)
   return dequantize_rows(q, scale, mn, group=group)
 
 

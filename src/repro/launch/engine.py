@@ -70,9 +70,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt as ckpt_lib
 from repro.common import timing
 from repro.configs.base import ModelConfig
 from repro.core import cache_registry
+from repro.core import tiers as tiersmod
 from repro.launch import mesh as mesh_lib
 from repro.launch import scheduler as scheduler_lib
 from repro.models import Model
@@ -99,6 +101,12 @@ class RequestHandle:
   # fault-tolerance (host-tier fetch faults, workload-harness injectable)
   fetch_failures: int = 0            # transient fetch faults survived so far
   failed: bool = False               # dropped after bounded fetch retries
+  # SLO admission control (PR 9): deadline from SLOSpec, tenant priority,
+  # and whether the engine shed this request instead of finishing it
+  deadline_s: Optional[float] = None
+  tenant: str = "default"
+  priority: int = 0                  # higher sheds later under pressure
+  shed: bool = False                 # cancelled by SLO/pressure shedding
   # virtual-clock timestamps (None on wall-clock engines); the workload
   # harness folds these into per-request TTFT/TPOT/queueing SLO metrics
   submitted_step: Optional[int] = None
@@ -138,6 +146,18 @@ class EngineStats:
   fetch_failures: int = 0        # injected/transient fetch faults (requeued)
   fetch_aborts: int = 0          # IN_FLIGHT transfers rolled back to SPILLED
   failed_requests: int = 0       # dropped after exhausting bounded retries
+  # multi-surface fault injection + SLO shedding (PR 9)
+  shed_requests: int = 0         # cancelled by deadline/pressure shedding
+  pressure_sheds: int = 0        # sheds triggered by pool exhaustion
+  alloc_spikes: int = 0          # transient allocator-exhaustion injections
+  decode_faults: int = 0         # transient decode-step faults retried
+  corrupt_pages: int = 0         # corrupted spill pages detected + recovered
+  restored_prefix_blocks: int = 0  # prefix blocks revived from a snapshot
+  # graceful-degradation state machine: current state plus the transition
+  # log (bounded; each entry records step/virtual time/old/new)
+  degradation_state: str = "NORMAL"
+  degradation_transitions: List[dict] = dataclasses.field(
+      default_factory=list)
   # virtual-clock accounting (zero on wall-clock engines): where the run's
   # simulated makespan went — the stall-attribution split the SLO report
   # and the workload benchmark records break out
@@ -238,6 +258,16 @@ class EngineStats:
       s += (f" | fetch faults {self.fetch_failures} "
             f"({self.fetch_aborts} aborts, {self.failed_requests} requests "
             f"dropped)")
+    if self.shed_requests or self.degradation_transitions:
+      s += (f" | shed {self.shed_requests} ({self.pressure_sheds} under "
+            f"pressure), degradation {self.degradation_state} "
+            f"({len(self.degradation_transitions)} transitions)")
+    if self.decode_faults or self.corrupt_pages or self.alloc_spikes:
+      s += (f" | faults: {self.decode_faults} decode retried, "
+            f"{self.corrupt_pages} corrupt pages recovered, "
+            f"{self.alloc_spikes} alloc spikes")
+    if self.restored_prefix_blocks:
+      s += f" | restored {self.restored_prefix_blocks} prefix blocks"
     if self.virtual_s:
       s += (f" | virtual {self.virtual_s:.3f} s "
             f"({1e3 * self.compute_s:.1f} ms compute, "
@@ -246,6 +276,57 @@ class EngineStats:
     if self.mesh_shards > 1:
       s += f" | mesh {self.mesh_shards}-way ({self.mesh_mode})"
     return s
+
+
+#: Graceful-degradation states, escalation order.
+DEGRADATION_STATES = ("NORMAL", "PRESSURED", "SHEDDING")
+
+
+class DegradationController:
+  """NORMAL -> PRESSURED -> SHEDDING state machine over pool pressure.
+
+  Observes free-block fraction and queue depth once per engine step and
+  moves one state at a time, each direction gated by a sustain count — a
+  single tight step cannot flip the engine into shedding, and one lucky
+  step cannot flip it back (hysteresis).  What each state *does* lives in
+  the engine: PRESSURED progressively evicts prefix-cache entries and
+  stops admitting already-expired work; SHEDDING additionally cancels
+  queued requests that provably cannot meet their deadline.
+  """
+  PRESSURE_FREE_FRAC = 0.25    # escalate NORMAL -> PRESSURED below this
+  SHED_FREE_FRAC = 0.10        # escalate PRESSURED -> SHEDDING below this
+  SUSTAIN = 2                  # consecutive observations to move one state
+
+  def __init__(self):
+    self.state = "NORMAL"
+    self._up = 0
+    self._down = 0
+
+  def observe(self, free_frac: float,
+              queue_depth: int) -> Optional[Tuple[str, str]]:
+    """Feed one step's pressure reading; returns (old, new) on transition."""
+    if free_frac <= self.SHED_FREE_FRAC and queue_depth > 0:
+      want = 2
+    elif free_frac <= self.PRESSURE_FREE_FRAC:
+      want = 1
+    else:
+      want = 0
+    cur = DEGRADATION_STATES.index(self.state)
+    if want > cur:
+      self._up, self._down = self._up + 1, 0
+      if self._up >= self.SUSTAIN:
+        old, self.state = self.state, DEGRADATION_STATES[cur + 1]
+        self._up = 0
+        return (old, self.state)
+    elif want < cur:
+      self._down, self._up = self._down + 1, 0
+      if self._down >= self.SUSTAIN:
+        old, self.state = self.state, DEGRADATION_STATES[cur - 1]
+        self._down = 0
+        return (old, self.state)
+    else:
+      self._up = self._down = 0
+    return None
 
 
 class ServeEngine:
@@ -264,6 +345,9 @@ class ServeEngine:
                clock: Any = None,
                fault_injector: Any = None,
                max_fetch_retries: int = 3,
+               max_decode_retries: int = 3,
+               slo_enforce: bool = False,
+               snapshot_dir: Optional[str] = None,
                mesh: Any = None,
                mesh_model: Optional[int] = None):
     if cfg.family not in ("dense", "moe"):
@@ -349,8 +433,15 @@ class ServeEngine:
     self.clock = clock
     self.fault_injector = fault_injector
     self.max_fetch_retries = max_fetch_retries
+    self.max_decode_retries = max_decode_retries
     #: rid -> virtual completion time of its in-flight host->device fetch
     self._transfer_ready: dict = {}
+
+    # SLO enforcement + graceful degradation (PR 9): opt-in — with
+    # slo_enforce=False the engine is bit-identical to the pre-PR9 loop
+    self.slo_enforce = bool(slo_enforce)
+    self._degradation = DegradationController()
+    self.snapshot_dir = snapshot_dir
 
     self.stats = self._new_stats()
     self._lengths = np.zeros((max_batch,), np.int32)
@@ -359,6 +450,15 @@ class ServeEngine:
     self._queue: collections.deque = collections.deque()
     self._next_rid = 0
     self._step_no = 0
+
+    # crash-safe restart: revive the prefix cache from the latest snapshot
+    # so the restarted engine serves warm prefix hits instead of cold ones
+    if self.snapshot_dir and self.prefix_cache:
+      latest = ckpt_lib.latest_step(self.snapshot_dir)
+      if latest is not None:
+        tree, extra = ckpt_lib.load_raw(self.snapshot_dir, latest)
+        self.stats.restored_prefix_blocks = self.layout.prefix_restore(
+            tree, extra)
 
   # -------------------------------------------------------------------------
   # public API
@@ -403,8 +503,9 @@ class ServeEngine:
     self._sync_transfer_stats()
     self._sync_prefix_stats()
 
-  def submit(self, prompt: Sequence[int], max_new_tokens: int = 16
-             ) -> RequestHandle:
+  def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,
+             deadline_s: Optional[float] = None, tenant: str = "default",
+             priority: int = 0) -> RequestHandle:
     prompt = np.asarray(prompt, np.int32).reshape(-1)
     if not 0 < prompt.shape[0] <= self.prompt_capacity:
       raise ValueError(
@@ -420,7 +521,9 @@ class ServeEngine:
           f"({self.layout!r}); raise num_blocks or shorten the request")
     req = RequestHandle(rid=self._next_rid, prompt=prompt,
                         max_new_tokens=max_new_tokens,
-                        submitted_step=self._step_no)
+                        submitted_step=self._step_no,
+                        deadline_s=deadline_s, tenant=tenant,
+                        priority=priority)
     if self.clock is not None and req.submit_s is None:
       req.submit_s = self.clock.now
     self._next_rid += 1
@@ -479,7 +582,8 @@ class ServeEngine:
     """Admit queued requests into free slots, run one batched decode step,
     and return the requests that finished this step."""
     self.stats.queue_depth_samples.append(len(self._queue))
-    finished = self._admit()
+    finished = self._enforce_slo() if self.slo_enforce else []
+    finished.extend(self._admit())
     if self.active_count == 0:
       self._step_no += 1
       self.stats.steps += 1
@@ -487,14 +591,16 @@ class ServeEngine:
       return finished
 
     # every active row grows by one token this step; secure its block first
-    # (may preempt-and-requeue under the paged scheduler)
-    self._ensure_blocks()
+    # (may preempt-and-requeue under the paged scheduler, or shed expired
+    # lowest-priority work under SLO enforcement)
+    self._ensure_blocks(finished)
     if self.active_count == 0:            # everything preempted back to queue
       self._step_no += 1
       self.stats.steps += 1
       self._sync_clock_stats()
       return finished
 
+    self._decode_fault_gate()
     t0 = time.perf_counter()
     logits = self.layout.decode(self.params, self._cur, self._lengths)
     # np.asarray blocks on the device result: the sample spans launch->sync
@@ -614,7 +720,15 @@ class ServeEngine:
         ready = self._transfer_ready.pop(req.rid, None)
         ledger = getattr(self.layout, "ledger", None)
         before = ledger.total_bytes if ledger is not None else 0
-        self.layout.fetch(req.rid, slot)
+        try:
+          self.layout.fetch(req.rid, slot)
+        except tiersmod.SpillPageCorruption:
+          # the host copy is damaged: drop it and requeue for a recompute
+          # prefill — greedy decoding regenerates identical tokens
+          self._recover_corrupt(req)
+          self._queue.append(req)
+          free_slots.insert(0, slot)
+          continue
         if self.clock is not None:
           if ready is not None:
             self.clock.stall_until(ready)   # no-op: readiness gated above
@@ -742,15 +856,25 @@ class ServeEngine:
     """Drop every published prefix (frees the index's block holds)."""
     return self.layout.prefix_clear() if self.prefix_cache else 0
 
-  def _ensure_blocks(self) -> None:
+  def _ensure_blocks(self, finished: Optional[List[RequestHandle]] = None
+                     ) -> None:
     """Grow every active slot's block table to hold this step's token,
-    preempting (scheduler permitting) when the pool runs dry."""
+    preempting (scheduler permitting) when the pool runs dry.  An injected
+    allocator-exhaustion spike transiently reserves blocks, forcing the
+    same spill/preempt/shed machinery a genuinely tight pool exercises —
+    the reserve is never actually allocated, so it can never leak."""
+    reserve = 0
+    inj = self.fault_injector
+    if inj is not None and hasattr(inj, "alloc_spike"):
+      reserve = inj.alloc_spike(self._step_no)
+      if reserve:
+        self.stats.alloc_spikes += 1
     while True:
       growers = [(slot, self.layout.need_blocks(slot, int(ln) + 1))
                  for slot, ln in enumerate(self._lengths)
                  if self._slots[slot] is not None]
       total_need = sum(n for _, n in growers)
-      if total_need <= self.layout.free_blocks:
+      if total_need <= max(self.layout.free_blocks - reserve, 0):
         for slot, need in growers:
           if need and not self.layout.ensure(
               slot, int(self._lengths[slot]) + 1):
@@ -758,6 +882,13 @@ class ServeEngine:
         return
       if self.prefix_cache and self.layout.prefix_evict_one():
         continue      # prefer dropping cold cached prefixes over victims
+      if self.slo_enforce and finished is not None:
+        # shed the lowest-priority deadline-missed active request before
+        # stalling or preempting everyone: its tokens can no longer count
+        # toward goodput, so its blocks are the cheapest relief available
+        shed = self._shed_expired_active(finished)
+        if shed:
+          continue
       victim = self.scheduler.on_exhausted(self)
       if victim is None:
         raise RuntimeError(
@@ -782,6 +913,12 @@ class ServeEngine:
     ledger = getattr(self.layout, "ledger", None)
     before = ledger.total_bytes if ledger is not None else 0
     self.layout.spill(slot, req.rid, req.resume_len)
+    inj = self.fault_injector
+    if (inj is not None and hasattr(inj, "should_corrupt_spill")
+        and inj.should_corrupt_spill(req.rid, req.spill_count)):
+      # damage the page now; detection happens at fetch via the frame
+      # checksum, recovery via recompute-prefill (_recover_corrupt)
+      self.layout.corrupt_spilled(req.rid)
     if self.clock is not None and ledger is not None:
       # the spill occupies the link (overlapped with decode, or a stall in
       # serialized mode); the device blocks are free either way — nothing
@@ -807,7 +944,7 @@ class ServeEngine:
     deadline drawn from `TransferLedger.transfer_s`."""
     if self.clock is None:
       rid = self.scheduler.fetch_ahead(self)
-      if rid is not None and self.layout.prefetch(rid):
+      if rid is not None and self._prefetch_checked(rid):
         self.stats.prefetches += 1
         self._sync_transfer_stats()
       return
@@ -823,11 +960,23 @@ class ServeEngine:
       if rid in self._transfer_ready:
         continue
       before = ledger.total_bytes
-      if self.layout.prefetch(rid):
+      if self._prefetch_checked(rid):
         self._transfer_ready[rid] = self.clock.start_transfer(
             ledger.transfer_s(ledger.total_bytes - before))
         self.stats.prefetches += 1
     self._sync_transfer_stats()
+
+  def _prefetch_checked(self, rid: int) -> bool:
+    """`layout.prefetch` with corrupted-page recovery: on a checksum
+    mismatch the host copy is dropped and the (still queued) request is
+    reset for a recompute prefill.  Returns False — no transfer started."""
+    try:
+      return self.layout.prefetch(rid)
+    except tiersmod.SpillPageCorruption:
+      req = next((r for r in self._queue if r.rid == rid), None)
+      if req is not None:
+        self._recover_corrupt(req)
+      return False
 
   def _transfer_ready_ok(self, rid: int) -> bool:
     """May this spilled request finalize its fetch now?  True unless an
@@ -850,6 +999,140 @@ class ServeEngine:
         return "drop"
       return "retry"
     return None
+
+  def _recover_corrupt(self, req: RequestHandle) -> None:
+    """Recover a request whose spilled page failed its checksum: the host
+    copy is unrecoverable, so drop it (freeing both tiers) and reset the
+    handle for a recompute prefill from the prompt — under greedy decoding
+    the regenerated tokens are bit-identical to the lost ones."""
+    self.layout.abort_prefetch(req.rid)       # no-op unless IN_FLIGHT
+    self._transfer_ready.pop(req.rid, None)
+    self.layout.drop_spilled(req.rid)
+    req.spilled = False
+    req.tokens = []
+    req.resume_len = 0
+    req.resume_cur = 0
+    req.admit_s = None
+    req.first_token_s = None
+    req.preempt_count += 1
+    self.stats.corrupt_pages += 1
+    self._sync_transfer_stats()
+
+  def _decode_fault_gate(self) -> None:
+    """Transient decode-step fault injection with bounded retry/backoff:
+    each failed attempt burns one decode step of virtual time (the retry's
+    cost) and re-draws; past `max_decode_retries` the fault is treated as
+    persistent and surfaces."""
+    inj = self.fault_injector
+    if inj is None or not hasattr(inj, "check_decode"):
+      return
+    attempt = 0
+    while inj.check_decode(self._step_no, attempt):
+      attempt += 1
+      self.stats.decode_faults += 1
+      if self.clock is not None:
+        self.clock.advance(self.clock.decode_step_s)   # retry backoff
+      if attempt > self.max_decode_retries:
+        raise fault_tolerance.SimulatedFailure(
+            f"decode step {self._step_no} failed "
+            f"{attempt} consecutive attempts")
+
+  # -- SLO enforcement + graceful degradation --------------------------------
+
+  def _enforce_slo(self) -> List[RequestHandle]:
+    """Deadline admission control, run once per step before admits: update
+    the degradation state machine, shed queued requests that already missed
+    their deadline (their tokens can never count toward goodput), and under
+    SHEDDING also those that provably cannot make it even at full speed."""
+    finished: List[RequestHandle] = []
+    if self.clock is None:
+      return finished
+    total = max(self.layout.num_blocks, 1) if hasattr(
+        self.layout, "num_blocks") else 1
+    free_frac = self.layout.free_blocks / total if hasattr(
+        self.layout, "free_blocks") else 1.0
+    trans = self._degradation.observe(free_frac, len(self._queue))
+    if trans is not None:
+      self.stats.degradation_state = trans[1]
+      if len(self.stats.degradation_transitions) < 256:
+        self.stats.degradation_transitions.append(dict(
+            step=self._step_no, virtual_s=round(self.clock.now, 6),
+            old=trans[0], new=trans[1],
+            free_frac=round(free_frac, 4), queue_depth=len(self._queue)))
+    state = self._degradation.state
+    if state == "PRESSURED" and self.prefix_cache:
+      # progressive degradation: give back one cold cached prefix per
+      # pressured step instead of waiting for hard exhaustion
+      self.layout.prefix_evict_one()
+    now = self.clock.now
+    for req in [r for r in self._queue if r.deadline_s is not None]:
+      doomed = now >= req.deadline_s
+      if not doomed and state == "SHEDDING":
+        # lower bound: every remaining token costs at least one decode
+        # step — if even that misses the deadline, the request is doomed
+        doomed = (now + req.max_new_tokens * self.clock.decode_step_s
+                  > req.deadline_s)
+      if doomed:
+        self._queue.remove(req)
+        finished.append(self._cancel_queued(req))
+    return finished
+
+  def _cancel_queued(self, req: RequestHandle) -> RequestHandle:
+    """Cleanly cancel a queued request: reclaim any in-flight transfer,
+    host-tier pages, and shared-prefix pins it holds, then mark it shed."""
+    if req.spilled:
+      self.layout.abort_prefetch(req.rid)
+      self._transfer_ready.pop(req.rid, None)
+      self.layout.drop_spilled(req.rid)
+      req.spilled = False
+      self._sync_transfer_stats()
+    req.shed = True
+    req.done = True
+    req.finished_step = self._step_no
+    if self.clock is not None:
+      req.finish_s = self.clock.now
+    self.stats.shed_requests += 1
+    return req
+
+  def _shed_expired_active(self, finished: List[RequestHandle]) -> bool:
+    """Under pool pressure, cancel the lowest-priority *active* request
+    whose deadline already passed (its remaining tokens are worthless);
+    frees its blocks instead of spilling/preempting still-viable work."""
+    if self.clock is None:
+      return False
+    now = self.clock.now
+    expired = [(r.priority, -(r.admitted_step or 0), s, r)
+               for s, r in self.active_requests
+               if r.deadline_s is not None and now >= r.deadline_s]
+    if not expired:
+      return False
+    expired.sort(key=lambda t: (t[0], t[1], t[2]))
+    _, _, slot, req = expired[0]
+    self.layout.release(slot)
+    self._slots[slot] = None
+    self._lengths[slot] = 0
+    self._cur[slot] = 0
+    req.slot = None
+    req.shed = True
+    req.done = True
+    req.finished_step = self._step_no
+    req.finish_s = now
+    self.stats.shed_requests += 1
+    self.stats.pressure_sheds += 1
+    finished.append(req)
+    return True
+
+  # -- crash-safe snapshot/restore -------------------------------------------
+
+  def save_snapshot(self, step: int = 0) -> Optional[str]:
+    """Persist the prefix cache (trie + pinned block contents) through
+    `checkpoint/ckpt.py` so a restarted engine serves warm prefix hits.
+    Returns the checkpoint directory, or None when there is nothing to
+    snapshot (no snapshot_dir or prefix cache disabled)."""
+    if not (self.snapshot_dir and self.prefix_cache):
+      return None
+    tree, extra = self.layout.prefix_snapshot()
+    return ckpt_lib.save(self.snapshot_dir, step, tree, extra=extra)
 
   def _sync_transfer_stats(self) -> None:
     ledger = getattr(self.layout, "ledger", None)

@@ -21,6 +21,9 @@ are `CachePolicy` keys and storage is a `CacheLayout` key:
 | `prefix` | admissible request with the  | preempt-and-requeue the        |
 |          | longest cached prefix first  | youngest running request       |
 |          | (cache-hot admits first)     |                                |
+| `slo`    | highest priority, earliest   | shed the lowest-priority       |
+|          | deadline first (EDF within   | expired running request, else  |
+|          | priority tiers)              | the tiered LRU spill choice    |
 
 Schedulers see the engine read-only: the queue of `RequestHandle`s, the
 active slots, and the layout's block pool.  The engine performs the actual
@@ -252,3 +255,45 @@ class TieredScheduler(Scheduler):
         if len(out) >= depth:
           break
     return out
+
+
+@register("slo")
+class SLOScheduler(TieredScheduler):
+  """Priority-then-deadline admission (EDF within each priority tier).
+
+  Admissible queued requests order by (higher priority first, earliest
+  deadline first, FIFO ties): under overload the engine's SLO shedding
+  removes doomed work from the queue, and this ordering spends the slots
+  that remain on the requests most likely to still meet their deadline —
+  per-tenant fairness falls out of tenants carrying their own priorities
+  and deadlines rather than a separate quota mechanism.  Requests without
+  a deadline sort last within their priority tier.  Exhaustion prefers the
+  lowest-priority *expired* active request as the victim (its tokens are
+  already worthless; the engine sheds it outright under slo_enforce),
+  falling back to the tiered LRU spill choice.
+  """
+
+  def pick(self, queue, engine):
+    best, best_key = None, None
+    for i, req in enumerate(queue):
+      if not engine.admissible(req):
+        continue
+      dl = req.deadline_s if req.deadline_s is not None else float("inf")
+      key = (-req.priority, dl, req.rid)
+      if best_key is None or key < best_key:
+        best, best_key = i, key
+    return best
+
+  def on_exhausted(self, engine):
+    active = engine.active_requests
+    if len(active) <= 1:
+      return None
+    clock = getattr(engine, "clock", None)
+    if clock is not None:
+      expired = [(req.priority, -(req.admitted_step or 0), slot)
+                 for slot, req in active
+                 if req.deadline_s is not None
+                 and clock.now >= req.deadline_s]
+      if expired:
+        return min(expired)[2]
+    return super().on_exhausted(engine)

@@ -35,12 +35,24 @@ faults the engine must survive, and the run reports TTFT/TPOT percentiles,
 goodput, and compute/transfer/idle stall attribution instead of wall-clock
 throughput.  Deterministic end to end: two runs with one seed produce
 identical token streams and reports.
+
+Robustness knobs (PR 9): `--slo-enforce` turns per-request deadlines into
+admission control — doomed queued work is shed, the degradation
+state machine (NORMAL -> PRESSURED -> SHEDDING) records in the stats —
+and pairs with `--scheduler slo` (priority-then-EDF).  `--fault-kind
+{fetch,corrupt-spill,alloc-exhaustion,decode-transient} --fault-rate P`
+injects seeded faults on one surface through a `FaultPlan`
+(runtime/fault_tolerance.py); the engine must recover without leaking
+blocks or corrupting survivors' tokens.  `--snapshot-dir DIR` restores the
+prefix cache from the latest snapshot at startup (crash-safe warm
+restart) and `--save-snapshot` persists it after the run.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 from typing import Any
 
 import jax
@@ -199,7 +211,9 @@ def build_engine(args, clock=None, fault_injector=None):
                        prompt_capacity=args.prompt_len,
                        num_blocks=args.num_blocks, clock=clock,
                        fault_injector=fault_injector,
-                       mesh_model=getattr(args, "mesh_model", None))
+                       mesh_model=getattr(args, "mesh_model", None),
+                       slo_enforce=getattr(args, "slo_enforce", False),
+                       snapshot_dir=getattr(args, "snapshot_dir", None))
   if getattr(args, "pcie_gbps", None):
     ledger = getattr(engine.layout, "ledger", None)
     if ledger is not None:
@@ -236,9 +250,20 @@ def dump_stats_json(engine, path: str, extra: Any = None) -> None:
         chain_nodes=index.chain_nodes, full_entries=index.full_entries,
         hits=index.hits, full_hits=index.full_hits,
         hit_tokens=index.hit_tokens, evicted_blocks=index.evicted_blocks)
-  with open(path, "w") as f:
+  write_json_atomic(path, payload)
+
+
+def write_json_atomic(path: str, payload: Any) -> None:
+  """Write JSON via a sibling temp file + `os.replace`, so a crash (or a
+  concurrent reader — CI tails these files) never observes a torn record:
+  the path either holds the previous complete document or the new one."""
+  tmp = f"{path}.tmp.{os.getpid()}"
+  with open(tmp, "w") as f:
     json.dump(payload, f, indent=2)
     f.write("\n")
+    f.flush()
+    os.fsync(f.fileno())
+  os.replace(tmp, path)
 
 
 def run_engine_demo(args) -> None:
@@ -328,11 +353,14 @@ def workload_spec_from_args(args):
   tenants = []
   for i in range(max(1, args.tenants)):
     # tenant 0 of a multi-tenant mix shares a prompt prefix (the traffic
-    # pattern the prefix cache exists for); the rest are distinct
+    # pattern the prefix cache exists for) and carries priority 1, so the
+    # SLO scheduler protects it when overload forces shedding
     shared = p_lo // 2 if (i == 0 and args.tenants > 1) else 0
+    prio = 1 if (i == 0 and args.tenants > 1) else 0
     tenants.append(workload_lib.TenantSpec(
         name=f"t{i}", prompt_len=(p_lo, args.prompt_len),
-        max_new_tokens=(g_lo, args.gen), shared_prefix_len=shared, slo=slo))
+        max_new_tokens=(g_lo, args.gen), shared_prefix_len=shared, slo=slo,
+        priority=prio))
   return workload_lib.WorkloadSpec(
       arrival=args.arrival, rate=args.arrival_rate,
       burstiness=args.burstiness, n_requests=args.workload,
@@ -348,10 +376,17 @@ def run_workload_demo(args) -> None:
   from repro.launch import slo as slo_lib
   from repro.launch import workload as workload_lib
   from repro.runtime.fault_tolerance import FetchFaultInjector
+  from repro.runtime.fault_tolerance import make_fault_plan
   spec = workload_spec_from_args(args)
   clock = workload_lib.VirtualClock(overlap=not args.no_overlap)
   injector = None
-  if spec.fetch_fail_rate > 0:
+  if getattr(args, "fault_kind", None):
+    if spec.fetch_fail_rate > 0:
+      raise SystemExit("--fault-kind conflicts with --fetch-fail-rate "
+                       "(pick one injection surface spec)")
+    injector = make_fault_plan(args.fault_kind, args.fault_rate,
+                               seed=spec.fetch_fail_seed)
+  elif spec.fetch_fail_rate > 0:
     injector = FetchFaultInjector(fail_rate=spec.fetch_fail_rate,
                                   seed=spec.fetch_fail_seed)
   engine = build_engine(args, clock=clock, fault_injector=injector)
@@ -364,6 +399,18 @@ def run_workload_demo(args) -> None:
         f"policy={args.cache_policy}]")
   print(f"slo: {slo_lib.summary(result.report)}")
   print(f"engine stats: {engine.stats.summary()}")
+  if getattr(args, "slo_enforce", False):
+    print(f"admission control: {engine.stats.shed_requests} shed, "
+          f"final state {engine.stats.degradation_state}, "
+          f"{len(engine.stats.degradation_transitions)} transitions")
+  if injector is not None and hasattr(injector, "by_surface"):
+    print(f"fault plan: {injector.injected} injected {dict(injector.by_surface)}")
+  if getattr(args, "save_snapshot", False):
+    saved = engine.save_snapshot(step=engine.stats.steps)
+    if saved:
+      print(f"prefix snapshot saved to {saved}")
+    else:
+      print("prefix snapshot skipped (needs --snapshot-dir + --prefix-cache)")
   if args.stats_json:
     dump_stats_json(engine, args.stats_json,
                     extra={"workload": dict(
@@ -476,6 +523,30 @@ def make_parser() -> argparse.ArgumentParser:
   ap.add_argument("--fetch-fail-rate", type=float, default=0.0,
                   help="inject host-tier fetch faults at this per-attempt "
                        "probability (engine retries with bounded backoff)")
+  ap.add_argument("--slo-enforce", action="store_true",
+                  help="enforce per-request deadlines as admission control: "
+                       "shed doomed queued/expired work, run the NORMAL -> "
+                       "PRESSURED -> SHEDDING degradation state machine "
+                       "(pairs with --scheduler slo)")
+  ap.add_argument("--fault-kind", default=None,
+                  choices=("fetch", "corrupt-spill", "alloc-exhaustion",
+                           "decode-transient"),
+                  help="seeded multi-surface fault injection (FaultPlan): "
+                       "fetch failures, corrupted spill pages (checksum-"
+                       "detected, recovered by recompute-prefill), allocator "
+                       "exhaustion spikes, or transient decode-step failures "
+                       "(bounded retry/backoff)")
+  ap.add_argument("--fault-rate", type=float, default=0.1,
+                  help="per-event probability for --fault-kind (seeded by "
+                       "--workload-seed)")
+  ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                  help="crash-safe prefix-cache snapshots: restore the "
+                       "latest snapshot in DIR at engine startup (warm "
+                       "prefix hits after a restart; requires "
+                       "--prefix-cache)")
+  ap.add_argument("--save-snapshot", action="store_true",
+                  help="persist the prefix cache to --snapshot-dir after "
+                       "the workload run")
   ap.add_argument("--pcie-gbps", type=float, default=None,
                   help="override the modeled tier-boundary link bandwidth "
                        "(smaller = transfers dominate, stressing overlap)")
@@ -498,6 +569,11 @@ def main():
   if args.arrival == "trace" and args.workload is not None \
       and not args.trace_file:
     ap.error("--arrival trace requires --trace-file")
+  if args.save_snapshot and not args.snapshot_dir:
+    ap.error("--save-snapshot requires --snapshot-dir")
+  if args.fault_kind and args.workload is None:
+    ap.error("--fault-kind requires --workload (fault plans drive the "
+             "virtual-clock harness)")
 
   if args.workload is not None:
     run_workload_demo(args)

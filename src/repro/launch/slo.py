@@ -55,7 +55,9 @@ class RequestTiming:
   All timestamps are virtual-clock seconds.  `first_token_s` is when the
   prefill emitted token 0 (TTFT ends there); `finish_s` when the last token
   landed.  A `failed` request (dropped after bounded fetch retries) counts
-  against goodput but keeps whatever timings it accumulated.
+  against goodput but keeps whatever timings it accumulated; a `shed` one
+  (cancelled by SLO admission control) likewise — shedding trades those
+  requests' zero-anyway goodput for the survivors' deadlines.
   """
   rid: int
   tenant: str
@@ -67,6 +69,7 @@ class RequestTiming:
   first_token_s: Optional[float] = None
   finish_s: Optional[float] = None
   failed: bool = False
+  shed: bool = False
 
   @property
   def ttft_s(self) -> Optional[float]:
@@ -91,7 +94,7 @@ class RequestTiming:
 
   @property
   def met_deadline(self) -> bool:
-    return (not self.failed and self.finish_s is not None
+    return (not self.failed and not self.shed and self.finish_s is not None
             and self.finish_s <= self.deadline_s + 1e-12)
 
   @property
@@ -143,6 +146,7 @@ def build_report(records: Sequence[RequestTiming], clock=None) -> dict:
   out = dict(
       requests=len(records),
       failed=sum(1 for r in records if r.failed),
+      shed=sum(1 for r in records if r.shed),
       tokens_total=total_tokens,
       tokens_within_deadline=good_tokens,
       goodput_frac=round(good_tokens / total_tokens, 4) if total_tokens
@@ -173,7 +177,8 @@ def build_report(records: Sequence[RequestTiming], clock=None) -> dict:
 
 def summary(report: dict) -> str:
   """One-line human rendering of a build_report() dict."""
-  s = (f"{report['requests']} requests ({report['failed']} failed), "
+  s = (f"{report['requests']} requests ({report['failed']} failed, "
+       f"{report.get('shed', 0)} shed), "
        f"goodput {100 * report['goodput_frac']:.1f}% of "
        f"{report['tokens_total']} tokens "
        f"({100 * report['deadline_met_frac']:.1f}% of deadlines met)")

@@ -148,6 +148,7 @@ class TenantSpec:
   max_new_tokens: Tuple[int, int] = (4, 16)    # inclusive range
   shared_prefix_len: int = 0
   slo: slo_lib.SLOSpec = slo_lib.SLOSpec()
+  priority: int = 0                # higher sheds later under SLO enforcement
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +177,7 @@ class WorkloadRequest:
   tokens: Tuple[int, ...]
   max_new_tokens: int
   slo: slo_lib.SLOSpec
+  priority: int = 0
 
   @property
   def prompt_len(self) -> int:
@@ -244,7 +246,7 @@ def generate(spec: WorkloadSpec, *, vocab_size: int, max_prompt_len: int,
     out.append(WorkloadRequest(
         index=i, arrival_s=float(arrivals[i]), tenant=tenant.name,
         tokens=tuple(int(x) for x in toks), max_new_tokens=gen,
-        slo=tenant.slo))
+        slo=tenant.slo, priority=tenant.priority))
   out.sort(key=lambda w: (w.arrival_s, w.index))
   return out
 
@@ -331,6 +333,7 @@ class WorkloadResult:
   token_streams: Dict[int, Tuple[int, ...]]
   clock: VirtualClock
   failed_indices: Tuple[int, ...] = ()
+  shed_indices: Tuple[int, ...] = ()
 
 
 class WorkloadDriver:
@@ -363,18 +366,21 @@ class WorkloadDriver:
     records: List[slo_lib.RequestTiming] = []
     token_streams: Dict[int, Tuple[int, ...]] = {}
     failed: List[int] = []
+    shed: List[int] = []
     i = 0
     steps = 0
     while i < len(pending) or eng.has_work:
       while i < len(pending) and pending[i].arrival_s <= clock.now + 1e-12:
         w = pending[i]
-        h = eng.submit(list(w.tokens), max_new_tokens=w.max_new_tokens)
+        deadline = w.slo.deadline_s(w.arrival_s, w.max_new_tokens)
+        h = eng.submit(list(w.tokens), max_new_tokens=w.max_new_tokens,
+                       deadline_s=deadline, tenant=w.tenant,
+                       priority=w.priority)
         h.submit_s = w.arrival_s
         rid_to_index[h.rid] = w.index
         timings[h.rid] = slo_lib.RequestTiming(
             rid=h.rid, tenant=w.tenant, arrival_s=w.arrival_s,
-            deadline_s=w.slo.deadline_s(w.arrival_s, w.max_new_tokens),
-            max_new_tokens=w.max_new_tokens)
+            deadline_s=deadline, max_new_tokens=w.max_new_tokens)
         i += 1
       if not eng.has_work:
         clock.idle_until(pending[i].arrival_s)
@@ -386,11 +392,14 @@ class WorkloadDriver:
         t.first_token_s = h.first_token_s
         t.finish_s = h.finish_s
         t.failed = h.failed
+        t.shed = h.shed
         records.append(t)
         idx = rid_to_index[h.rid]
         token_streams[idx] = tuple(h.tokens)
         if h.failed:
           failed.append(idx)
+        if h.shed:
+          shed.append(idx)
       steps += 1
       if steps > max_steps:
         raise RuntimeError(
@@ -400,4 +409,5 @@ class WorkloadDriver:
     report = slo_lib.build_report(records, clock)
     return WorkloadResult(report=report, records=records,
                           token_streams=token_streams, clock=clock,
-                          failed_indices=tuple(sorted(failed)))
+                          failed_indices=tuple(sorted(failed)),
+                          shed_indices=tuple(sorted(shed)))

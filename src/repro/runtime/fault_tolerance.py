@@ -71,6 +71,95 @@ class FetchFaultInjector:
           f"injected fetch fault for request {rid} (attempt {attempt})")
 
 
+#: Fault-surface registry: --fault-kind CLI key -> FaultPlan rate field.
+#: Each surface draws from its own seeded stream (surface index mixed into
+#: the key), so enabling one surface never perturbs another's draws.
+FAULT_KINDS = {
+    "fetch": "fetch_rate",                  # transient spill-fetch failures
+    "corrupt-spill": "corrupt_rate",        # host-tier page corruption
+    "alloc-exhaustion": "alloc_rate",       # transient device-pool squeeze
+    "decode-transient": "decode_rate",      # decode-step soft errors
+}
+
+_SURFACE_IX = {name: i + 1 for i, name in enumerate(FAULT_KINDS)}
+
+
+@dataclasses.dataclass
+class FaultPlan:
+  """Seeded multi-surface fault schedule for the serve engine.
+
+  Generalizes `FetchFaultInjector` to four surfaces — spill-fetch
+  transfers, host-page corruption, allocator exhaustion spikes, and
+  transient decode-step failures — each drawing from its own private
+  stream keyed on (seed, surface, a, b).  Draws are *order-independent*:
+  two runs that hit the surfaces in different orders fault the same
+  (request, attempt) / (step, attempt) pairs, which is what makes the
+  fault-matrix token-identity property testable at all.  `max_failures`
+  bounds total injections across all surfaces so a high rate cannot wedge
+  a small workload forever.
+  """
+  fetch_rate: float = 0.0
+  corrupt_rate: float = 0.0
+  alloc_rate: float = 0.0
+  decode_rate: float = 0.0
+  alloc_spike_blocks: int = 2
+  seed: int = 0
+  max_failures: Optional[int] = None
+  injected: int = 0
+  by_surface: Dict[str, int] = dataclasses.field(
+      default_factory=lambda: {k: 0 for k in FAULT_KINDS})
+
+  def _draw(self, surface: str, a: int, b: int) -> float:
+    key = ((self.seed * 1_000_003 + _SURFACE_IX[surface]) * 1_000_003
+           + a) * 1_000_003 + b
+    return random.Random(key).random()
+
+  def _fires(self, surface: str, rate: float, a: int, b: int) -> bool:
+    if rate <= 0.0:
+      return False
+    if self.max_failures is not None and self.injected >= self.max_failures:
+      return False
+    if self._draw(surface, a, b) < rate:
+      self.injected += 1
+      self.by_surface[surface] += 1
+      return True
+    return False
+
+  def check_fetch(self, rid: int, attempt: int = 0) -> None:
+    """Engine-compatible with `FetchFaultInjector.check_fetch`."""
+    if self._fires("fetch", self.fetch_rate, rid, attempt):
+      raise SimulatedFailure(
+          f"injected fetch fault for request {rid} (attempt {attempt})")
+
+  def should_corrupt_spill(self, rid: int, attempt: int = 0) -> bool:
+    """True when the page just spilled for `rid` should be corrupted."""
+    return self._fires("corrupt-spill", self.corrupt_rate, rid, attempt)
+
+  def alloc_spike(self, step: int) -> int:
+    """Device blocks transiently unavailable at this step (0 = no spike)."""
+    if self._fires("alloc-exhaustion", self.alloc_rate, step, 0):
+      return self.alloc_spike_blocks
+    return 0
+
+  def check_decode(self, step: int, attempt: int = 0) -> bool:
+    """True when this decode attempt should fail (engine retries with
+    backoff; attempts index the retry stream so a retry re-draws)."""
+    return self._fires("decode-transient", self.decode_rate, step, attempt)
+
+
+def make_fault_plan(kind: str, rate: float, seed: int = 0,
+                    max_failures: Optional[int] = None,
+                    alloc_spike_blocks: int = 2) -> FaultPlan:
+  """Build a single-surface `FaultPlan` from a `--fault-kind` CLI key."""
+  if kind not in FAULT_KINDS:
+    raise KeyError(f"unknown fault kind {kind!r}; available: "
+                   f"{tuple(FAULT_KINDS)}")
+  plan = FaultPlan(seed=seed, max_failures=max_failures,
+                   alloc_spike_blocks=alloc_spike_blocks)
+  setattr(plan, FAULT_KINDS[kind], rate)
+  return plan
+
+
 @dataclasses.dataclass
 class StragglerMonitor:
   """Detects slow steps against a rolling median.

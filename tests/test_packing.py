@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import cache_api, cache_registry
+from repro.core import cache_api, cache_registry, tiers
 from repro.core import kv_cache as kvc
 from repro.core import pq_attention
 from repro.kernels import packing
@@ -289,5 +289,81 @@ def test_resident_q4_tokens_identical_across_dispatches(layout, sched, extra):
   pal.run_to_completion()
   if layout == "tiered":
     assert pal.stats.spills >= 1, "trace never exercised the spill path"
+  for w, g in zip(want, got):
+    assert g.done and g.tokens == w.tokens, g.rid
+
+
+# ---------------------------------------------------------------------------
+# q5: fifth-bit mask plane (PR 9), both registries
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.sampled_from([8, 16, 64, 128]),
+       n=st.integers(1, 9))
+def test_pack_unpack_u5_roundtrip_exact(seed, d, n):
+  rng = np.random.default_rng(seed)
+  q = jnp.asarray(rng.integers(0, 32, size=(n, d)), jnp.uint8)
+  p = packing.pack_u5(q)
+  # low nibbles split-half (d/2 bytes) + fifth-bit plane (d/8 bytes)
+  assert p.shape == (n, d // 2 + d // 8) and p.dtype == jnp.uint8
+  np.testing.assert_array_equal(np.asarray(packing.unpack_u5(p)),
+                                np.asarray(q, np.int32))
+
+
+def test_q5_registered_with_intermediate_cost():
+  assert packing.RESIDENT_CODECS["q5"] == 5
+  assert isinstance(tiers.get_codec("q5"), tiers.Q5SpillCodec)
+  # per-value cost sits strictly between q4 and q8 at every group width
+  for d in (32, 64, 128):
+    w4, w5, w8 = (packing.packed_width(d, b) for b in (4, 5, 8))
+    assert w4 < w5 < w8, (d, w4, w5, w8)
+
+
+def test_q5_spill_codec_between_q4_and_q8(rng):
+  """One extra bit per code: q5 spill frames must be larger than q4 and
+  smaller than q8, with reconstruction error strictly between them."""
+  arr = rng.standard_normal((6, 70)).astype(np.float32)
+  out = {}
+  for key in ("q4", "q5", "q8"):
+    payload, nbytes = tiers.get_codec(key).encode(arr)
+    back = tiers.get_codec(key).decode(payload, arr.shape, arr.dtype)
+    assert back.shape == arr.shape and back.dtype == arr.dtype
+    out[key] = (nbytes, float(np.abs(back - arr).max()))
+  assert out["q4"][0] < out["q5"][0] < out["q8"][0], out
+  assert out["q4"][1] > out["q5"][1] > out["q8"][1], out
+  # q5 halves q4's quantization step: the error bound scales accordingly
+  assert out["q5"][1] < 0.6 * out["q4"][1], out
+
+
+def test_q5_resident_store_between_q4_and_q8():
+  sizes = {}
+  for key in ("q4", "q5", "q8"):
+    pol = cache_registry.make("exact", _spec(kv_resident_codec=key))
+    sizes[key] = sum(np.asarray(leaf).nbytes for leaf in pol.init(2, 2, 16))
+  assert sizes["q4"] < sizes["q5"] < sizes["q8"], sizes
+
+
+# ---------------------------------------------------------------------------
+# packed exact + prefix cache: the PR 8 interaction, pinned (PR 9)
+# ---------------------------------------------------------------------------
+
+def test_packed_exact_prefix_full_hit_oracle():
+  """Full-prompt prefix hits over the packed (q4 resident) store must skip
+  prefill without perturbing greedy tokens: the repeated prompt's stream is
+  bit-identical to a cache-off oracle's."""
+  cfg = _cfg(kv_resident_codec="q4", decode_kernel="pallas-interpret")
+  off = ServeEngine(cfg, context_len=64, max_batch=2, prompt_capacity=32,
+                    cache_layout="paged", scheduler="paged", num_blocks=12)
+  on = ServeEngine(cfg, context_len=64, max_batch=2, prompt_capacity=32,
+                   params=off.params, cache_layout="paged",
+                   scheduler="prefix", num_blocks=12, prefix_cache=True)
+  assert on.layout.block_native
+  trace = [(list(range(1, 21)), 10), (list(range(1, 21)), 10)]
+  want = [off.submit(p, max_new_tokens=m) for p, m in trace]
+  got = [on.submit(p, max_new_tokens=m) for p, m in trace]
+  off.run_to_completion()
+  on.run_to_completion()
+  assert on.stats.prefix_full_hits >= 1, on.stats
+  assert on.stats.prefill_tokens < off.stats.prefill_tokens
   for w, g in zip(want, got):
     assert g.done and g.tokens == w.tokens, g.rid

@@ -17,7 +17,8 @@ def _cfg(policy="exact", dtype="float32", **kw):
 
 
 def test_registry_and_protocol():
-  assert scheduler_lib.names() == ("fifo", "paged", "prefix", "sjf", "tiered")
+  assert scheduler_lib.names() == ("fifo", "paged", "prefix", "sjf", "slo",
+                                   "tiered")
   assert scheduler_lib.make("sjf").name == "sjf"
   with pytest.raises(KeyError):
     scheduler_lib.make("priority")
@@ -28,6 +29,9 @@ def test_registry_and_protocol():
   assert not scheduler_lib.make("paged").spills
   assert scheduler_lib.make("prefix").preemptive
   assert not scheduler_lib.make("prefix").spills
+  # slo rides the tiered spill machinery, reordering admission only
+  assert scheduler_lib.make("slo").preemptive
+  assert scheduler_lib.make("slo").spills
 
 
 def test_paged_scheduler_requires_paged_layout():
