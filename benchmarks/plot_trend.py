@@ -135,6 +135,14 @@ def _cold_hit_tokens(run: dict):
       "cold_hit_tokens")
 
 
+def _shard_goodput_gain(run: dict):
+  """Host-mirror shard recovery goodput over abort-and-recompute on the
+  identical seeded shard kill (> 1 = restoring KV beats regenerating it);
+  None on records predating PR 10."""
+  return (run.get("recovery") or {}).get("shard", {}).get(
+      "mirror_vs_recompute_goodput")
+
+
 def _mesh_cell(run: dict, policy: str, size: int) -> dict:
   """One sharded-serving cell; {} on records predating PR 7."""
   pols = (run.get("mesh") or {}).get("policies", {})
@@ -208,6 +216,7 @@ def render_terminal(runs: list) -> None:
       ("q4/fp32 pool  ", [_packed_resident(r) for r in runs]),
       ("shed/stall gp ", [_shed_goodput_gain(r) for r in runs]),
       ("restored blks ", [_restored_blocks(r) for r in runs]),
+      ("shard mir gp  ", [_shard_goodput_gain(r) for r in runs]),
   ):
     vals = [v for v in series if v is not None]
     if vals:
@@ -289,6 +298,9 @@ def render_png(runs: list, path: str) -> bool:
                color="tab:red", label="shed/stall goodput")
   axes[7].plot(xs, [_restored_blocks(r) for r in runs], marker="s",
                color="tab:green", label="restored prefix blocks")
+  # shard-loss recovery (records before PR 10 plot as gaps)
+  axes[7].plot(xs, [_shard_goodput_gain(r) for r in runs], marker="^",
+               color="tab:blue", label="shard mirror/recompute goodput")
   axes[7].axhline(1.0, ls="--", lw=1, color="gray")
   axes[7].set_ylabel("recovery")
   axes[7].set_xlabel("run")

@@ -720,6 +720,106 @@ def run_recovery(arch: str = "tinyllama-1.1b", n_requests: int = 16,
         f"restored, hit tokens {cold.layout.prefix_index.hit_tokens} cold "
         f"-> {warm.layout.prefix_index.hit_tokens} warm, "
         f"tokens identical={tokens_ok}")
+
+  # --- shard loss: host-mirror restore vs abort-and-recompute ------------
+  out["shard"] = run_shard_recovery(arch, seed=seed)
+  return out
+
+
+# One shard-recovery cell in a fresh interpreter: like `_MESH_PROBE`, the
+# 4-way mesh needs 8 forced host devices, which only takes effect before
+# the first jax import.  A seeded shard-loss plan kills one shard mid-run;
+# the cell serves the identical workload under one --shard-redundancy mode
+# and prints its goodput + recovery counters as one JSON line.
+_SHARD_PROBE = r'''
+import dataclasses, json, sys
+import jax
+from repro.configs import get_arch
+from repro.launch import workload as wl
+from repro.launch.engine import ServeEngine
+from repro.runtime import fault_tolerance as ft
+
+arch, redundancy, seed = sys.argv[1], sys.argv[2], int(sys.argv[3])
+assert len(jax.devices()) == 8, jax.devices()
+cfg = dataclasses.replace(
+    get_arch(arch, reduced=True), cache_policy="exact", dtype_str="bfloat16",
+    cache_layout="tiered", scheduler="tiered", kv_block_size=16,
+    # 4 kv heads so the 4-way mesh runs heads mode (a dead shard then voids
+    # a kv-head slice of every block — the case redundancy exists for)
+    n_heads=4, n_kv_heads=4)
+plan = ft.make_fault_plan("shard-loss", 0.05, seed=seed, max_failures=1)
+eng = ServeEngine(cfg, context_len=64, max_batch=2, prompt_capacity=32,
+                  num_blocks=5, host_blocks=24, mesh_model=4,
+                  shard_redundancy=redundancy, fault_injector=plan,
+                  clock=wl.VirtualClock())
+spec = wl.WorkloadSpec(arrival="poisson", rate=400.0, burstiness=6.0,
+                       n_requests=12, seed=seed,
+                       tenants=(wl.TenantSpec(prompt_len=(20, 30),
+                                              max_new_tokens=(10, 16)),))
+r = wl.WorkloadDriver(eng, spec).run()
+print(json.dumps({
+    "goodput_tok_s": r.report["goodput_tok_s"],
+    "goodput_frac": r.report["goodput_frac"],
+    "served_tok_s": r.report["served_tok_s"],
+    "losses": eng.stats.shard_losses,
+    "replans": eng.stats.shard_replans,
+    "mirror_restores": eng.stats.shard_mirror_restores,
+    "recovered_requests": eng.stats.shard_recovered_requests,
+    "preempts": eng.stats.preempts,
+    "failed": len(r.failed_indices),
+    "tokens": {str(k): list(v) for k, v in sorted(r.token_streams.items())},
+}))
+'''
+
+
+def run_shard_recovery(arch: str = "tinyllama-1.1b", seed: int = 3) -> dict:
+  """Shard-loss recovery (PR 10): `--shard-redundancy host-mirror` vs
+  `none` on the identical seeded kill.
+
+  Both cells replay the same workload on a 4-way heads mesh and lose the
+  same shard at the same step; `none` recovers every resident request by
+  abort-and-recompute (PR 9's recompute-prefill path), `host-mirror` by
+  checksummed host-copy fetch + re-scatter under the replanned mesh.  The
+  headline is `mirror_vs_recompute_goodput` > 1: restoring KV beats
+  regenerating it.  Token streams must agree across the two modes (greedy
+  decode: recovery changes *when* tokens appear, never *which*)."""
+  root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+  env = dict(os.environ,
+             XLA_FLAGS="--xla_force_host_platform_device_count=8",
+             JAX_PLATFORMS="cpu")
+  env["PYTHONPATH"] = os.pathsep.join(
+      [os.path.join(root, "src")]
+      + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+  cells = {}
+  for redundancy in ("none", "host-mirror"):
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_PROBE, arch, redundancy, str(seed)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+      raise RuntimeError(
+          f"shard recovery probe {redundancy} failed:\n{proc.stderr[-2000:]}")
+    cells[redundancy] = json.loads(proc.stdout.strip().splitlines()[-1])
+  none_c, mirror_c = cells["none"], cells["host-mirror"]
+  tokens_ok = none_c["tokens"] == mirror_c["tokens"]
+  out = {
+      "devices_forced": 8, "mesh_model": 4, "mode": "heads", "seed": seed,
+      "tokens_identical": tokens_ok,
+      "none": {k: none_c[k] for k in
+               ("goodput_tok_s", "goodput_frac", "served_tok_s", "losses",
+                "replans", "mirror_restores", "recovered_requests",
+                "preempts", "failed")},
+      "host_mirror": {k: mirror_c[k] for k in
+                      ("goodput_tok_s", "goodput_frac", "served_tok_s",
+                       "losses", "replans", "mirror_restores",
+                       "recovered_requests", "preempts", "failed")},
+      "mirror_vs_recompute_goodput": (
+          round(mirror_c["goodput_tok_s"] / none_c["goodput_tok_s"], 4)
+          if none_c["goodput_tok_s"] else None),
+  }
+  print(f"recovery[shard]: goodput {mirror_c['goodput_tok_s']} tok/s "
+        f"host-mirror ({mirror_c['mirror_restores']} restores) vs "
+        f"{none_c['goodput_tok_s']} tok/s recompute "
+        f"({none_c['preempts']} preempts), tokens identical={tokens_ok}")
   return out
 
 

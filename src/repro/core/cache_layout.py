@@ -380,7 +380,8 @@ class ContiguousLayout(CacheLayout):
                host_blocks: Optional[int] = None,
                prefix_cache: bool = False,
                prefix_cache_blocks: Optional[int] = None,
-               shard_plan: Optional[ssh.ShardPlan] = None):
+               shard_plan: Optional[ssh.ShardPlan] = None,
+               shard_redundancy: str = "none"):
     del block_size, num_blocks, host_blocks   # no block pool, no host tier
     del prefix_cache_blocks
     if prefix_cache:
@@ -391,6 +392,12 @@ class ContiguousLayout(CacheLayout):
       raise ValueError(
           "sharded serving partitions a block pool; contiguous slabs have "
           "none — use --cache-layout paged or tiered with --mesh-model > 1")
+    if shard_redundancy not in (None, "none"):
+      raise ValueError(
+          f"--shard-redundancy {shard_redundancy!r} mirrors pool pages; "
+          "contiguous slabs have no block pool — use --cache-layout paged "
+          "or tiered, or drop to --shard-redundancy none")
+    self.mirror = None
     self.model = model
     self.max_batch = max_batch
     self.storage = model.init_cache(max_batch)
@@ -449,7 +456,8 @@ class PagedLayout(CacheLayout):
                host_blocks: Optional[int] = None,
                prefix_cache: bool = False,
                prefix_cache_blocks: Optional[int] = None,
-               shard_plan: Optional[ssh.ShardPlan] = None):
+               shard_plan: Optional[ssh.ShardPlan] = None,
+               shard_redundancy: str = "none"):
     del host_blocks   # single-tier pool; TieredLayout consumes it
     policy = model.cache_policy
     if policy is None:
@@ -527,12 +535,6 @@ class PagedLayout(CacheLayout):
 
     self._gather = gather
     self._scatter = scatter
-    if plan_active:
-      self._decode_fused = jax.jit(
-          ssh.wrap_decode(decode_fused, shard_plan, self.storage),
-          donate_argnums=(2,))
-    else:
-      self._decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
     self._admit_fused = jax.jit(admit_fused, donate_argnums=(0,))
 
     # -- block-table-native decode (kernel dispatch) -------------------------
@@ -543,36 +545,26 @@ class PagedLayout(CacheLayout):
     # programs above remain — admission, COW forks, and the chunked suffix
     # prefill still use them — but the per-step decode traffic they cost
     # drops to zero.
-    self.dispatch = policy.dispatch
-    if shard_plan is not None:
-      # mesh-aware second resolution: seq split-K lives only in the dense
-      # xla program, so an auto-picked pallas dispatch degrades (and an
-      # explicit one raises) before anything compiles
-      self.dispatch = decode_dispatch.resolve_for_mesh(
-          self.dispatch, shard_plan.mode)
-    self.block_native = bool(
-        policy.block_native and self.dispatch.use_pallas
-        and model.cfg.family in ("dense", "moe")
-        and not model.cfg.hybrid)
-    if self.block_native:
-      axes_leaves = jax.tree_util.tree_leaves(self._axes)
+    axes_leaves = jax.tree_util.tree_leaves(self._axes)
 
-      def decode_native(params, cur, storage, tables, lengths):
-        leaves, treedef = jax.tree_util.tree_flatten(storage)
-        res = [st if ax == RESIDENT else None
+    def decode_native(params, cur, storage, tables, lengths):
+      leaves, treedef = jax.tree_util.tree_flatten(storage)
+      res = [st if ax == RESIDENT else None
+             for ax, st in zip(axes_leaves, leaves)]
+      pools = [None if ax == RESIDENT else st
                for ax, st in zip(axes_leaves, leaves)]
-        pools = [None if ax == RESIDENT else st
-                 for ax, st in zip(axes_leaves, leaves)]
-        logits, res, pools = model.decode_step_paged(
-            params, cur, res, pools, tables, lengths)
-        merged = [r if ax == RESIDENT else p
-                  for ax, r, p in zip(axes_leaves, res, pools)]
-        return logits, jax.tree_util.tree_unflatten(treedef, merged)
+      logits, res, pools = model.decode_step_paged(
+          params, cur, res, pools, tables, lengths)
+      merged = [r if ax == RESIDENT else p
+                for ax, r, p in zip(axes_leaves, res, pools)]
+      return logits, jax.tree_util.tree_unflatten(treedef, merged)
 
-      if plan_active:
-        decode_native = ssh.wrap_decode(decode_native, shard_plan,
-                                        self.storage)
-      self._decode_native = jax.jit(decode_native, donate_argnums=(2,))
+    # the raw (unsharded) program bodies are kept so `replan` can re-bind
+    # them to a degraded mesh after a confirmed shard loss
+    self._decode_fused_body = decode_fused
+    self._decode_native_body = decode_native
+    self._bind_plan(shard_plan)
+    self._init_mirror(shard_redundancy)
     # layout-constant byte terms of the traffic model (storage shapes are
     # fixed): one pool block / one token row across all layers and heads,
     # summed over paged leaves — hoisted so the per-step snapshot only
@@ -589,6 +581,178 @@ class PagedLayout(CacheLayout):
     # peak per-step traffic snapshot, refreshed while decoding (live tables)
     self.decode_traffic = self.decode_traffic_model()
     self._init_prefix_cache(prefix_cache, prefix_cache_blocks)
+
+  # -- shard plan binding / degraded-mesh replan -----------------------------
+  def _bind_plan(self, plan: Optional[ssh.ShardPlan]) -> None:
+    """(Re)compile the decode programs against a shard plan.
+
+    Called once at construction and again by `replan` after a confirmed
+    shard loss: dispatch re-resolves for the new mode (seq split-K lives
+    only in the dense xla program, so an auto-picked pallas dispatch
+    degrades — and an explicit one raises — before anything compiles), and
+    the fused/native bodies re-wrap + re-jit under the new mesh.
+    """
+    self.shard_plan = plan
+    plan_active = plan is not None and plan.active
+    policy = self.manager.policy
+    self.dispatch = policy.dispatch
+    if plan is not None:
+      # mesh-aware second resolution (see resolve_for_mesh)
+      self.dispatch = decode_dispatch.resolve_for_mesh(
+          self.dispatch, plan.mode)
+    self.block_native = bool(
+        policy.block_native and self.dispatch.use_pallas
+        and self.model.cfg.family in ("dense", "moe")
+        and not self.model.cfg.hybrid)
+    fused = self._decode_fused_body
+    if plan_active:
+      fused = ssh.wrap_decode(fused, plan, self.storage)
+    self._decode_fused = jax.jit(fused, donate_argnums=(2,))
+    if self.block_native:
+      native = self._decode_native_body
+      if plan_active:
+        native = ssh.wrap_decode(native, plan, self.storage)
+      self._decode_native = jax.jit(native, donate_argnums=(2,))
+
+  def replan(self, new_plan: ssh.ShardPlan) -> None:
+    """Adopt a degraded-mesh plan after a confirmed shard loss.
+
+    Host-side state (tables, allocator, prefix index, spill records) is
+    device-agnostic and survives untouched; only where the pool bytes live
+    and which decode program runs change.  Storage is re-placed on the
+    survivor submesh and the decode programs re-bind — recovering the
+    *content* of blocks the dead shard held is the engine's job
+    (`mirror_restore` or recompute-prefill), not this method's.
+    """
+    self.storage = ssh.place_storage(self.storage, new_plan)
+    self._bind_plan(new_plan)
+
+  def damage_storage(self) -> int:
+    """Zero every storage leaf (simulated shard-loss data damage).
+
+    In heads mode a dead shard held one kv-head slice of *every* pool
+    block, so no resident block survives intact; zeroing the whole tree is
+    the honest superset, and makes recovery falsifiable — a slot the
+    engine fails to restore decodes from zeros and diverges from the
+    oracle instead of silently passing.  Returns bytes scrubbed.
+    """
+    scrubbed = sum(lf.nbytes
+                   for lf in jax.tree_util.tree_leaves(self.storage))
+    self.storage = jax.tree_util.tree_map(
+        lambda lf: jnp.zeros_like(lf), self.storage)
+    return scrubbed
+
+  # -- host-tier shard mirror (--shard-redundancy host-mirror) ---------------
+  def _init_mirror(self, shard_redundancy: str) -> None:
+    self.shard_redundancy = str(shard_redundancy or "none")
+    if self.shard_redundancy not in ("none", "host-mirror"):
+      raise ValueError(
+          f"unknown --shard-redundancy {self.shard_redundancy!r}; "
+          "expected one of ('none', 'host-mirror')")
+    self.mirror: Optional[tiersmod.HostMirror] = None
+    self._mirror_codec_leaves: Optional[list] = None
+    if self.shard_redundancy != "host-mirror":
+      return
+    policy = self.manager.policy
+    codec_tree = policy.spill_codecs()
+    if (jax.tree_util.tree_structure(codec_tree)
+        != jax.tree_util.tree_structure(self._axes)):
+      raise ValueError(
+          f"{type(policy).__name__}.spill_codecs() structure does not match "
+          f"paged_axes()")
+    self._mirror_codec_leaves = jax.tree_util.tree_leaves(codec_tree)
+    for ck in self._mirror_codec_leaves:
+      tiersmod.get_codec(ck)                  # fail fast on unknown keys
+    self.mirror = tiersmod.HostMirror()
+
+  def mirror_sync(self, slot: int, rid: int, length: int) -> int:
+    """Refresh the host mirror of one active slot (write-through).
+
+    Encodes the slot's live pool blocks through the policy's spill codecs
+    and saves its resident rows bit-exactly, CRC32-stamping each frame —
+    the same wire format `TieredLayout.spill` writes, minus the host-block
+    bookkeeping (the mirror never occupies pool capacity).  Returns the
+    post-codec bytes written; 0 when mirroring is off.
+    """
+    if self.mirror is None:
+      return 0
+    mgr = self.manager
+    row = mgr.tables[slot]
+    pairs = [(j, int(row[j])) for j in range(self.blocks_per_req)
+             if row[j] != mgr.trash]
+    n = len(pairs)
+    padded = np.full((self.blocks_per_req,), mgr.trash, np.int32)
+    padded[:n] = [pid for _, pid in pairs]
+    padded_j = jnp.asarray(padded)
+    payloads: list = []
+    resident_rows: list = []
+    nbytes = raw = 0
+    for ax, ck, st in zip(jax.tree_util.tree_leaves(self._axes),
+                          self._mirror_codec_leaves,
+                          jax.tree_util.tree_leaves(self.storage)):
+      if ax == RESIDENT:
+        rowv = np.asarray(st[:, slot])
+        payloads.append(None)
+        resident_rows.append(rowv)
+        nbytes += rowv.nbytes
+        raw += rowv.nbytes
+      else:
+        arr = np.asarray(st[padded_j])[:n]
+        enc, nb = tiersmod.get_codec(ck).encode(arr)
+        payloads.append((ck, enc, arr.shape, arr.dtype))
+        resident_rows.append(None)
+        nbytes += nb
+        raw += arr.nbytes
+    rec = tiersmod.MirrorRecord(
+        slot=slot, rid=rid, length=length, hwm=mgr.high_water(slot),
+        pairs=pairs, payloads=payloads, resident_rows=resident_rows,
+        checksums=[None if p is None else tiersmod.payload_checksum(p[1])
+                   for p in payloads],
+        nbytes=nbytes, raw_bytes=raw)
+    self.mirror.put(rec)
+    return nbytes
+
+  def mirror_restore(self, slot: int) -> Optional[tiersmod.MirrorRecord]:
+    """Rebuild a slot's pool pages from its host mirror after shard loss.
+
+    Verifies every frame checksum first (`SpillPageCorruption` on
+    mismatch, storage untouched — the engine falls back to recompute),
+    then decodes and re-scatters the payloads into the *same* device block
+    ids under the current (replanned) placement, and restores the slot's
+    resident rows.  Returns the record restored, or None when the mirror
+    holds nothing for this slot.
+    """
+    if self.mirror is None:
+      return None
+    rec = self.mirror.get(slot)
+    if rec is None:
+      return None
+    rec.verify()
+    dev_ids = rec.device_block_ids
+    padded = np.full((self.blocks_per_req,), self.manager.trash, np.int32)
+    padded[:len(dev_ids)] = dev_ids
+    padded_j = jnp.asarray(padded)
+    leaves, treedef = jax.tree_util.tree_flatten(self.storage)
+    out = []
+    for ax, st, payload, rowv in zip(jax.tree_util.tree_leaves(self._axes),
+                                     leaves, rec.payloads,
+                                     rec.resident_rows):
+      if ax == RESIDENT:
+        st = st.at[:, slot].set(jnp.asarray(rowv).astype(st.dtype))
+      else:
+        ck, enc, shape, dtype = payload
+        staged = tiersmod.get_codec(ck).decode(enc, shape, dtype)
+        # pad with zero blocks aimed at the trash block: fixed shapes keep
+        # the dispatch cache warm, and trash content is never read
+        pad_shape = (self.blocks_per_req,) + tuple(st.shape[1:])
+        vals = np.zeros(pad_shape, staged.dtype)
+        vals[:len(dev_ids)] = staged
+        st = st.at[padded_j].set(jnp.asarray(vals).astype(st.dtype))
+      out.append(st)
+    self.storage = jax.tree_util.tree_unflatten(treedef, out)
+    self.mirror.restores += 1
+    self.mirror.restore_bytes += rec.nbytes
+    return rec
 
   # -- prefix sharing (copy-on-write block tables) ---------------------------
   def _init_prefix_cache(self, enabled: bool,
@@ -994,6 +1158,8 @@ class PagedLayout(CacheLayout):
         jnp.asarray(slot, jnp.int32))
 
   def release(self, slot: int) -> None:
+    if self.mirror is not None:
+      self.mirror.drop(slot)
     self.manager.release(slot)
 
   # -- per-step growth -------------------------------------------------------
@@ -1124,12 +1290,14 @@ class TieredLayout(PagedLayout):
                host_blocks: Optional[int] = None,
                prefix_cache: bool = False,
                prefix_cache_blocks: Optional[int] = None,
-               shard_plan: Optional[ssh.ShardPlan] = None):
+               shard_plan: Optional[ssh.ShardPlan] = None,
+               shard_redundancy: str = "none"):
     self._host_blocks_arg = host_blocks       # consumed by _make_allocator
     super().__init__(model, max_batch, block_size=block_size,
                      num_blocks=num_blocks, prefix_cache=prefix_cache,
                      prefix_cache_blocks=prefix_cache_blocks,
-                     shard_plan=shard_plan)
+                     shard_plan=shard_plan,
+                     shard_redundancy=shard_redundancy)
     policy = model.cache_policy
     codec_tree = policy.spill_codecs()
     if (jax.tree_util.tree_structure(codec_tree)
@@ -1226,6 +1394,10 @@ class TieredLayout(PagedLayout):
       # pin shared blocks device-resident across the swap-out: the slot's
       # hold is about to be released and the index may evict at any time
       self.pool.ref([pid for _, pid in shared], owner=rec.spill_owner)
+    if self.mirror is not None:
+      # the spill record is now the authoritative host copy; the mirror
+      # entry would go stale the moment the slot is re-tenanted
+      self.mirror.drop(slot)
     mgr.release(slot)                   # slot's holds dropped, excl freed
     rec.nbytes, rec.raw_bytes = nbytes, raw
     self.records[rid] = rec
@@ -1360,6 +1532,17 @@ class TieredLayout(PagedLayout):
                       owner=rec.spill_owner)
     self.pool.unref(rec.host_ids, owner=rid, tier=tiersmod.HOST)
     return rec.n_blocks
+
+  def spill_pins(self, rid: int) -> List[int]:
+    """Device block ids a spilled request pins (its shared prefix blocks).
+
+    The shard-loss recovery path uses this to decide whether a spilled
+    request can simply resume: if any pinned block was damaged by the dead
+    shard, its cached prefix is gone and the request must recompute."""
+    rec = self.records.get(rid)
+    if rec is None:
+      return []
+    return [pid for _, pid in rec.shared_pairs]
 
   def _decode_payloads(self, rec):
     # verify the frame checksums stamped at spill time before decoding:

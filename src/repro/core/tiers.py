@@ -640,3 +640,94 @@ class SpillRecord:
   @property
   def n_blocks(self) -> int:
     return len(self.pairs)
+
+
+# ---------------------------------------------------------------------------
+# Host-tier shard mirror (shard redundancy)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MirrorRecord:
+  """Host-tier write-through copy of one active slot's pool pages.
+
+  Shaped like a `SpillRecord` minus the host-block bookkeeping: the mirror
+  is redundancy, not residency — it never occupies `TieredBlockPool` host
+  blocks, so mirroring a shard cannot contend with the spill path for
+  capacity.  `pairs` map each live logical table index to its *device*
+  block id (the blocks a restore re-scatters into), `payloads` hold one
+  spill-codec payload per paged leaf, `resident_rows` the per-slot resident
+  leaves, and `checksums` the same CRC32 frame checksums spill frames carry
+  — a bit-flipped mirror page is detected before any byte re-enters the
+  device pool.
+  """
+  slot: int
+  rid: int
+  length: int
+  hwm: int
+  pairs: List[Tuple[int, int]]          # (logical_j, device_block_id)
+  payloads: List[Optional[Tuple[str, Any, Tuple[int, ...], Any]]]
+  resident_rows: List[Optional[np.ndarray]]
+  checksums: List[Optional[int]] = dataclasses.field(default_factory=list)
+  nbytes: int = 0                       # post-codec bytes held on the host
+  raw_bytes: int = 0
+
+  @property
+  def device_block_ids(self) -> List[int]:
+    return [bid for _, bid in self.pairs]
+
+  def verify(self) -> None:
+    """Raise `SpillPageCorruption` when any payload fails its checksum."""
+    for payload, want in zip(self.payloads, self.checksums):
+      if payload is None or want is None:
+        continue
+      got = payload_checksum(payload[1])
+      if got != want:
+        raise SpillPageCorruption(
+            f"mirror page for request {self.rid} (slot {self.slot}) failed "
+            f"its checksum: stored {want:#010x}, computed {got:#010x}")
+
+
+class HostMirror:
+  """Write-through host mirror of active slots' device pool pages.
+
+  `--shard-redundancy host-mirror`: after every decode step the layout
+  refreshes one `MirrorRecord` per active slot (encoded through the same
+  spill codecs the tier boundary uses, CRC32-checksummed per frame).  When
+  the watchdog confirms a shard death in heads mode — where every resident
+  block loses a kv-head slice — a lost slot restores by decode + re-scatter
+  under the replanned mesh instead of abort-and-recompute.  Counters feed
+  the stats-json `shard_health` section and the `recovery.shard` bench.
+  """
+
+  def __init__(self) -> None:
+    self.records: Dict[int, MirrorRecord] = {}
+    self.writes = 0
+    self.write_bytes = 0
+    self.restores = 0
+    self.restore_bytes = 0
+
+  def put(self, rec: MirrorRecord) -> None:
+    self.records[rec.slot] = rec
+    self.writes += 1
+    self.write_bytes += rec.nbytes
+
+  def get(self, slot: int) -> Optional[MirrorRecord]:
+    return self.records.get(slot)
+
+  def drop(self, slot: int) -> None:
+    self.records.pop(slot, None)
+
+  def clear(self) -> None:
+    self.records.clear()
+
+  @property
+  def resident_bytes(self) -> int:
+    """Host bytes the live mirror currently holds (not cumulative)."""
+    return sum(r.nbytes for r in self.records.values())
+
+  def as_dict(self) -> dict:
+    return dict(slots=sorted(self.records), writes=self.writes,
+                write_bytes=self.write_bytes, restores=self.restores,
+                restore_bytes=self.restore_bytes,
+                resident_bytes=self.resident_bytes)

@@ -64,6 +64,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -153,6 +154,14 @@ class EngineStats:
   decode_faults: int = 0         # transient decode-step faults retried
   corrupt_pages: int = 0         # corrupted spill pages detected + recovered
   restored_prefix_blocks: int = 0  # prefix blocks revived from a snapshot
+  # shard fault tolerance (PR 10): watchdog + degraded-mesh replan counters
+  shard_losses: int = 0          # shards confirmed dead by the watchdog
+  shard_stalls: int = 0          # one-round shard straggles injected
+  shard_replans: int = 0         # degraded-mesh re-plans adopted
+  shard_mirror_restores: int = 0   # slots rebuilt from the host mirror
+  shard_recovered_requests: int = 0  # requests recovered (mirror or recompute)
+  dead_shards: List[int] = dataclasses.field(default_factory=list)
+  shard_heartbeats: List[int] = dataclasses.field(default_factory=list)
   # graceful-degradation state machine: current state plus the transition
   # log (bounded; each entry records step/virtual time/old/new)
   degradation_state: str = "NORMAL"
@@ -268,6 +277,12 @@ class EngineStats:
             f"{self.alloc_spikes} alloc spikes")
     if self.restored_prefix_blocks:
       s += f" | restored {self.restored_prefix_blocks} prefix blocks"
+    if self.shard_losses or self.shard_stalls:
+      s += (f" | shard faults: {self.shard_losses} lost "
+            f"(dead {self.dead_shards}), {self.shard_stalls} stalled, "
+            f"{self.shard_replans} replans, "
+            f"{self.shard_mirror_restores} mirror restores, "
+            f"{self.shard_recovered_requests} requests recovered")
     if self.virtual_s:
       s += (f" | virtual {self.virtual_s:.3f} s "
             f"({1e3 * self.compute_s:.1f} ms compute, "
@@ -349,7 +364,9 @@ class ServeEngine:
                slo_enforce: bool = False,
                snapshot_dir: Optional[str] = None,
                mesh: Any = None,
-               mesh_model: Optional[int] = None):
+               mesh_model: Optional[int] = None,
+               shard_redundancy: str = "none",
+               shard_confirm_after: int = 2):
     if cfg.family not in ("dense", "moe"):
       raise ValueError(
           f"ServeEngine supports dense/moe attention families, got "
@@ -396,7 +413,9 @@ class ServeEngine:
       raise ValueError(
           f"sharded serving (mesh model axis "
           f"{self.shard_plan.size}) partitions the block pool; it requires "
-          f"cache_layout='paged' or 'tiered', got {layout_name!r}")
+          f"cache_layout='paged' or 'tiered', got {layout_name!r} — pass "
+          f"--cache-layout paged/tiered, or drop --mesh-model to 1 (and "
+          f"--shard-redundancy to none) to serve unsharded")
 
     self.model = Model(cfg, context_len=context_len)
     if params is None:
@@ -419,7 +438,8 @@ class ServeEngine:
         prefix_cache=self.prefix_cache,
         prefix_cache_blocks=prefix_cache_blocks
         if prefix_cache_blocks is not None else cfg.prefix_cache_blocks,
-        shard_plan=self.shard_plan)
+        shard_plan=self.shard_plan,
+        shard_redundancy=shard_redundancy)
     if self.prefix_cache:
       # the chunked suffix prefill must attend over exactly the padded
       # extent the full prefill uses — that is the bit-exactness contract
@@ -443,6 +463,13 @@ class ServeEngine:
     self._degradation = DegradationController()
     self.snapshot_dir = snapshot_dir
 
+    # shard fault tolerance (PR 10): per-shard decode heartbeat watchdog.
+    # Runs on unsharded engines too (shards=1): a confirmed "shard 0" death
+    # there is a whole-pool loss and every resident request is recovered.
+    self.shard_health = ssh.ShardHealth(
+        self.shard_plan.size if plan_active else 1,
+        confirm_after=shard_confirm_after)
+
     self.stats = self._new_stats()
     self._lengths = np.zeros((max_batch,), np.int32)
     self._cur = np.zeros((max_batch,), np.int32)
@@ -456,9 +483,18 @@ class ServeEngine:
     if self.snapshot_dir and self.prefix_cache:
       latest = ckpt_lib.latest_step(self.snapshot_dir)
       if latest is not None:
-        tree, extra = ckpt_lib.load_raw(self.snapshot_dir, latest)
-        self.stats.restored_prefix_blocks = self.layout.prefix_restore(
-            tree, extra)
+        try:
+          tree, extra = ckpt_lib.load_raw(self.snapshot_dir, latest)
+        except ckpt_lib.CheckpointCorruption as exc:
+          # refuse the snapshot loudly, pool untouched: a cold prefix cache
+          # is correct (just slower); a bit-rotted one decodes garbage
+          warnings.warn(
+              f"prefix-cache snapshot step {latest} in {self.snapshot_dir} "
+              f"refused, starting cold: {exc}", RuntimeWarning,
+              stacklevel=2)
+        else:
+          self.stats.restored_prefix_blocks = self.layout.prefix_restore(
+              tree, extra)
 
   # -------------------------------------------------------------------------
   # public API
@@ -582,6 +618,7 @@ class ServeEngine:
     """Admit queued requests into free slots, run one batched decode step,
     and return the requests that finished this step."""
     self.stats.queue_depth_samples.append(len(self._queue))
+    self._shard_fault_gate()
     finished = self._enforce_slo() if self.slo_enforce else []
     finished.extend(self._admit())
     if self.active_count == 0:
@@ -627,6 +664,7 @@ class ServeEngine:
         # ring-reuse: hand back blocks the policy's own masking retired
         self.stats.blocks_reclaimed += self.layout.reclaim(
             slot, int(self._lengths[slot]))
+    self._mirror_sync()
     self._fetch_ahead()
     self._step_no += 1
     self.stats.steps += 1
@@ -1036,6 +1074,182 @@ class ServeEngine:
         raise fault_tolerance.SimulatedFailure(
             f"decode step {self._step_no} failed "
             f"{attempt} consecutive attempts")
+
+  # -- shard fault tolerance (PR 10) -----------------------------------------
+
+  def _shard_fault_gate(self) -> None:
+    """One watchdog heartbeat round per engine step.
+
+    The injector's shard surfaces fire first (a stalled shard misses this
+    round and costs the synchronous mesh one step of virtual time; a lost
+    shard stops beating permanently), then `ShardHealth.record` confirms
+    deaths after `confirm_after` consecutive misses and the engine runs
+    the recovery path for each.
+    """
+    inj = self.fault_injector
+    health = self.shard_health
+    if inj is not None:
+      if hasattr(inj, "shard_stall"):
+        s = inj.shard_stall(self._step_no, health.shards)
+        if s is not None:
+          health.mark_stalled(s)
+          self.stats.shard_stalls += 1
+          if self.clock is not None:
+            # a synchronous mesh decodes at the pace of its slowest shard:
+            # one straggler charges everyone one extra step
+            self.clock.advance(self.clock.decode_step_s)
+      if hasattr(inj, "shard_loss"):
+        s = inj.shard_loss(self._step_no, health.shards)
+        if s is not None:
+          health.mark_lost(s)
+    dead = health.record()
+    self.stats.shard_heartbeats = list(health.beats)
+    if dead:
+      self._recover_shard_loss(dead)
+
+  def _recover_shard_loss(self, dead: List[int]) -> None:
+    """Confirmed shard death: drain, damage, replan, recover.
+
+    1. Drain — every overlapped fetch rolls back to SPILLED (its transfer
+       may have involved the dead shard).
+    2. Damage model — heads mode shards a kv-head slice of *every* pool
+       block, so a dead shard voids all resident data (the storage is
+       scrubbed to make recovery falsifiable); seq and none replicate
+       storage, so survivors keep full copies and only the plan changes.
+    3. Replan — `ShardPlan.replan(survivors)` re-partitions over the
+       surviving subset and the layout re-places storage + re-binds its
+       decode programs; params re-commit to the survivor submesh.
+    4. Recover — with data lost, each active slot restores from its host
+       mirror (checksum-verified) or resets for a recompute prefill;
+       spilled requests whose pinned shared blocks were damaged recompute
+       too.  Requests are recovered, never aborted.
+    """
+    plan = self.shard_plan
+    self.stats.shard_losses += len(dead)
+    self.stats.dead_shards.extend(int(s) for s in dead)
+    for rid in list(self._transfer_ready):
+      self.layout.abort_prefetch(rid)
+    self._transfer_ready.clear()
+    self._sync_transfer_stats()
+    lost_data = plan is None or not plan.active or plan.mode == "heads"
+    if lost_data and hasattr(self.layout, "damage_storage"):
+      self.layout.damage_storage()
+    n_after = 1
+    if plan is not None and plan.active:
+      survivors = [i for i in range(plan.size) if i not in set(dead)]
+      new_plan = plan.replan(survivors)
+      self.layout.replan(new_plan)
+      self.shard_plan = new_plan
+      # the replicated network must re-commit to the survivor submesh —
+      # GSPMD would otherwise see params placed on a dead device, and an
+      # inactive fallback plan still re-places storage, so prefill outputs
+      # must land on the same submesh
+      self.params = ssh.replicate(self.params, new_plan)
+      self.stats.mesh_shards = new_plan.size
+      self.stats.mesh_mode = new_plan.mode
+      self.stats.shard_replans += 1
+      n_after = new_plan.size if new_plan.active else 1
+    # the watchdog re-bases on the new plan's shard indices (a replanned
+    # mesh numbers its shards from zero; stale lost marks must not
+    # re-confirm against the survivors)
+    self.shard_health = ssh.ShardHealth(
+        n_after, confirm_after=self.shard_health.confirm_after)
+    if lost_data:
+      self._recover_lost_data()
+
+  def _recover_lost_data(self) -> None:
+    """Rebuild every resident request after whole-pool data damage."""
+    if self.prefix_cache:
+      # index-held blocks have no owning request to recompute them; the
+      # cache rebuilds warm as recovered requests re-publish
+      self.layout.prefix_clear()
+    restored_blocks: set = set()
+    recompute: List[RequestHandle] = []
+    mirrored = getattr(self.layout, "mirror", None) is not None
+    ledger = getattr(self.layout, "ledger", None)
+    for slot, req in self.active_requests:
+      rec = None
+      if mirrored:
+        try:
+          rec = self.layout.mirror_restore(slot)
+        except tiersmod.SpillPageCorruption:
+          rec = None                  # damaged mirror page: fall back
+      self.stats.shard_recovered_requests += 1
+      if rec is not None:
+        restored_blocks.update(rec.device_block_ids)
+        self.stats.shard_mirror_restores += 1
+        if self.clock is not None and ledger is not None:
+          # the restore transfer blocks the slot's next decode step
+          self.clock.stall_until(
+              self.clock.start_transfer(ledger.transfer_s(rec.nbytes)))
+        continue
+      # recompute path: release the slot and reset the handle — greedy
+      # decoding regenerates the identical tokens on re-admission
+      req.tokens = []
+      req.slot = None
+      req.admitted_step = None
+      req.admit_s = None
+      req.first_token_s = None
+      req.preempt_count += 1
+      self.layout.release(slot)
+      self._slots[slot] = None
+      self._lengths[slot] = 0
+      self._cur[slot] = 0
+      self.stats.preempts += 1
+      recompute.append(req)
+    # spilled requests: their payloads live on the host tier (safe), but
+    # pinned shared-prefix blocks sit in the damaged device pool — resume
+    # only when every pin was mirror-restored, else recompute
+    if hasattr(self.layout, "spill_pins"):
+      for req in self._queue:
+        if not req.spilled:
+          continue
+        pins = set(self.layout.spill_pins(req.rid))
+        if pins and not pins <= restored_blocks:
+          self.layout.abort_prefetch(req.rid)
+          self.layout.drop_spilled(req.rid)
+          req.spilled = False
+          req.tokens = []
+          req.resume_len = 0
+          req.resume_cur = 0
+          req.admit_s = None
+          req.first_token_s = None
+          req.preempt_count += 1
+          self.stats.shard_recovered_requests += 1
+    if recompute:
+      ordered = list(self.scheduler.shard_recovery_requeue(self, recompute))
+      for req in reversed(ordered):
+        self._queue.appendleft(req)
+    self._sync_transfer_stats()
+
+  def _mirror_sync(self) -> None:
+    """Write-through refresh of every active slot's host mirror.  Mirror
+    writes ride a dedicated host path overlapped with the next decode step,
+    so no virtual time is charged; restores are what stall (and are charged
+    at `_recover_lost_data`)."""
+    if getattr(self.layout, "mirror", None) is None:
+      return
+    for slot, req in self.active_requests:
+      self.layout.mirror_sync(slot, req.rid, int(self._lengths[slot]))
+
+  def shard_health_info(self) -> dict:
+    """Stats-json `shard_health` section: watchdog state, recovery
+    counters, and the host mirror's footprint."""
+    info = self.shard_health.as_dict()
+    info.update(
+        redundancy=getattr(self.layout, "shard_redundancy", "none"),
+        losses=self.stats.shard_losses,
+        stalls=self.stats.shard_stalls,
+        replans=self.stats.shard_replans,
+        mirror_restores=self.stats.shard_mirror_restores,
+        recovered_requests=self.stats.shard_recovered_requests,
+        dead_shards=list(self.stats.dead_shards),
+        mesh_shards=self.stats.mesh_shards,
+        mesh_mode=self.stats.mesh_mode)
+    mirror = getattr(self.layout, "mirror", None)
+    if mirror is not None:
+      info["mirror"] = mirror.as_dict()
+    return info
 
   # -- SLO enforcement + graceful degradation --------------------------------
 

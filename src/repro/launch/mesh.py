@@ -26,19 +26,24 @@ def make_local_mesh(model: int = 1, data: int | None = None):
   """
   n = len(jax.devices())
   if model < 1:
-    raise ValueError(f"mesh model axis must be >= 1, got {model}")
+    raise ValueError(
+        f"mesh model axis must be >= 1, got {model}; pass --mesh-model N "
+        f"with N >= 1 (N=1 serves unsharded)")
   if n % model != 0:
     raise ValueError(
         f"model axis size {model} does not divide the device count {n}; "
-        f"pick a model axis from the divisors of {n} (or force more host "
-        f"devices via XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        f"pass --mesh-model with a divisor of {n}, or force more host "
+        f"devices via XLA_FLAGS=--xla_force_host_platform_device_count=N "
+        f"(shard redundancy does not relax this: --shard-redundancy "
+        f"host-mirror protects KV pages, it cannot invent devices)")
   if data is None:
     data = n // model
   if data * model != n:
     raise ValueError(
         f"mesh axes (data={data}, model={model}) cover {data * model} "
         f"devices but {n} exist; axis sizes must tile the device count "
-        f"exactly")
+        f"exactly — adjust --mesh-model (and the data axis) so "
+        f"data * model == {n}")
   return jax.make_mesh((data, model), ("data", "model"))
 
 

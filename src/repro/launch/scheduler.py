@@ -100,6 +100,14 @@ class Scheduler:
     rid = self.fetch_ahead(engine)
     return [] if rid is None else [rid]
 
+  def shard_recovery_requeue(self, engine, reqs: Sequence) -> Sequence:
+    """Order in which requests recovered from a shard loss re-enter the
+    queue head (first element re-admits first).  Default: submission order
+    — the fairness FIFO recovery owes requests that lost progress through
+    no fault of their own."""
+    del engine
+    return sorted(reqs, key=lambda r: r.rid)
+
   def __repr__(self) -> str:
     return f"{type(self).__name__}()"
 
@@ -297,3 +305,12 @@ class SLOScheduler(TieredScheduler):
       if expired:
         return min(expired)[2]
     return super().on_exhausted(engine)
+
+  def shard_recovery_requeue(self, engine, reqs):
+    """Recovered requests re-admit highest priority / tightest deadline
+    first — the ones most likely to still make their SLO get the slots."""
+    del engine
+    return sorted(reqs, key=lambda r: (
+        -r.priority,
+        r.deadline_s if r.deadline_s is not None else float("inf"),
+        r.rid))

@@ -67,6 +67,7 @@ from repro.launch import scheduler as scheduler_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh
 from repro.parallel import sharding as shd
+from repro.runtime import fault_tolerance as ft
 
 
 @dataclasses.dataclass
@@ -213,7 +214,9 @@ def build_engine(args, clock=None, fault_injector=None):
                        fault_injector=fault_injector,
                        mesh_model=getattr(args, "mesh_model", None),
                        slo_enforce=getattr(args, "slo_enforce", False),
-                       snapshot_dir=getattr(args, "snapshot_dir", None))
+                       snapshot_dir=getattr(args, "snapshot_dir", None),
+                       shard_redundancy=getattr(args, "shard_redundancy",
+                                                "none"))
   if getattr(args, "pcie_gbps", None):
     ledger = getattr(engine.layout, "ledger", None)
     if ledger is not None:
@@ -243,6 +246,8 @@ def dump_stats_json(engine, path: str, extra: Any = None) -> None:
   if ledger is not None:
     payload["transfer"] = ledger.as_dict()
   payload["mesh"] = engine.mesh_info()
+  if hasattr(engine, "shard_health_info"):
+    payload["shard_health"] = engine.shard_health_info()
   index = getattr(engine.layout, "prefix_index", None)
   if index is not None:
     payload["prefix_cache"] = dict(
@@ -373,8 +378,11 @@ def run_workload_demo(args) -> None:
   """Trace-driven serving under the virtual clock: seeded arrivals feed the
   engine, transfers overlap decode (or serialize with --no-overlap), and
   the run reports SLO metrics instead of wall-clock throughput."""
+  import warnings
+
   from repro.launch import slo as slo_lib
   from repro.launch import workload as workload_lib
+  from repro.runtime.fault_tolerance import FaultPlan
   from repro.runtime.fault_tolerance import FetchFaultInjector
   from repro.runtime.fault_tolerance import make_fault_plan
   spec = workload_spec_from_args(args)
@@ -387,8 +395,23 @@ def run_workload_demo(args) -> None:
     injector = make_fault_plan(args.fault_kind, args.fault_rate,
                                seed=spec.fetch_fail_seed)
   elif spec.fetch_fail_rate > 0:
+    warnings.warn(
+        "--fetch-fail-rate is deprecated; use --fault-kind fetch "
+        "--fault-rate R (the seeded multi-surface FaultPlan path)",
+        DeprecationWarning, stacklevel=2)
     injector = FetchFaultInjector(fail_rate=spec.fetch_fail_rate,
                                   seed=spec.fetch_fail_seed)
+  loss_rate = getattr(args, "shard_fault_loss", 0.0) or 0.0
+  stall_rate = getattr(args, "shard_fault_stall", 0.0) or 0.0
+  if loss_rate > 0 or stall_rate > 0:
+    if injector is None:
+      injector = FaultPlan(seed=spec.fetch_fail_seed)
+    elif not isinstance(injector, FaultPlan):
+      raise SystemExit(
+          "--shard-fault-* needs the FaultPlan surfaces; replace "
+          "--fetch-fail-rate with --fault-kind fetch --fault-rate")
+    injector.shard_loss_rate = loss_rate
+    injector.shard_stall_rate = stall_rate
   engine = build_engine(args, clock=clock, fault_injector=injector)
   driver = workload_lib.WorkloadDriver(engine, spec)
   result = driver.run()
@@ -405,6 +428,8 @@ def run_workload_demo(args) -> None:
           f"{len(engine.stats.degradation_transitions)} transitions")
   if injector is not None and hasattr(injector, "by_surface"):
     print(f"fault plan: {injector.injected} injected {dict(injector.by_surface)}")
+  if engine.stats.shard_losses or engine.stats.shard_stalls:
+    print(f"shard health: {engine.shard_health_info()}")
   if getattr(args, "save_snapshot", False):
     saved = engine.save_snapshot(step=engine.stats.steps)
     if saved:
@@ -529,16 +554,34 @@ def make_parser() -> argparse.ArgumentParser:
                        "PRESSURED -> SHEDDING degradation state machine "
                        "(pairs with --scheduler slo)")
   ap.add_argument("--fault-kind", default=None,
-                  choices=("fetch", "corrupt-spill", "alloc-exhaustion",
-                           "decode-transient"),
+                  choices=tuple(ft.FAULT_KINDS),
                   help="seeded multi-surface fault injection (FaultPlan): "
                        "fetch failures, corrupted spill pages (checksum-"
                        "detected, recovered by recompute-prefill), allocator "
-                       "exhaustion spikes, or transient decode-step failures "
-                       "(bounded retry/backoff)")
+                       "exhaustion spikes, transient decode-step failures "
+                       "(bounded retry/backoff), or mesh shard loss/stall "
+                       "(watchdog-confirmed, degraded-mesh replan)")
   ap.add_argument("--fault-rate", type=float, default=0.1,
                   help="per-event probability for --fault-kind (seeded by "
                        "--workload-seed)")
+  ap.add_argument("--shard-fault-loss", type=float, default=0.0,
+                  metavar="RATE",
+                  help="per-step probability of a seeded shard-loss fault "
+                       "(kills one mesh shard; the watchdog confirms the "
+                       "death and the engine replans the survivors).  "
+                       "Composes with --fault-kind")
+  ap.add_argument("--shard-fault-stall", type=float, default=0.0,
+                  metavar="RATE",
+                  help="per-step probability of a seeded shard-stall fault "
+                       "(one shard misses its decode heartbeat; sustained "
+                       "stalls escalate to a confirmed death)")
+  ap.add_argument("--shard-redundancy", default="none",
+                  choices=("none", "host-mirror"),
+                  help="KV redundancy against shard loss: host-mirror keeps "
+                       "a checksummed host-tier copy of every resident "
+                       "request's pool pages (written through the spill "
+                       "codecs) so a dead shard's blocks restore by fetch + "
+                       "re-scatter; none falls back to recompute-prefill")
   ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
                   help="crash-safe prefix-cache snapshots: restore the "
                        "latest snapshot in DIR at engine startup (warm "
@@ -573,6 +616,10 @@ def main():
     ap.error("--save-snapshot requires --snapshot-dir")
   if args.fault_kind and args.workload is None:
     ap.error("--fault-kind requires --workload (fault plans drive the "
+             "virtual-clock harness)")
+  if (args.shard_fault_loss or args.shard_fault_stall) \
+      and args.workload is None:
+    ap.error("--shard-fault-* requires --workload (shard faults drive the "
              "virtual-clock harness)")
 
   if args.workload is not None:

@@ -71,6 +71,7 @@ class ShardPlan:
   size: int = 1                 # shards along `axis`
   n_kv_heads: int = 0
   n_heads: int = 0
+  policy: str = "exact"         # resolved cache policy; gates the seq link
 
   @property
   def active(self) -> bool:
@@ -85,6 +86,39 @@ class ShardPlan:
     return dict(axis=self.axis, mode=self.mode, shards=self.size,
                 devices=[str(d) for d in self.mesh.devices.reshape(-1)],
                 bit_identical=self.bit_identical)
+
+  def replan(self, survivors) -> "ShardPlan":
+    """Degraded-mesh plan over the surviving shards after confirmed deaths.
+
+    Same fallback-chain doctrine as `plan_for`, re-run against what is
+    left: **heads** over the largest divisor-compatible survivor subset
+    (kv heads re-partition; extra survivors idle rather than breaking
+    divisibility), else **seq** split-K over every survivor when the
+    policy supports it, else **single-device** on the first survivor.
+    Survivor indices are shard positions along `self.axis` in the current
+    plan; the returned plan's mesh is a submesh of the current one
+    (`parallel.sharding.survivor_submesh`), so re-placing storage with
+    `place_storage` moves the pool onto the survivors.
+    """
+    from repro.parallel.sharding import survivor_submesh
+    surv = sorted(set(int(s) for s in survivors))
+    if not surv:
+      raise ValueError("cannot replan with no surviving shards")
+    if any(s < 0 or s >= max(self.size, 1) for s in surv):
+      raise ValueError(f"survivors {surv} out of range for a "
+                       f"{self.size}-shard plan")
+    n = len(surv)
+    k = max((d for d in range(2, n + 1)
+             if self.n_kv_heads > 0 and self.n_kv_heads % d == 0),
+            default=1)
+    if k > 1:
+      mesh = survivor_submesh(self.mesh, self.axis, surv[:k])
+      return dataclasses.replace(self, mesh=mesh, mode="heads", size=k)
+    if n > 1 and self.policy in _SEQ_CAPABLE_POLICIES:
+      mesh = survivor_submesh(self.mesh, self.axis, surv)
+      return dataclasses.replace(self, mesh=mesh, mode="seq", size=n)
+    mesh = survivor_submesh(self.mesh, self.axis, surv[:1])
+    return dataclasses.replace(self, mesh=mesh, mode="none", size=1)
 
 
 # Policies whose decode attend the seq split-K path can drive: the split
@@ -103,10 +137,11 @@ def plan_for(cfg, mesh: Mesh, *, axis: str = MODEL_AXIS) -> ShardPlan:
   shard.
   """
   size = int(dict(mesh.shape).get(axis, 1))
+  policy = cfg.resolved_cache_policy()
   if size <= 1:
     return ShardPlan(mesh=mesh, axis=axis, mode="none", size=1,
-                     n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads)
-  policy = cfg.resolved_cache_policy()
+                     n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
+                     policy=policy)
   if cfg.n_kv_heads % size == 0:
     mode = "heads"
   elif policy in _SEQ_CAPABLE_POLICIES:
@@ -119,7 +154,8 @@ def plan_for(cfg, mesh: Mesh, *, axis: str = MODEL_AXIS) -> ShardPlan:
         f"{_SEQ_CAPABLE_POLICIES} (compressed policies couple eviction to "
         f"position); pick a mesh model axis dividing {cfg.n_kv_heads}")
   return ShardPlan(mesh=mesh, axis=axis, mode=mode, size=size,
-                   n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads)
+                   n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
+                   policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +328,65 @@ def seq_append_and_attend(cache, q, k_new, v_new, lengths, scale,
       [mxs[i] for i in range(plan.size)],
       [dns[i] for i in range(plan.size)])
   return combined.reshape(b, hq, d), cache._replace(k=k_c, v=v_c)
+
+
+# ---------------------------------------------------------------------------
+# Shard health watchdog
+# ---------------------------------------------------------------------------
+
+
+class ShardHealth:
+  """Per-shard decode heartbeat watchdog.
+
+  The engine records one heartbeat round per serve step: every shard beats
+  unless the fault injector marked it lost (it stops beating permanently)
+  or stalled (it skips this round).  A shard that misses `confirm_after`
+  consecutive rounds is confirmed dead exactly once — `record()` returns
+  the newly confirmed ids and the engine drains in-flight transfers,
+  replans over the survivors, and recovers affected requests.  A sustained
+  stall therefore escalates to a loss, the standard watchdog semantics; a
+  transient straggle just costs the mesh one step of virtual time.
+  """
+
+  def __init__(self, shards: int = 1, confirm_after: int = 2):
+    self.shards = max(int(shards), 1)
+    self.confirm_after = max(int(confirm_after), 1)
+    self.beats = [0] * self.shards
+    self.missed = [0] * self.shards
+    self.lost: set = set()
+    self.confirmed: set = set()
+    self._stalled: set = set()
+
+  def mark_lost(self, shard: int) -> None:
+    """Shard stops heartbeating permanently (shard-loss injection)."""
+    self.lost.add(int(shard))
+
+  def mark_stalled(self, shard: int) -> None:
+    """Shard misses the next heartbeat round only (shard-stall)."""
+    self._stalled.add(int(shard))
+
+  def record(self) -> list:
+    """One heartbeat round; returns shard ids newly confirmed dead."""
+    fresh = []
+    for s in range(self.shards):
+      if s in self.lost or s in self._stalled:
+        self.missed[s] += 1
+        if self.missed[s] >= self.confirm_after and s not in self.confirmed:
+          self.confirmed.add(s)
+          fresh.append(s)
+      else:
+        self.beats[s] += 1
+        self.missed[s] = 0
+    self._stalled.clear()
+    return fresh
+
+  def alive(self) -> list:
+    return [s for s in range(self.shards) if s not in self.confirmed]
+
+  def as_dict(self) -> dict:
+    return dict(shards=self.shards, confirm_after=self.confirm_after,
+                beats=list(self.beats), missed=list(self.missed),
+                lost=sorted(self.lost), confirmed=sorted(self.confirmed))
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,37 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
   return DATA_AXES_MULTI if "pod" in mesh.axis_names else DATA_AXES_SINGLE
 
 
+def survivor_submesh(mesh: Mesh, axis: str, survivors: Sequence[int]):
+  """Mesh over the surviving shard columns of `axis` (degraded-mesh replan).
+
+  A dead shard cannot be excised from a `jax.sharding.Mesh` in place; the
+  serve-path watchdog (`parallel.serve_sharding.ShardHealth`) instead
+  rebuilds a smaller mesh from the survivors' device columns — every other
+  axis keeps its full extent.  Also accepts the duck-typed mesh stand-ins
+  the in-process tests use (anything with `.devices` + `.axis_names`), for
+  which it returns a stand-in of the same shape.
+  """
+  import numpy as np
+  names = tuple(mesh.axis_names)
+  if axis not in names:
+    raise ValueError(f"mesh has no axis {axis!r}; axes: {names}")
+  ax = names.index(axis)
+  devs = np.asarray(mesh.devices)
+  size = devs.shape[ax]
+  surv = sorted(set(int(s) for s in survivors))
+  if not surv or any(s < 0 or s >= size for s in surv):
+    raise ValueError(f"survivors {sorted(set(survivors))} must be a "
+                     f"non-empty subset of range({size}) along {axis!r}")
+  sub = np.take(devs, surv, axis=ax)
+  try:
+    return Mesh(sub, names)
+  except (TypeError, ValueError, KeyError):
+    # mesh stand-ins carry plain ints for devices; mirror their shape
+    import types
+    return types.SimpleNamespace(devices=sub, axis_names=names,
+                                 shape=dict(zip(names, sub.shape)))
+
+
 def _axis_size(mesh_axes: dict, axis) -> int:
   if axis is None:
     return 1

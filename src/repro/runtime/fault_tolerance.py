@@ -79,6 +79,10 @@ FAULT_KINDS = {
     "corrupt-spill": "corrupt_rate",        # host-tier page corruption
     "alloc-exhaustion": "alloc_rate",       # transient device-pool squeeze
     "decode-transient": "decode_rate",      # decode-step soft errors
+    # shard surfaces MUST stay appended after the PR 9 four: _SURFACE_IX is
+    # insertion-order derived and existing seeded draws may not move
+    "shard-loss": "shard_loss_rate",        # mesh shard dies (stops beating)
+    "shard-stall": "shard_stall_rate",      # mesh shard straggles one step
 }
 
 _SURFACE_IX = {name: i + 1 for i, name in enumerate(FAULT_KINDS)}
@@ -88,10 +92,10 @@ _SURFACE_IX = {name: i + 1 for i, name in enumerate(FAULT_KINDS)}
 class FaultPlan:
   """Seeded multi-surface fault schedule for the serve engine.
 
-  Generalizes `FetchFaultInjector` to four surfaces — spill-fetch
-  transfers, host-page corruption, allocator exhaustion spikes, and
-  transient decode-step failures — each drawing from its own private
-  stream keyed on (seed, surface, a, b).  Draws are *order-independent*:
+  Generalizes `FetchFaultInjector` to six surfaces — spill-fetch
+  transfers, host-page corruption, allocator exhaustion spikes, transient
+  decode-step failures, and (PR 10) shard loss/stall on the serve mesh —
+  each drawing from its own private stream keyed on (seed, surface, a, b).  Draws are *order-independent*:
   two runs that hit the surfaces in different orders fault the same
   (request, attempt) / (step, attempt) pairs, which is what makes the
   fault-matrix token-identity property testable at all.  `max_failures`
@@ -102,6 +106,8 @@ class FaultPlan:
   corrupt_rate: float = 0.0
   alloc_rate: float = 0.0
   decode_rate: float = 0.0
+  shard_loss_rate: float = 0.0
+  shard_stall_rate: float = 0.0
   alloc_spike_blocks: int = 2
   seed: int = 0
   max_failures: Optional[int] = None
@@ -145,6 +151,26 @@ class FaultPlan:
     """True when this decode attempt should fail (engine retries with
     backoff; attempts index the retry stream so a retry re-draws)."""
     return self._fires("decode-transient", self.decode_rate, step, attempt)
+
+  def shard_loss(self, step: int, n_shards: int = 1) -> Optional[int]:
+    """Shard index to mark dead at this step, or None.
+
+    Keyed on the step (b=0 selects the fire draw, b=1 the victim draw) so
+    the same mesh steps lose the same shard regardless of traffic order.
+    On a 1-shard/unsharded engine the draw still fires — the engine treats
+    it as a whole-pool loss and recovers every resident request.
+    """
+    if not self._fires("shard-loss", self.shard_loss_rate, step, 0):
+      return None
+    n = max(int(n_shards), 1)
+    return min(int(self._draw("shard-loss", step, 1) * n), n - 1)
+
+  def shard_stall(self, step: int, n_shards: int = 1) -> Optional[int]:
+    """Shard index that straggles (misses one heartbeat) at this step."""
+    if not self._fires("shard-stall", self.shard_stall_rate, step, 0):
+      return None
+    n = max(int(n_shards), 1)
+    return min(int(self._draw("shard-stall", step, 1) * n), n - 1)
 
 
 def make_fault_plan(kind: str, rate: float, seed: int = 0,

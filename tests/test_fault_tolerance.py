@@ -86,9 +86,17 @@ def test_alloc_spike_blocks_plumbed():
 
 def _plan_for(kind, seed=3):
   # corrupt-spill at rate 1.0 would livelock the recompute -> respill ->
-  # corrupt cycle, so bound it; the other surfaces self-limit via retries
+  # corrupt cycle, so bound it; likewise the shard surfaces — on this
+  # single-device engine every confirmed loss is a whole-pool restart, so
+  # an unbounded rate would wipe progress faster than requests can finish
+  # (a stall needs confirm_after=2 consecutive draws per death, hence the
+  # larger budget).  The other surfaces self-limit via retries.
   if kind == "corrupt-spill":
     return ft.make_fault_plan(kind, 1.0, seed=seed, max_failures=2)
+  if kind == "shard-loss":
+    return ft.make_fault_plan(kind, 1.0, seed=seed, max_failures=2)
+  if kind == "shard-stall":
+    return ft.make_fault_plan(kind, 1.0, seed=seed, max_failures=4)
   return ft.make_fault_plan(kind, 0.3, seed=seed)
 
 
@@ -384,3 +392,129 @@ def test_serve_cli_robustness_flags_reach_engine(tmp_path):
   ).fault_kind == "corrupt-spill"
   with pytest.raises(SystemExit):
     serve.make_parser().parse_args(argv + ["--fault-kind", "bogus"])
+
+
+# ---------------------------------------------------------------------------
+# multi-surface fault storm soak (PR 10): every surface armed at once
+# ---------------------------------------------------------------------------
+
+try:
+  from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback shim
+  from hypothesis_compat import given, settings, strategies as st
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["exact", "pq"]),
+       sched=st.sampled_from(["tiered", "slo"]),
+       max_failures=st.integers(2, 6))
+def test_multi_surface_fault_storm_soak(seed, policy, sched, max_failures):
+  """Randomized soak: all six FaultPlan surfaces armed simultaneously at
+  random rates over random policy/scheduler combos.  Whatever the storm
+  does, the engine must end clean: zero leaked blocks on both tiers, every
+  handle terminal (finished, failed, or shed), and the plan's per-surface
+  ledger consistent with its global budget."""
+  import random as _random
+  rng = _random.Random(seed)
+  plan = ft.FaultPlan(seed=seed, max_failures=max_failures,
+                      alloc_spike_blocks=rng.randint(1, 3))
+  for attr in ft.FAULT_KINDS.values():
+    setattr(plan, attr, round(rng.uniform(0.0, 0.6), 3))
+
+  sz = _SIZING[policy]
+  spec = _spec(policy, seed=seed % 100)
+  eng = ServeEngine(
+      _cfg(policy, dtype="bfloat16" if policy == "pq" else "float32"),
+      context_len=sz["context_len"], max_batch=2,
+      prompt_capacity=sz["prompt_capacity"], cache_layout="tiered",
+      scheduler=sched, num_blocks=sz["num_blocks"],
+      host_blocks=sz["host_blocks"], clock=wl.VirtualClock(),
+      slo_enforce=(sched == "slo"), fault_injector=plan)
+  eng.layout.ledger.pcie_gbps = 0.002
+
+  driver = wl.WorkloadDriver(eng, spec)
+  result = driver.run()
+
+  _pool_drained(eng.layout)                       # zero leaks, both tiers
+  # every submitted request reached a terminal state exactly once
+  assert len(result.records) == len(driver.requests)
+  for t in result.records:
+    assert t.finish_s is not None or t.failed or t.shed
+  # the per-surface ledger sums to the global count, inside the budget
+  assert sum(plan.by_surface.values()) == plan.injected
+  assert plan.injected <= max_failures
+  assert set(plan.by_surface) == set(ft.FAULT_KINDS)
+
+
+# ---------------------------------------------------------------------------
+# DegradationController hysteresis
+# ---------------------------------------------------------------------------
+
+def _controller():
+  from repro.launch.engine import DegradationController
+  return DegradationController()
+
+
+def test_degradation_transition_table():
+  """One state at a time, each move gated by SUSTAIN consecutive readings."""
+  c = _controller()
+  assert c.state == "NORMAL"
+  # one pressured reading is not enough (SUSTAIN=2)
+  assert c.observe(0.2, 0) is None
+  assert c.state == "NORMAL"
+  assert c.observe(0.2, 0) == ("NORMAL", "PRESSURED")
+  # shed-level pressure with an empty queue only warrants PRESSURED
+  assert c.observe(0.05, 0) is None
+  assert c.observe(0.05, 0) is None
+  assert c.state == "PRESSURED"
+  # with queued work it escalates — but still one state per SUSTAIN window
+  assert c.observe(0.05, 3) is None
+  assert c.observe(0.05, 3) == ("PRESSURED", "SHEDDING")
+  assert c.state == "SHEDDING"
+  # recovery walks back down one state at a time
+  assert c.observe(0.9, 0) is None
+  assert c.observe(0.9, 0) == ("SHEDDING", "PRESSURED")
+  assert c.observe(0.9, 0) is None
+  assert c.observe(0.9, 0) == ("PRESSURED", "NORMAL")
+
+
+def test_degradation_skips_no_states():
+  """NORMAL under sustained shed-level pressure still passes through
+  PRESSURED — the ladder has no rung-skipping."""
+  c = _controller()
+  transitions = [c.observe(0.01, 5) for _ in range(4)]
+  assert transitions == [None, ("NORMAL", "PRESSURED"),
+                         None, ("PRESSURED", "SHEDDING")]
+
+
+def test_degradation_sustain_resets_on_relief():
+  """A single relieved reading resets the escalation counter: pressure
+  must be *consecutive* to move the state."""
+  c = _controller()
+  assert c.observe(0.2, 0) is None      # up=1
+  assert c.observe(0.9, 0) is None      # relief: counters reset
+  assert c.observe(0.2, 0) is None      # up=1 again, not 2
+  assert c.state == "NORMAL"
+  assert c.observe(0.2, 0) == ("NORMAL", "PRESSURED")
+
+
+def test_degradation_no_flapping_under_oscillation():
+  """Free-frac oscillating across the PRESSURE threshold every step never
+  moves the state: each direction's counter is cleared by the next reading
+  (the hysteresis that keeps one noisy step from toggling shed mode)."""
+  c = _controller()
+  for _ in range(20):
+    assert c.observe(0.2, 2) is None    # wants PRESSURED (up=1, then reset)
+    assert c.observe(0.9, 0) is None    # wants NORMAL (counters clear)
+  assert c.state == "NORMAL"
+
+  # same oscillation starting from SHEDDING: equally stuck
+  c2 = _controller()
+  c2.observe(0.2, 1), c2.observe(0.2, 1)
+  c2.observe(0.05, 1), c2.observe(0.05, 1)
+  assert c2.state == "SHEDDING"
+  for _ in range(20):
+    assert c2.observe(0.05, 1) is None  # wants to stay
+    assert c2.observe(0.9, 0) is None   # wants NORMAL (down=1, then reset)
+  assert c2.state == "SHEDDING"

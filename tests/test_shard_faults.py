@@ -1,0 +1,412 @@
+"""Shard-fault-tolerant mesh serving (PR 10): the health watchdog,
+degraded-mesh re-planning, and replicated KV shard recovery.
+
+Two layers, matching test_sharded_serve.py's split:
+
+- In-process tests cover the pure decision logic — `ShardHealth` heartbeat
+  semantics (loss confirmation, stall escalation), the seeded shard-fault
+  draws on `FaultPlan`, `ShardPlan.replan`'s fallback chain over survivor
+  subsets (on device-carrying mesh stand-ins), and `MirrorRecord` checksum
+  verification.  None of these touch real devices.
+- The acceptance matrix — killing one shard mid-decode on a forced
+  8-host-device mesh and requiring the survivors' greedy tokens to stay
+  bit-identical to the fault-free single-device oracle across
+  {exact, pq} x {heads, seq} x {none, host-mirror}, with zero leaked
+  blocks on both tiers — runs as ONE subprocess with
+  `XLA_FLAGS=--xla_force_host_platform_device_count=8` (device topology
+  freezes at first jax import).
+"""
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import tiers
+from repro.parallel import serve_sharding as ssh
+from repro.parallel import sharding as shd
+from repro.runtime import fault_tolerance as ft
+
+
+# ---------------------------------------------------------------------------
+# ShardHealth: heartbeat rounds, loss confirmation, stall escalation
+# ---------------------------------------------------------------------------
+
+class TestShardHealth:
+
+  def test_healthy_shards_just_beat(self):
+    h = ssh.ShardHealth(3)
+    assert h.record() == []
+    assert h.record() == []
+    assert h.beats == [2, 2, 2] and h.missed == [0, 0, 0]
+    assert h.alive() == [0, 1, 2]
+
+  def test_loss_confirms_after_consecutive_misses(self):
+    h = ssh.ShardHealth(4, confirm_after=2)
+    h.mark_lost(2)
+    assert h.record() == []          # one miss: suspected, not confirmed
+    assert h.missed[2] == 1
+    assert h.record() == [2]         # second consecutive miss confirms
+    assert h.confirmed == {2}
+    assert h.alive() == [0, 1, 3]
+    assert h.record() == []          # already confirmed: never re-reported
+
+  def test_single_stall_recovers(self):
+    h = ssh.ShardHealth(2, confirm_after=2)
+    h.mark_stalled(1)
+    assert h.record() == []
+    assert h.missed[1] == 1
+    assert h.record() == []          # stall cleared: the shard beats again
+    assert h.missed[1] == 0 and h.confirmed == set()
+
+  def test_sustained_stall_escalates_to_death(self):
+    h = ssh.ShardHealth(2, confirm_after=2)
+    h.mark_stalled(0)
+    assert h.record() == []
+    h.mark_stalled(0)
+    assert h.record() == [0]         # straggler held the mesh twice: dead
+    assert h.alive() == [1]
+
+  def test_as_dict_shape(self):
+    h = ssh.ShardHealth(2, confirm_after=3)
+    h.mark_lost(1)
+    h.record()
+    d = h.as_dict()
+    assert d["shards"] == 2 and d["confirm_after"] == 3
+    assert d["beats"] == [1, 0] and d["missed"] == [0, 1]
+    assert d["lost"] == [1] and d["confirmed"] == []
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan shard surfaces: seeded, order-independent, bounded
+# ---------------------------------------------------------------------------
+
+class TestShardFaultDraws:
+
+  def test_draws_deterministic_and_order_independent(self):
+    a = ft.make_fault_plan("shard-loss", 0.4, seed=11)
+    b = ft.make_fault_plan("shard-loss", 0.4, seed=11)
+    steps = list(range(24))
+    fwd = [a.shard_loss(s, 4) for s in steps]
+    rev = [b.shard_loss(s, 4) for s in reversed(steps)]
+    assert fwd == list(reversed(rev))    # same step -> same draw, any order
+    assert any(v is not None for v in fwd)
+    assert all(v in (None, 0, 1, 2, 3) for v in fwd)
+    assert a.injected == sum(v is not None for v in fwd)
+    assert a.by_surface["shard-loss"] == a.injected
+    c = ft.make_fault_plan("shard-loss", 0.4, seed=12)
+    assert [c.shard_loss(s, 4) for s in steps] != fwd
+
+  def test_stall_stream_independent_of_loss(self):
+    solo = ft.make_fault_plan("shard-stall", 0.5, seed=7)
+    both = ft.FaultPlan(shard_loss_rate=0.5, shard_stall_rate=0.5, seed=7)
+    want = [solo.shard_stall(s, 2) for s in range(16)]
+    got = [both.shard_stall(s, 2) for s in range(16)]
+    assert want == got
+    assert both.by_surface["shard-stall"] == sum(v is not None for v in got)
+
+  def test_max_failures_bounds_shard_surfaces(self):
+    plan = ft.FaultPlan(shard_loss_rate=1.0, seed=0, max_failures=2)
+    hits = [plan.shard_loss(s, 4) for s in range(10)]
+    assert sum(v is not None for v in hits) == plan.injected == 2
+
+  def test_single_shard_draw_still_fires(self):
+    # an unsharded engine is "shard 0": the draw must fire (whole-pool
+    # loss), never index out of range
+    plan = ft.make_fault_plan("shard-loss", 1.0, seed=0, max_failures=1)
+    assert plan.shard_loss(0, 1) == 0
+
+  def test_shard_kinds_stay_appended(self):
+    # _SURFACE_IX is insertion-order derived: reordering FAULT_KINDS would
+    # silently reseed every PR 9 surface's draw stream
+    assert list(ft.FAULT_KINDS)[:4] == [
+        "fetch", "corrupt-spill", "alloc-exhaustion", "decode-transient"]
+    assert list(ft.FAULT_KINDS)[4:] == ["shard-loss", "shard-stall"]
+
+
+# ---------------------------------------------------------------------------
+# ShardPlan.replan: the survivor fallback chain
+# ---------------------------------------------------------------------------
+
+def _dev_mesh(data, model):
+  devs = np.arange(data * model).reshape(data, model)
+  return types.SimpleNamespace(devices=devs, axis_names=("data", "model"),
+                               shape={"data": data, "model": model})
+
+
+def _plan(mode, size, kv=4, heads=4, policy="exact", data=1):
+  return ssh.ShardPlan(mesh=_dev_mesh(data, size), mode=mode, size=size,
+                       n_kv_heads=kv, n_heads=heads, policy=policy)
+
+
+class TestReplan:
+
+  def test_heads_over_largest_divisor_subset(self):
+    # 4-way heads loses shard 1: kv=4 has no divisor 3, so the plan takes
+    # heads over the first 2 survivors
+    new = _plan("heads", 4).replan([0, 2, 3])
+    assert new.mode == "heads" and new.size == 2
+    assert new.active and new.bit_identical
+    assert list(np.asarray(new.mesh.devices).ravel()) == [0, 2]
+
+  def test_divisible_survivors_keep_heads(self):
+    new = _plan("heads", 4).replan([0, 1])
+    assert new.mode == "heads" and new.size == 2
+
+  def test_exact_falls_back_to_seq(self):
+    # kv=3 over 2 survivors: no divisor >= 2, exact store splits K instead
+    new = _plan("heads", 4, kv=3, heads=3).replan([1, 3])
+    assert new.mode == "seq" and new.size == 2
+    assert not new.bit_identical
+    assert list(np.asarray(new.mesh.devices).ravel()) == [1, 3]
+
+  def test_compressed_policy_collapses_to_single_device(self):
+    # pq cannot split K (eviction couples to position): last resort is
+    # unsharded serving on the first survivor
+    new = _plan("heads", 4, kv=3, heads=3, policy="pq").replan([1, 3])
+    assert new.mode == "none" and new.size == 1 and not new.active
+
+  def test_sole_survivor_goes_unsharded(self):
+    new = _plan("heads", 2).replan([1])
+    assert new.mode == "none" and new.size == 1
+    assert list(np.asarray(new.mesh.devices).ravel()) == [1]
+
+  def test_survivors_validated(self):
+    with pytest.raises(ValueError):
+      _plan("heads", 4).replan([])
+    with pytest.raises(ValueError):
+      _plan("heads", 4).replan([0, 7])
+
+  def test_survivor_submesh_slices_named_axis(self):
+    mesh = _dev_mesh(2, 4)
+    sub = shd.survivor_submesh(mesh, "model", [0, 2])
+    assert np.asarray(sub.devices).shape == (2, 2)
+    assert list(np.asarray(sub.devices)[0]) == [0, 2]
+    assert dict(sub.shape) == {"data": 2, "model": 2}
+
+
+# ---------------------------------------------------------------------------
+# MirrorRecord: checksum verification
+# ---------------------------------------------------------------------------
+
+class TestMirrorRecord:
+
+  def _record(self):
+    arr = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    enc, nb = tiers.get_codec("raw").encode(arr)
+    return MirrorFixture(arr, tiers.MirrorRecord(
+        slot=0, rid=7, length=5, hwm=5, pairs=[(0, 3), (1, 4)],
+        payloads=[("raw", enc, arr.shape, arr.dtype)],
+        resident_rows=[None],
+        checksums=[tiers.payload_checksum(enc)], nbytes=nb))
+
+  def test_verify_passes_clean(self):
+    self._record().rec.verify()
+
+  def test_verify_detects_bit_flip(self):
+    fx = self._record()
+    fx.rec.payloads[0][1].ravel()[5] += 1.0       # rot one mirror byte
+    with pytest.raises(tiers.SpillPageCorruption, match="slot 0"):
+      fx.rec.verify()
+
+  def test_device_block_ids(self):
+    assert self._record().rec.device_block_ids == [3, 4]
+
+  def test_host_mirror_accounting(self):
+    m = tiers.HostMirror()
+    rec = self._record().rec
+    m.put(rec)
+    assert m.writes == 1 and m.write_bytes == rec.nbytes
+    assert m.resident_bytes == rec.nbytes
+    assert m.get(0) is rec and m.get(1) is None
+    d = m.as_dict()
+    assert d["slots"] == [0] and d["restores"] == 0
+    m.drop(0)
+    assert m.resident_bytes == 0
+
+
+class MirrorFixture:
+  def __init__(self, arr, rec):
+    self.arr, self.rec = arr, rec
+
+
+# ---------------------------------------------------------------------------
+# the acceptance matrix: one subprocess, 8 forced host devices
+# ---------------------------------------------------------------------------
+
+_DRIVER = r'''
+import dataclasses
+import numpy as np
+import jax
+
+from repro.configs import get_arch
+from repro.core import tiers
+from repro.launch.engine import ServeEngine
+from repro.runtime import fault_tolerance as ft
+
+assert len(jax.devices()) == 8, jax.devices()
+
+PARAMS = {}
+PROMPTS = [list(range(2, 30)), list(range(5, 29)), list(range(11, 31))]
+
+
+def build(policy, mesh_model, heads, redundancy="none", plan=None,
+          context_len=128, prompt_capacity=None, num_blocks=None,
+          host_blocks=None):
+  cfg = get_arch("tinyllama-1.1b", reduced=True)
+  cfg = dataclasses.replace(cfg, cache_policy=policy, cache_layout="tiered",
+                            scheduler="tiered", n_heads=heads[0],
+                            n_kv_heads=heads[1])
+  key = (policy, heads)
+  eng = ServeEngine(cfg, context_len=context_len, max_batch=2,
+                    prompt_capacity=prompt_capacity, num_blocks=num_blocks,
+                    host_blocks=host_blocks, params=PARAMS.get(key),
+                    mesh_model=mesh_model, shard_redundancy=redundancy,
+                    fault_injector=plan, shard_confirm_after=2)
+  PARAMS[key] = eng.params
+  return eng
+
+
+def drained(layout):
+  layout.manager.check_invariants()
+  layout.pool.check()
+  assert layout.free_blocks == layout.num_blocks
+  assert layout.pool.allocated_count(tiers.DEVICE) == 0
+  assert layout.pool.allocated_count(tiers.HOST) == 0
+  assert not layout.records
+
+
+def serve(eng, prompts, gen, warm=None, arm=None):
+  hs = [eng.submit(p, max_new_tokens=gen) for p in prompts]
+  if warm:
+    for _ in range(warm):
+      eng.step()
+    assert eng.active_count > 0, "nothing mid-decode at arming time"
+    arm()
+  while eng.has_work:
+    eng.step()
+  assert all(h.done and not h.failed for h in hs), [
+      (h.rid, h.failed) for h in hs]
+  return [h.tokens for h in hs]
+
+
+ORACLE = {}
+
+
+def oracle(policy, heads, gen=8, **kw):
+  key = (policy, heads, gen)
+  if key not in ORACLE:
+    eng = build(policy, 1, heads, **kw)
+    ORACLE[key] = serve(eng, PROMPTS, gen)
+    drained(eng.layout)
+  return ORACLE[key]
+
+
+# -- matrix: kill one shard mid-decode, survivors must match the oracle -----
+LEGS = [  # (policy, mesh_model, heads, expected initial mode)
+    ("exact", 4, (4, 4), "heads"),
+    ("exact", 4, (4, 2), "seq"),
+    ("pq", 4, (4, 4), "heads"),
+    ("pq", 2, (4, 4), "heads"),
+]
+for policy, m, heads, mode in LEGS:
+  ref = oracle(policy, heads)
+  for redundancy in ("none", "host-mirror"):
+    plan = ft.FaultPlan(seed=0)               # armed mid-run
+    eng = build(policy, m, heads, redundancy, plan=plan)
+    assert eng.shard_plan.mode == mode, (eng.shard_plan, mode)
+
+    def arm():
+      plan.shard_loss_rate = 1.0
+      plan.max_failures = plan.injected + 1   # exactly one loss fires
+
+    got = serve(eng, PROMPTS, 8, warm=3, arm=arm)
+    assert got == ref, (policy, m, heads, redundancy, ref, got)
+    drained(eng.layout)
+    st = eng.stats
+    assert st.shard_losses >= 1 and st.shard_replans >= 1, st
+    assert eng.shard_plan.size < m or not eng.shard_plan.active
+    lost_data = mode == "heads"               # seq replicates storage
+    if lost_data:
+      assert st.shard_recovered_requests >= 1, st
+      if redundancy == "host-mirror":
+        assert st.shard_mirror_restores >= 1, st
+      else:
+        assert st.shard_mirror_restores == 0 and st.preempts >= 1, st
+    info = eng.shard_health_info()
+    assert info["redundancy"] == redundancy
+    assert info["losses"] == st.shard_losses
+    assert info["mesh_shards"] == eng.stats.mesh_shards
+    if redundancy == "host-mirror":
+      assert info["mirror"]["writes"] > 0
+    print(f"loss[{policy}/{mode}x{m}/{redundancy}]: ok "
+          f"(replan -> {eng.shard_plan.mode}x{eng.shard_plan.size}, "
+          f"{st.shard_mirror_restores} mirror restores, "
+          f"{st.preempts} recomputes)")
+
+# -- genuinely seeded loss: the draw (not the test) picks step and victim ---
+ref = oracle("exact", (4, 4))
+plan = ft.make_fault_plan("shard-loss", 0.2, seed=3, max_failures=1)
+eng = build("exact", 4, (4, 4), "host-mirror", plan=plan)
+got = serve(eng, PROMPTS, 8)
+assert plan.injected == 1 and eng.stats.shard_losses == 1
+assert got == ref, (ref, got)
+drained(eng.layout)
+print(f"seeded loss: ok (victim {eng.stats.dead_shards})")
+
+# -- sustained stall escalates to a confirmed death -------------------------
+ref = oracle("exact", (4, 4))
+plan = ft.make_fault_plan("shard-stall", 1.0, seed=0, max_failures=4)
+eng = build("exact", 4, (4, 4), "host-mirror", plan=plan)
+got = serve(eng, PROMPTS, 8)
+assert eng.stats.shard_stalls >= 2, eng.stats
+assert eng.stats.shard_losses >= 1, "sustained stall never escalated"
+assert got == ref, (ref, got)
+drained(eng.layout)
+print(f"stall escalation: ok ({eng.stats.shard_stalls} stalls -> "
+      f"{eng.stats.shard_losses} death)")
+
+# -- spilled requests under pressure: pins damaged -> recompute, not abort --
+spill_kw = dict(context_len=64, prompt_capacity=32, num_blocks=5,
+                host_blocks=24)
+spill_prompts = PROMPTS + [list(range(4, 26))]
+ref_eng = build("exact", 1, (4, 4), **spill_kw)
+ref = serve(ref_eng, spill_prompts, 10)
+assert ref_eng.stats.spills > 0, ref_eng.stats
+for redundancy in ("none", "host-mirror"):
+  plan = ft.FaultPlan(seed=0)
+  eng = build("exact", 4, (4, 4), redundancy, plan=plan, **spill_kw)
+
+  def arm():
+    plan.shard_loss_rate = 1.0
+    plan.max_failures = plan.injected + 1
+
+  got = serve(eng, spill_prompts, 10, warm=4, arm=arm)
+  assert got == ref, (redundancy, ref, got)
+  drained(eng.layout)
+  assert eng.stats.shard_losses >= 1
+  print(f"spill+loss[{redundancy}]: ok ({eng.stats.spills} spills, "
+        f"{eng.stats.shard_recovered_requests} recovered)")
+
+print("ALL OK")
+'''
+
+
+def test_shard_fault_matrix_forced_host_devices():
+  """The PR 10 acceptance matrix in one subprocess (device count is fixed
+  at first jax import, so the in-process suite cannot host it)."""
+  root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+  env = dict(os.environ,
+             XLA_FLAGS="--xla_force_host_platform_device_count=8",
+             JAX_PLATFORMS="cpu")
+  env["PYTHONPATH"] = os.pathsep.join(
+      [os.path.join(root, "src")]
+      + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+  proc = subprocess.run([sys.executable, "-c", _DRIVER], env=env,
+                        capture_output=True, text=True, timeout=1500)
+  assert proc.returncode == 0, (
+      f"shard fault driver failed\nstdout:\n{proc.stdout[-4000:]}\n"
+      f"stderr:\n{proc.stderr[-4000:]}")
+  assert "ALL OK" in proc.stdout
